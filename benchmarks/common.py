@@ -1,0 +1,62 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    """Run fn once for compile, then time ``repeat`` runs; returns
+    (result, seconds_per_call)."""
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / repeat
+
+
+def mse(pred, y):
+    return float(jnp.mean((pred - y) ** 2))
+
+
+def rmse(pred, y):
+    return float(jnp.sqrt(jnp.mean((pred - y) ** 2)))
+
+
+def relative_error(pred, y):
+    return float(jnp.mean(jnp.abs(pred - y) / jnp.maximum(jnp.abs(y), 1e-9)))
+
+
+def c_err(pred_logits, labels):
+    if pred_logits.ndim == 1:       # binary with +-1 labels
+        return float(jnp.mean(jnp.sign(pred_logits) != jnp.sign(labels)))
+    return float(jnp.mean(jnp.argmax(pred_logits, -1) != labels))
+
+
+def auc(scores, labels) -> float:
+    """Rank-based AUC; labels in {-1, +1} or {0, 1}."""
+    s = np.asarray(scores).ravel()
+    y = np.asarray(labels).ravel() > 0
+    order = np.argsort(s)
+    ranks = np.empty_like(order, dtype=np.float64)
+    ranks[order] = np.arange(1, len(s) + 1)
+    n_pos = y.sum()
+    n_neg = len(y) - n_pos
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    return float((ranks[y].sum() - n_pos * (n_pos + 1) / 2) / (n_pos * n_neg))
+
+
+def emit(rows: list[dict]):
+    """Print ``name,us_per_call,derived`` CSV rows (benchmarks/run.py
+    contract)."""
+    for r in rows:
+        name = r.pop("name")
+        us = r.pop("us_per_call", "")
+        derived = ";".join(f"{k}={v}" for k, v in r.items())
+        print(f"{name},{us},{derived}")

@@ -1,0 +1,77 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads artifacts/dryrun/*.json and prints one row per (arch x shape x mesh):
+three roofline terms, dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ratio,
+bytes/device and fits-HBM. Markdown table written to artifacts/roofline.md
+(EXPERIMENTS.md SS Roofline embeds it).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_cells() -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def to_markdown(cells: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "bottleneck | useful flops | GB/dev | fits 16GB |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for c in cells:
+        if c.get("status") != "ok":
+            lines.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                         f"ERROR | | | | | | |")
+            continue
+        r = c["roofline"]
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | {r['bottleneck']} "
+            f"| {r['useful_flops_ratio']:.3f} | {c['bytes_per_device_gb']} "
+            f"| {'Y' if c['fits_hbm'] else 'N'} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def run(fast: bool = True):
+    cells = load_cells()
+    rows = []
+    for c in cells:
+        if c.get("status") != "ok":
+            rows.append(dict(name=f"roofline/{c['arch']}/{c['shape']}/"
+                             f"{c['mesh']}", us_per_call="", status="ERROR"))
+            continue
+        r = c["roofline"]
+        dom_us = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6
+        rows.append(dict(
+            name=f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}",
+            us_per_call=round(dom_us, 1),
+            bottleneck=r["bottleneck"],
+            compute_s=f"{r['compute_s']:.3e}",
+            memory_s=f"{r['memory_s']:.3e}",
+            collective_s=f"{r['collective_s']:.3e}",
+            useful_flops_ratio=round(r["useful_flops_ratio"], 3),
+            gb_per_dev=c["bytes_per_device_gb"],
+            fits=c["fits_hbm"]))
+    if cells:
+        out = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                           "roofline.md")
+        with open(out, "w") as f:
+            f.write(to_markdown(cells))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Benchmark harness — one module per paper table + theory/roofline reports.
+
+Prints ``name,us_per_call,derived`` CSV per row.
+Usage: PYTHONPATH=src python -m benchmarks.run [--full] [--only tableX]
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale n (slower); default is CPU-fast")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on module name")
+    args = ap.parse_args()
+
+    from . import (convergence, roofline_report, table1_complexity,
+                   table2_regression, table3_classification)
+    mods = [("table1_complexity", table1_complexity),
+            ("table2_regression", table2_regression),
+            ("table3_classification", table3_classification),
+            ("convergence", convergence),
+            ("roofline_report", roofline_report)]
+    print("name,us_per_call,derived")
+    for name, mod in mods:
+        if args.only and args.only not in name:
+            continue
+        print(f"# --- {name} ---", file=sys.stderr)
+        mod.run(fast=not args.full)
+
+
+if __name__ == '__main__':
+    main()

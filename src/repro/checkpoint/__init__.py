@@ -1,0 +1,2 @@
+from .checkpoint import (latest_step, load_checkpoint, save_checkpoint,
+                         step_dir)

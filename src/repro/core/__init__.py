@@ -1,0 +1,25 @@
+"""FALKON core — the paper's primary contribution as a composable JAX module.
+
+Public API:
+    FalkonConfig, falkon_fit, falkon_solve, FalkonEstimator
+    make_preconditioner, Preconditioner
+    conjugate_gradient
+    select_centers, uniform_centers, leverage_score_centers,
+    approximate_leverage_scores, exact_leverage_scores
+    make_kernel, GaussianKernel, LaplacianKernel, Matern32Kernel,
+    LinearKernel, PolynomialKernel
+    knm_matvec, knm_apply, make_distributed_matvec
+    baselines: krr_direct, krr_gradient, nystrom_direct, nystrom_gradient
+"""
+from .baselines import (krr_direct, krr_gradient, nystrom_direct,
+                        nystrom_gradient)
+from .cg import CGResult, conjugate_gradient
+from .falkon import (FalkonConfig, FalkonEstimator, FalkonState, falkon_fit,
+                     falkon_solve)
+from .kernels import (GaussianKernel, KernelFn, LaplacianKernel, LinearKernel,
+                      Matern32Kernel, PolynomialKernel, make_kernel)
+from .matvec import knm_apply, knm_matvec, make_distributed_matvec
+from .nystrom import (NystromCenters, approximate_leverage_scores,
+                      exact_leverage_scores, leverage_score_centers,
+                      select_centers, uniform_centers)
+from .preconditioner import Preconditioner, make_preconditioner

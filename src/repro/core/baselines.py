@@ -1,0 +1,97 @@
+"""Baselines the paper compares against (Table 1 / Sect. 2).
+
+* ``krr_direct``      — exact KRR, O(n^3) direct solve of (K_nn + lam n I) a = y.
+* ``krr_gradient``    — Eq. (6) gradient iteration on the exact problem.
+* ``nystrom_direct``  — basic Nystrom (Eq. 8), direct solve of H a = z.
+* ``nystrom_gradient``— NYTRO-style [23]: gradient iteration on the Nystrom
+                        problem *without* FALKON's preconditioner (what FALKON's
+                        conditioning analysis beats).
+
+All return a predictor ``f(X) -> yhat`` plus coefficients, and are used by the
+Table 1/2/3 benchmarks and by tests as ground truth.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import KernelFn
+from .matvec import knm_apply, knm_matvec
+
+Array = jax.Array
+
+
+class KernelPredictor(NamedTuple):
+    centers: Array
+    alpha: Array
+    kernel: KernelFn
+
+    def predict(self, X: Array, block_size: int = 2048) -> Array:
+        return knm_apply(X, self.centers, self.alpha, self.kernel,
+                         block_size=block_size)
+
+
+def krr_direct(X: Array, y: Array, kernel: KernelFn, lam: float) -> KernelPredictor:
+    n = X.shape[0]
+    Knn = kernel(X, X)
+    alpha = jnp.linalg.solve(Knn + lam * n * jnp.eye(n, dtype=X.dtype), y)
+    return KernelPredictor(centers=X, alpha=alpha, kernel=kernel)
+
+
+def krr_gradient(X: Array, y: Array, kernel: KernelFn, lam: float,
+                 t: int, tau: float | None = None) -> KernelPredictor:
+    """Eq. (6): a_{k} = a_{k-1} - tau/n [ (K a - y) + lam n a ]."""
+    n = X.shape[0]
+    Knn = kernel(X, X)
+    if tau is None:
+        # ||Knn||/n + lam bounds the operator's largest eigenvalue
+        op_norm = jnp.linalg.norm(Knn, ord=2) / n + lam
+        tau = 1.0 / op_norm
+
+    def step(a, _):
+        grad = (Knn @ a - y) / n + lam * a
+        return a - tau * grad, None
+
+    a, _ = jax.lax.scan(step, jnp.zeros_like(y), None, length=t)
+    return KernelPredictor(centers=X, alpha=a, kernel=kernel)
+
+
+def nystrom_direct(X: Array, y: Array, centers: Array, kernel: KernelFn,
+                   lam: float, jitter: float = 1e-9) -> KernelPredictor:
+    """Eq. (8): (K_nM^T K_nM + lam n K_MM) a = K_nM^T y, dense direct solve."""
+    n = X.shape[0]
+    KnM = kernel(X, centers)
+    KMM = kernel(centers, centers)
+    H = KnM.T @ KnM + lam * n * KMM
+    H = H + jitter * jnp.trace(H) / H.shape[0] * jnp.eye(H.shape[0], dtype=X.dtype)
+    z = KnM.T @ y
+    # LU, not Cholesky: H has a large dynamic range and fp32 chol can fail
+    # even though H is PSD in exact arithmetic.
+    alpha = jnp.linalg.solve(H, z)
+    return KernelPredictor(centers=centers, alpha=alpha, kernel=kernel)
+
+
+def nystrom_gradient(X: Array, y: Array, centers: Array, kernel: KernelFn,
+                     lam: float, t: int, block_size: int = 2048) -> KernelPredictor:
+    """NYTRO-like: plain gradient descent on the (unpreconditioned) Nystrom
+    objective. Needs O(cond(H)) iterations — the gap FALKON closes."""
+    n = X.shape[0]
+    M = centers.shape[0]
+    KMM = kernel(centers, centers)
+    # crude step size from H's norm upper bound
+    KnM_norm_sq = knm_matvec(X, centers, jnp.ones((M,), X.dtype) / M, None,
+                             kernel, block_size=block_size)
+    op_bound = jnp.linalg.norm(KnM_norm_sq) * M / n + lam * jnp.linalg.norm(KMM, ord=2)
+    tau = 1.0 / jnp.maximum(op_bound, 1e-30)
+
+    def step(a, _):
+        Ha = knm_matvec(X, centers, a, None, kernel, block_size=block_size) / n \
+            + lam * (KMM @ a)
+        z = knm_matvec(X, centers, jnp.zeros_like(a), y, kernel,
+                       block_size=block_size) / n
+        return a - tau * (Ha - z), None
+
+    a, _ = jax.lax.scan(step, jnp.zeros((M,) + y.shape[1:], X.dtype), None, length=t)
+    return KernelPredictor(centers=centers, alpha=a, kernel=kernel)

@@ -1,0 +1,214 @@
+"""FALKON solver (paper Alg. 1 / Alg. 2) — composable JAX module.
+
+Single-device path mirrors Alg. 1 line by line; the distributed path shards the
+data sweep over the mesh data axes (see matvec.py) — the preconditioner and the
+(q,)-sized CG state are replicated (they are O(M^2)/O(M), the paper's memory
+budget).
+
+The solve is fully jittable: ``falkon_solve`` is a pure function of
+(X, y, centers, preconditioner) so it can be lowered/compiled for the dry-run
+like any train_step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .cg import CGResult, conjugate_gradient
+from .kernels import KernelFn, make_kernel
+from .matvec import knm_apply, knm_matvec, make_distributed_matvec
+from .nystrom import NystromCenters, select_centers
+from .preconditioner import Preconditioner, make_preconditioner
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FalkonConfig:
+    kernel: str = "gaussian"
+    kernel_params: tuple = (("sigma", 1.0),)
+    lam: float = 1e-6
+    num_centers: int = 1024
+    iterations: int = 20
+    center_selection: str = "uniform"      # "uniform" | "leverage"
+    pilot_size: int = 256                  # leverage-score pilot subset
+    block_size: int = 2048
+    jitter: float | None = None
+    rank_deficient: bool = False
+    matvec_impl: str = "jnp"               # "jnp" | "pallas"
+    tol: float = 0.0
+    dtype: str = "float32"
+
+    def make_kernel(self) -> KernelFn:
+        return make_kernel(self.kernel, **dict(self.kernel_params))
+
+
+class FalkonState(NamedTuple):
+    """Everything needed to run / resume the iterative solve."""
+    centers: Array
+    precond: Preconditioner
+    beta: Array
+    alpha: Array
+    residual_norms: Array
+    cond_estimate: Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FalkonEstimator:
+    centers: Array
+    alpha: Array
+    kernel: KernelFn
+    block_size: int = dataclasses.field(metadata=dict(static=True), default=2048)
+
+    def predict(self, X: Array) -> Array:
+        return knm_apply(X, self.centers, self.alpha, self.kernel,
+                         block_size=self.block_size)
+
+    def __call__(self, X: Array) -> Array:
+        return self.predict(X)
+
+
+# ----------------------------------------------------------------------------
+# Pure solve (jittable)
+# ----------------------------------------------------------------------------
+def _falkon_operator(
+    matvec: Callable,
+    precond: Preconditioner,
+    lam: float,
+    n: int,
+) -> Callable[[Array], Array]:
+    """W(u) = B^T H B u via Alg. 1's nested-solve composition.
+
+    W u = left( KnM^T(KnM gamma)/n ) + lam * A^{-T} A^{-1} u,
+    gamma = right(u). The lam-term uses the T^{-T} Q^T D K_MM D Q T^{-1} = I
+    identity (Lemma 2 / Eq. 19), exactly as the MATLAB code does.
+    """
+    from jax.scipy.linalg import solve_triangular
+
+    def W(u: Array) -> Array:
+        gamma = precond.right(u)
+        w = matvec(gamma) / n                     # K_nM^T K_nM gamma / n
+        out = precond.left(w)
+        Ainv_u = solve_triangular(precond.A, u, lower=False)
+        out = out + lam * solve_triangular(precond.A, Ainv_u, lower=False, trans=1)
+        return out
+
+    return W
+
+
+def falkon_solve(
+    X: Array,
+    y: Array,
+    centers: Array,
+    precond: Preconditioner,
+    kernel: KernelFn,
+    lam: float,
+    t: int,
+    *,
+    block_size: int = 2048,
+    matvec_impl: str = "jnp",
+    tol: float = 0.0,
+    dist_matvec: Callable | None = None,
+    estimate_cond: bool = True,
+) -> FalkonState:
+    """Run t preconditioned-CG iterations; return coefficients + diagnostics."""
+    n = X.shape[0]
+
+    if dist_matvec is None:
+        def matvec(g):
+            return knm_matvec(X, centers, g, None, kernel,
+                              block_size=block_size, impl=matvec_impl)
+        def rhs_sweep():
+            zeros = jnp.zeros((centers.shape[0],) + y.shape[1:], X.dtype)
+            return knm_matvec(X, centers, zeros, y, kernel,
+                              block_size=block_size, impl=matvec_impl)
+    else:
+        zeros_u = jnp.zeros((centers.shape[0],) + y.shape[1:], X.dtype)
+        matvec = lambda g: dist_matvec(X, centers, g, jnp.zeros_like(y))
+        rhs_sweep = lambda: dist_matvec(X, centers, zeros_u, y)
+
+    W = _falkon_operator(matvec, precond, lam, n)
+    b = precond.left(rhs_sweep() / n)             # r = B^T z / n (Alg. 1)
+
+    cg = conjugate_gradient(W, b, t, tol=tol)
+    alpha = precond.coeffs(cg.x)
+
+    if not estimate_cond:
+        return FalkonState(centers=centers, precond=precond, beta=cg.x,
+                           alpha=alpha, residual_norms=cg.residual_norms,
+                           cond_estimate=jnp.zeros((), X.dtype))
+
+    # Power-iteration estimate of cond(W) — cheap diagnostic for Thm 2.
+    def power(mv, q, iters=12):
+        v = jnp.ones((q,), b.dtype) / jnp.sqrt(q)
+        def step(v, _):
+            w = mv(v)
+            return w / jnp.maximum(jnp.linalg.norm(w), 1e-30), None
+        v, _ = jax.lax.scan(step, v, None, length=iters)
+        return jnp.vdot(v, mv(v))
+
+    q = precond.q
+    lam_max = power(lambda v: W(v.reshape((q,) + (1,) * (b.ndim - 1))).reshape(q), q)
+    lam_min = lam_max - power(
+        lambda v: lam_max * v - W(v.reshape((q,) + (1,) * (b.ndim - 1))).reshape(q), q
+    )
+    cond = jnp.abs(lam_max) / jnp.maximum(jnp.abs(lam_min), 1e-30)
+
+    return FalkonState(centers=centers, precond=precond, beta=cg.x, alpha=alpha,
+                       residual_norms=cg.residual_norms, cond_estimate=cond)
+
+
+# ----------------------------------------------------------------------------
+# User-facing fit
+# ----------------------------------------------------------------------------
+def falkon_fit(
+    key: Array,
+    X: Array,
+    y: Array,
+    config: FalkonConfig,
+    *,
+    mesh: Mesh | None = None,
+    data_axes: tuple[str, ...] = ("data",),
+) -> tuple[FalkonEstimator, FalkonState]:
+    """Select centers, build the preconditioner, run the solve.
+
+    With ``mesh`` given, X/y are swept shard-locally over ``data_axes`` and
+    reduced with one psum per CG iteration (see DESIGN.md §6).
+    """
+    kernel = config.make_kernel()
+    dt = jnp.dtype(config.dtype)
+    X = X.astype(dt)
+    y = y.astype(dt)
+    n = X.shape[0]
+    M = min(config.num_centers, n)
+
+    sel = select_centers(key, X, M, kernel=kernel, lam=config.lam,
+                         scheme=config.center_selection,
+                         pilot_size=config.pilot_size)
+    KMM = kernel(sel.centers, sel.centers)
+    precond = make_preconditioner(
+        KMM, config.lam, n, D=sel.D, jitter=config.jitter,
+        rank_deficient=config.rank_deficient,
+    )
+
+    dist = None
+    if mesh is not None:
+        dist = make_distributed_matvec(mesh, data_axes, kernel,
+                                       block_size=config.block_size,
+                                       impl=config.matvec_impl)
+
+    state = falkon_solve(
+        X, y, sel.centers, precond, kernel, config.lam, config.iterations,
+        block_size=config.block_size, matvec_impl=config.matvec_impl,
+        tol=config.tol, dist_matvec=dist,
+    )
+    est = FalkonEstimator(centers=sel.centers, alpha=state.alpha, kernel=kernel,
+                          block_size=config.block_size)
+    return est, state

@@ -1,0 +1,125 @@
+"""FALKON preconditioner (paper Sect. 3 Eq. 13 and Appendix A Def. 3).
+
+Full-rank path (Alg. 1):
+    T = chol(K_MM + eps*M*I)        (upper triangular, K_MM = T^T T)
+    A = chol(T T^T / M + lam * I)   (upper triangular)
+    B = (1/sqrt(n)) T^{-1} A^{-1}
+
+General path (Alg. 2 / Def. 3) adds the sampling-weight diagonal D (Def. 2, for
+approximate-leverage-score sampling) and a rank-revealing step for singular
+K_MM. We implement the eigendecomposition variant of Example 2 (simpler than
+pivoted QR and jittable):
+    D K_MM D = Q diag(s) Q^T,  T = diag(sqrt(s)) restricted to s > tol,
+with Q (M, q) a partial isometry. T diagonal is a valid special case of
+"triangular"; all Def. 3 needs is invertibility and Q T^T T Q^T = D K_MM D.
+
+B is never materialized: we expose the linear maps FALKON needs (the B^T H B
+composition happens in falkon.py), exactly like Alg. 1's nested triangular
+solves.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
+
+Array = jax.Array
+
+
+def _bcast(d: Array, v: Array) -> Array:
+    return d[(...,) + (None,) * (v.ndim - 1)]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Preconditioner:
+    T: Array            # (q, q) upper triangular (diagonal in the eig path)
+    A: Array            # (q, q) upper triangular
+    Q: Array | None     # (M, q) partial isometry; None => identity (full rank)
+    D: Array | None     # (M,) sampling-weight diagonal; None => ones
+    n: Array            # number of training points (scalar)
+    diag_T: bool = dataclasses.field(metadata=dict(static=True), default=False)
+
+    @property
+    def q(self) -> int:
+        return self.T.shape[0]
+
+    def _solve_T(self, v: Array, trans: bool = False) -> Array:
+        if self.diag_T:
+            return v / _bcast(jnp.diagonal(self.T), v)
+        return solve_triangular(self.T, v, lower=False, trans=1 if trans else 0)
+
+    # --- the three maps -------------------------------------------------
+    def right(self, u: Array) -> Array:
+        """gamma = D Q T^{-1} A^{-1} u : (q,...) -> (M,...).
+
+        This is sqrt(n) * B u; the 1/sqrt(n) is folded into the matvec's 1/n
+        exactly as Alg. 1 does.
+        """
+        v = solve_triangular(self.A, u, lower=False)
+        v = self._solve_T(v)
+        if self.Q is not None:
+            v = self.Q @ v
+        if self.D is not None:
+            v = v * _bcast(self.D, v)
+        return v
+
+    def left(self, w: Array) -> Array:
+        """A^{-T} T^{-T} Q^T D w : (M,...) -> (q,...)."""
+        if self.D is not None:
+            w = w * _bcast(self.D, w)
+        if self.Q is not None:
+            w = self.Q.T @ w
+        w = self._solve_T(w, trans=True)
+        return solve_triangular(self.A, w, lower=False, trans=1)
+
+    def coeffs(self, beta: Array) -> Array:
+        """alpha = D Q T^{-1} A^{-1} beta (Alg. 1's ``alpha = T\\(A\\beta)``)."""
+        return self.right(beta)
+
+
+def make_preconditioner(
+    KMM: Array,
+    lam: float,
+    n: int,
+    *,
+    D: Array | None = None,
+    jitter: float | None = None,
+    rank_deficient: bool = False,
+    rank_tol: float = 1e-7,
+) -> Preconditioner:
+    """Build the FALKON preconditioner from K_MM.
+
+    Cost: 2 Cholesky factorizations + one triangular product = 4/3 M^3 flops
+    (paper Sect. 3 "Computations"). ``D`` is the Def. 2 diagonal for
+    leverage-score sampling (None for uniform sampling).
+    """
+    M = KMM.shape[0]
+    dt = KMM.dtype
+    if D is not None:
+        KMM = KMM * D[:, None] * D[None, :]
+
+    if rank_deficient:
+        # Appendix A Example 2 (eigendecomposition). Static shapes: rank-q
+        # truncation is expressed by zeroing the dropped columns of Q and
+        # guarding the inverses, so q == M structurally.
+        s, U = jnp.linalg.eigh(KMM)                       # ascending
+        s = s[::-1]
+        U = U[:, ::-1]
+        keep = s > (rank_tol * jnp.maximum(s[0], 1e-30))
+        s_safe = jnp.where(keep, s, 1.0)
+        T = jnp.diag(jnp.sqrt(s_safe))
+        Q = U * keep[None, :].astype(dt)
+        A = jnp.linalg.cholesky(
+            jnp.diag(jnp.where(keep, s_safe, 0.0)) / M + lam * jnp.eye(M, dtype=dt)
+        ).T
+        return Preconditioner(T=T, A=A, Q=Q, D=D, n=jnp.asarray(n, dt),
+                              diag_T=True)
+
+    eps = jitter if jitter is not None else float(jnp.finfo(dt).eps) * M
+    T = jnp.linalg.cholesky(KMM + eps * jnp.eye(M, dtype=dt)).T   # upper
+    A = jnp.linalg.cholesky(T @ T.T / M + lam * jnp.eye(M, dtype=dt)).T
+    return Preconditioner(T=T, A=A, Q=None, D=D, n=jnp.asarray(n, dt),
+                          diag_T=False)

@@ -1,0 +1,3 @@
+from .pipeline import ShardedLoader
+from .synthetic import (PAPER_TASKS, KernelTask, TokenStreamConfig,
+                        make_kernel_dataset, token_stream)

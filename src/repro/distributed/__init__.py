@@ -1,0 +1,1 @@
+from .mesh import AxisRules, current_rules, data_axes, lshard, use_rules

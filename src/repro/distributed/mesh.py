@@ -1,0 +1,142 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+Model code annotates tensors with *logical* axis names ("batch", "heads",
+"ff", ...). The rules engine maps each logical axis to mesh axes, checking
+divisibility of the actual dim against the mesh axis size and *degrading to
+replication* when it does not divide (e.g. gemma3-1b's 4 query heads on a
+16-way model axis). This is what makes one model codebase serve all 10
+assigned architectures on the production mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+# logical axis -> candidate mesh axes, tried in order; tuple entries mean
+# "shard over the product of these axes" (e.g. batch over pod+data).
+DEFAULT_RULES: dict[str, tuple] = {
+    "batch":    (("pod", "data"), ("data",)),
+    "fsdp":     (("pod", "data"), ("data",)),  # param dims when cfg.fsdp
+    "heads":    (("model",),),
+    "kv_heads": (("model",),),
+    "ff":       (("model",),),
+    "experts":  (("model",),),
+    "vocab":    (("model",),),
+    "embed":    (),                      # replicated (FSDP overrides below)
+    "seq":      (),                      # replicated in training activations
+    "kv_seq":   (("model",),),           # decode cache seq (flash-decoding)
+    "cache_seq": (("data", "model"), ("model",),),  # long-context cache
+    # capacity dim: when the expert dim itself can't shard (e.g. 40 experts
+    # on a 16-way model axis) the capacity dim absorbs the model axis too.
+    "expert_cap": (("pod", "data", "model"), ("data", "model"),
+                   ("pod", "data"), ("data",)),
+    "conv":     (),
+    "state":    (),
+}
+
+# FSDP mode additionally shards "embed"-tagged *parameter* dims over data
+# (activations never get it: their batch dim claims the data axes first).
+FSDP_EXTRA: dict[str, tuple] = {
+    "embed": (("pod", "data"), ("data",)),
+}
+
+# Resolution priority: lower resolves first (greedy mesh-axis allocation).
+_PRIORITY = {
+    "batch": 0,
+    "heads": 1, "kv_heads": 1, "ff": 1, "experts": 1, "vocab": 1,
+    "kv_seq": 2, "cache_seq": 2, "expert_cap": 2,
+    "fsdp": 3,
+    "embed": 4,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    mesh: Mesh | None
+    rules: dict[str, tuple] = dataclasses.field(default_factory=lambda: dict(DEFAULT_RULES))
+    fsdp: bool = False
+
+    def axis_size(self, names: Sequence[str]) -> int:
+        s = 1
+        for nm in names:
+            s *= self.mesh.shape[nm]
+        return s
+
+    def spec_for(self, dims: Sequence[int], axes: Sequence[str | None]) -> P:
+        """Resolve logical axes to a PartitionSpec.
+
+        Dims resolve in priority order (model-parallel dims before fallback
+        dims) with greedy mesh-axis allocation; a dim that does not divide the
+        mesh extent is replicated — the divisibility fallback."""
+        if self.mesh is None:
+            return P()
+        assert len(dims) == len(axes), (dims, axes)
+        rules = dict(self.rules)
+        if self.fsdp:
+            for k, v in FSDP_EXTRA.items():
+                rules[k] = v + rules.get(k, ())
+        order = sorted(range(len(dims)),
+                       key=lambda i: _PRIORITY.get(axes[i] or "", 9))
+        used: set[str] = set()
+        out: list = [None] * len(dims)
+        for i in order:
+            dim, name = dims[i], axes[i]
+            if name is None:
+                continue
+            if name in ("fsdp",) and not self.fsdp:
+                continue
+            for cand in rules.get(name, ()):
+                cand = tuple(a for a in cand if a in self.mesh.shape)
+                if not cand or any(a in used for a in cand):
+                    continue
+                if dim % self.axis_size(cand) == 0:
+                    used.update(cand)
+                    out[i] = cand if len(cand) > 1 else cand[0]
+                    break
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def sharding_for(self, dims, axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(dims, axes))
+
+
+_local = threading.local()
+
+
+def current_rules() -> AxisRules:
+    return getattr(_local, "rules", AxisRules(mesh=None))
+
+
+@contextlib.contextmanager
+def use_rules(rules: AxisRules):
+    prev = getattr(_local, "rules", None)
+    _local.rules = rules
+    try:
+        yield rules
+    finally:
+        if prev is None:
+            del _local.rules
+        else:
+            _local.rules = prev
+
+
+def lshard(x: Array, axes: Sequence[str | None]) -> Array:
+    """Annotate x with logical axes; no-op when no mesh rules are active."""
+    rules = current_rules()
+    if rules.mesh is None:
+        return x
+    spec = rules.spec_for(x.shape, axes)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

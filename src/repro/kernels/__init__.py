@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (the K_nM sweeps).
+
+kernel_matvec.py — pl.pallas_call kernels (BlockSpec VMEM tiling)
+ops.py           — jit'd wrappers (interpret=True off-TPU)
+ref.py           — pure-jnp oracles
+"""
+from .ops import fused_knm_matvec, kernel_matmul, pairwise_kernel

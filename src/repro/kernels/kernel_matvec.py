@@ -1,0 +1,161 @@
+"""Pallas TPU kernels for FALKON's O(nMt) hot loop.
+
+The primitive is a *kernel matmul*: ``out = K(A, B) @ V`` with the Gram tile
+``K(A_i, B_j)`` computed on the fly in VMEM (pairwise squared distances via one
+MXU matmul ``-2 A_i B_j^T`` plus row/col norms on the VPU, then the kernel's
+elementwise map) and immediately contracted against ``V_j`` on the MXU. The
+(bm x bn) Gram tile never touches HBM — this is the paper's "compute K_nM in
+blocks" insight mapped onto the HBM->VMEM->MXU hierarchy.
+
+A full FALKON sweep ``w = K_nM^T (K_nM u + v)`` is two kernel matmuls
+(K(X,C) @ u then K(C,X) @ t, using K^T(X,C) = K(C,X)) — see ops.py.
+
+Grid: (i over A-tiles, j over B-tiles), j minor. The output block (indexed by
+i only) is revisited across j and accumulated in a fp32 VMEM scratch,
+initialised at j == 0 and flushed at j == last — the standard Pallas reduction
+pattern. Tile sizes default to (256, 512) rows — multiples of the 128-wide MXU
+systolic dimensions; the wrapper pads every operand to tile multiples (zero
+rows of B are harmless: their kernel value is masked via a validity mask).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+LANE = 128  # MXU/VREG lane width — last-dim tile alignment
+
+
+def _kernel_elementwise(sq, kind: str, scale: float):
+    if kind == "gaussian":
+        return jnp.exp(-0.5 / (scale * scale) * sq)
+    if kind == "laplacian":
+        return jnp.exp(-jnp.sqrt(sq + 1e-12) / scale)
+    if kind == "matern32":
+        a = jnp.sqrt(3.0) * jnp.sqrt(sq + 1e-12) / scale
+        return (1.0 + a) * jnp.exp(-a)
+    raise ValueError(f"pallas path does not support kernel {kind!r}")
+
+
+def _kernel_matmul_kernel(a_ref, b_ref, v_ref, bmask_ref, o_ref, acc_ref, *,
+                          kind: str, scale: float, nbj: int):
+    """One (i, j) grid step: acc_i += K(A_i, B_j) @ V_j."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.float32)           # (bm, d)
+    b = b_ref[...].astype(jnp.float32)           # (bn, d)
+    v = v_ref[...].astype(jnp.float32)           # (bn, p)
+    bmask = bmask_ref[...].astype(jnp.float32)   # (1, bn) 1=valid row of B
+
+    a2 = jnp.sum(a * a, axis=-1, keepdims=True)               # (bm, 1) VPU
+    b2 = jnp.sum(b * b, axis=-1, keepdims=True).T             # (1, bn) VPU
+    ab = jax.lax.dot_general(                                  # (bm, bn) MXU
+        a, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    sq = jnp.maximum(a2 + b2 - 2.0 * ab, 0.0)
+    k = _kernel_elementwise(sq, kind, scale) * bmask           # mask padded B
+    acc_ref[...] += jax.lax.dot_general(                       # (bm, p) MXU
+        k, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(j == nbj - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def kernel_matmul_pallas(
+    A: Array, B: Array, V: Array, *,
+    kind: str = "gaussian", scale: float = 1.0,
+    block_m: int = 256, block_n: int = 512,
+    interpret: bool = True,
+) -> Array:
+    """out = K(A, B) @ V with on-the-fly Gram tiles.
+
+    A: (m, d), B: (n, d), V: (n, p) -> (m, p). All shapes may be ragged; the
+    wrapper pads to tile multiples and masks padded B rows. ``interpret=True``
+    runs the kernel body in Python (CPU validation); on TPU pass False.
+    """
+    m, d = A.shape
+    n, _ = B.shape
+    p = V.shape[1]
+    out_dtype = jnp.promote_types(A.dtype, V.dtype)
+
+    bm = min(block_m, max(8, m))
+    bn = min(block_n, max(8, n))
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    dp = -(-d // LANE) * LANE
+    pp = -(-p // LANE) * LANE
+
+    Ap = jnp.pad(A, ((0, mp - m), (0, dp - d)))
+    Bp = jnp.pad(B, ((0, np_ - n), (0, dp - d)))
+    Vp = jnp.pad(V, ((0, np_ - n), (0, pp - p)))
+    bmask = (jnp.arange(np_) < n).astype(A.dtype)[None, :]     # (1, np_)
+
+    nbi, nbj = mp // bm, np_ // bn
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    out = pl.pallas_call(
+        functools.partial(_kernel_matmul_kernel, kind=kind, scale=scale,
+                          nbj=nbj),
+        grid=(nbi, nbj),
+        in_specs=[
+            pl.BlockSpec((bm, dp), lambda i, j: (i, 0)),      # A_i
+            pl.BlockSpec((bn, dp), lambda i, j: (j, 0)),      # B_j
+            pl.BlockSpec((bn, pp), lambda i, j: (j, 0)),      # V_j
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),       # mask_j
+        ],
+        out_specs=pl.BlockSpec((bm, pp), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, pp), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, pp), jnp.float32)],   # fp32 accum
+        interpret=interpret,
+    )(Ap, Bp, Vp, bmask)
+    return out[:m, :p]
+
+
+def _pairwise_kernel(a_ref, b_ref, o_ref, *, kind: str, scale: float):
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    a2 = jnp.sum(a * a, axis=-1, keepdims=True)
+    b2 = jnp.sum(b * b, axis=-1, keepdims=True).T
+    ab = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    sq = jnp.maximum(a2 + b2 - 2.0 * ab, 0.0)
+    o_ref[...] = _kernel_elementwise(sq, kind, scale).astype(o_ref.dtype)
+
+
+def pairwise_kernel_pallas(
+    A: Array, B: Array, *, kind: str = "gaussian", scale: float = 1.0,
+    block_m: int = 256, block_n: int = 256, interpret: bool = True,
+) -> Array:
+    """Materialize K(A, B) tile-by-tile (used to build K_MM for the
+    preconditioner). Grid (i, j) with one output tile per step."""
+    m, d = A.shape
+    n, _ = B.shape
+    bm = min(block_m, max(8, m))
+    bn = min(block_n, max(8, n))
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    dp = -(-d // LANE) * LANE
+    Ap = jnp.pad(A, ((0, mp - m), (0, dp - d)))
+    Bp = jnp.pad(B, ((0, np_ - n), (0, dp - d)))
+
+    out = pl.pallas_call(
+        functools.partial(_pairwise_kernel, kind=kind, scale=scale),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, dp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, dp), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), A.dtype),
+        interpret=interpret,
+    )(Ap, Bp)
+    return out[:m, :n]

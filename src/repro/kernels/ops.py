@@ -1,0 +1,73 @@
+"""jit'd wrappers around the Pallas kernels, with jnp fallback.
+
+``fused_knm_matvec`` is the drop-in replacement for
+``repro.core.matvec.knm_matvec`` (selected via FalkonConfig.matvec_impl =
+"pallas"): one FALKON CG sweep ``w = K_nM^T (K_nM u + v)`` as two kernel
+matmuls. On non-TPU backends the kernels run in interpret mode (Python
+emulation — correctness only); on TPU they compile to Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel_matvec import kernel_matmul_pallas, pairwise_kernel_pallas
+
+Array = jax.Array
+
+_SUPPORTED = ("gaussian", "laplacian", "matern32")
+
+
+def _kernel_kind_scale(kernel) -> tuple[str, float]:
+    name = type(kernel).__name__.lower()
+    for kind in _SUPPORTED:
+        if kind.replace("32", "") in name or kind in name:
+            return kind, float(getattr(kernel, "sigma"))
+    raise ValueError(
+        f"pallas matvec supports {_SUPPORTED}, got {type(kernel).__name__}; "
+        "use matvec_impl='jnp'")
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fused_knm_matvec(
+    X: Array, C: Array, u: Array, v: Array | None, kernel, *,
+    block_size: int = 2048,
+) -> Array:
+    """w = K(X,C)^T (K(X,C) u + v), Gram tiles VMEM-resident only."""
+    kind, scale = _kernel_kind_scale(kernel)
+    squeeze = u.ndim == 1
+    u2 = u[:, None] if squeeze else u
+    t = kernel_matmul_pallas(X, C, u2, kind=kind, scale=scale,
+                             block_m=min(block_size, 256),
+                             interpret=_interpret())
+    if v is not None:
+        t = t + (v[:, None] if squeeze else v)
+    w = kernel_matmul_pallas(C, X, t, kind=kind, scale=scale,
+                             block_m=min(block_size, 256),
+                             interpret=_interpret())
+    return w[:, 0] if squeeze else w
+
+
+def kernel_matmul(A: Array, B: Array, V: Array, kernel, *,
+                  block_m: int = 256, block_n: int = 512) -> Array:
+    kind, scale = _kernel_kind_scale(kernel)
+    squeeze = V.ndim == 1
+    V2 = V[:, None] if squeeze else V
+    out = kernel_matmul_pallas(A, B, V2, kind=kind, scale=scale,
+                               block_m=block_m, block_n=block_n,
+                               interpret=_interpret())
+    return out[:, 0] if squeeze else out
+
+
+def pairwise_kernel(A: Array, B: Array, kernel, *,
+                    block_m: int = 256, block_n: int = 256) -> Array:
+    """K(A, B) materialized (preconditioner's K_MM builder)."""
+    kind, scale = _kernel_kind_scale(kernel)
+    return pairwise_kernel_pallas(A, B, kind=kind, scale=scale,
+                                  block_m=block_m, block_n=block_n,
+                                  interpret=_interpret())

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _sqdist(A: Array, B: Array) -> Array:
+    a2 = jnp.sum(A * A, axis=-1, keepdims=True)
+    b2 = jnp.sum(B * B, axis=-1, keepdims=True).T
+    return jnp.maximum(a2 + b2 - 2.0 * (A @ B.T), 0.0)
+
+
+def kernel_tile(A: Array, B: Array, kind: str, scale: float) -> Array:
+    """K(A, B) for the kernels the Pallas path supports."""
+    sq = _sqdist(A, B)
+    if kind == "gaussian":
+        return jnp.exp(-0.5 / (scale * scale) * sq)
+    if kind == "laplacian":
+        return jnp.exp(-jnp.sqrt(sq + 1e-12) / scale)
+    if kind == "matern32":
+        a = jnp.sqrt(3.0) * jnp.sqrt(sq + 1e-12) / scale
+        return (1.0 + a) * jnp.exp(-a)
+    raise ValueError(kind)
+
+
+def kernel_matmul_ref(A: Array, B: Array, V: Array, kind: str,
+                      scale: float) -> Array:
+    """out = K(A, B) @ V  — the primitive both FALKON sweeps reduce to."""
+    return kernel_tile(A, B, kind, scale) @ V
+
+
+def fused_knm_matvec_ref(X: Array, C: Array, u: Array, v: Array | None,
+                         kind: str, scale: float) -> Array:
+    """w = K(X,C)^T (K(X,C) u + v) — one full FALKON CG sweep."""
+    K = kernel_tile(X, C, kind, scale)
+    t = K @ u if v is None else K @ u + v
+    return K.T @ t
+
+
+def pairwise_kernel_ref(A: Array, B: Array, kind: str, scale: float) -> Array:
+    return kernel_tile(A, B, kind, scale)

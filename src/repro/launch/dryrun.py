@@ -1,0 +1,283 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input shape) cell and each mesh (single-pod 16x16,
+multi-pod 2x16x16):
+    lowered  = jax.jit(step, in_shardings=...).lower(**input_specs(...))
+    compiled = lowered.compile()
+    print(compiled.memory_analysis())   # proves the cell fits (or not)
+    print(compiled.cost_analysis())     # FLOPs/bytes for the roofline
+plus the collective-bytes parse for EXPERIMENTS.md SS Roofline.
+
+Results are cached as JSON under artifacts/dryrun/ so cells can be run
+incrementally:  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b
+[--shape train_4k] [--mesh single|multi|both] [--all]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import SHAPES, input_specs
+from repro.distributed.mesh import AxisRules, use_rules
+from repro.launch.mesh import make_production_mesh
+from repro.models import cache_pspecs, cache_specs
+from repro.roofline.analysis import (analytic_memory, decode_model_flops,
+                                     derive_roofline, memory_report,
+                                     train_model_flops)
+from repro.train.steps import (TrainConfig, batch_pspecs, make_serve_step,
+                               make_train_step, train_state_pspecs,
+                               train_state_structs)
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, *,
+             overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    cell = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    rules = AxisRules(mesh=mesh, fsdp=cfg.fsdp)
+    specs = input_specs(cfg, shape)
+    t0 = time.time()
+
+    with mesh, use_rules(rules):
+        if cell.kind in ("train", "prefill"):
+            # grad accumulation down to ~1 batch row per data shard keeps
+            # per-microbatch activation memory inside the 16 GB v5e budget
+            # (global batch and math unchanged; extra param re-reads show up
+            # in the memory roofline term, traded back in SS Perf).
+            dp = 32 if multi_pod else 16
+            mb = max(1, cell.global_batch // dp)
+            tcfg = TrainConfig(microbatch=mb)
+            if cell.kind == "train":
+                state_structs = train_state_structs(cfg, tcfg)
+                state_specs = train_state_pspecs(cfg, tcfg, rules)
+                step = make_train_step(
+                    cfg, tcfg,
+                    grad_shardings=_named(mesh, state_specs.params))
+                b_specs = batch_pspecs(cfg, specs, rules)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(_named(mesh, state_specs),
+                                  _named(mesh, b_specs)),
+                    donate_argnums=(0,))
+                lowered = jitted.lower(state_structs, specs)
+                tokens = cell.global_batch * cell.seq_len
+                model_flops = train_model_flops(cfg, tokens)
+            else:  # prefill: forward-only loss-less pass building a cache
+                from repro.models import prefill as prefill_fn
+                from repro.models import model_param_structs
+                from repro.models.model import model_param_pspecs
+                p_structs = model_param_structs(cfg)
+                p_specs = model_param_pspecs(cfg, rules)
+                pre_specs = {k: v for k, v in specs.items() if k != "labels"}
+                b_specs = batch_pspecs(cfg, pre_specs, rules)
+                fn = lambda params, batch: prefill_fn(params, cfg, batch,
+                                                      S_max=cell.seq_len)
+                jitted = jax.jit(fn, in_shardings=(_named(mesh, p_specs),
+                                                   _named(mesh, b_specs)))
+                lowered = jitted.lower(p_structs, pre_specs)
+                tokens = cell.global_batch * cell.seq_len
+                n_act = cfg.param_count(active_only=bool(cfg.n_experts))
+                model_flops = 2.0 * n_act * tokens
+        else:  # decode
+            from repro.models import model_param_structs
+            from repro.models.model import model_param_pspecs
+            B, S_max = cell.global_batch, cell.seq_len
+            p_structs = model_param_structs(cfg)
+            p_specs = model_param_pspecs(cfg, rules)
+            c_structs = cache_specs(cfg, B, S_max)
+            c_specs = cache_pspecs(cfg, B, S_max, rules)
+            b_specs = batch_pspecs(cfg, specs, rules)
+            step = make_serve_step(cfg)
+            jitted = jax.jit(step,
+                             in_shardings=(_named(mesh, p_specs),
+                                           _named(mesh, c_specs),
+                                           _named(mesh, b_specs)),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(p_structs, c_structs, specs)
+            model_flops = decode_model_flops(cfg, B, S_max)
+
+        compiled = lowered.compile()
+        mem = memory_report(compiled)
+        print(compiled.memory_analysis())     # proves it fits (or not)
+        cost = dict(compiled.cost_analysis())
+        print({k: v for k, v in cost.items()
+               if k in ("flops", "bytes accessed")})
+        roof = derive_roofline(compiled, chips=chips, model_flops=model_flops)
+
+    hbm = 16e9  # v5e per-chip HBM
+    result = {
+        "arch": arch, "shape": shape,
+        "microbatch": (cell.global_batch // (32 if multi_pod else 16))
+        if cell.kind == "train" else 0,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "kind": cell.kind,
+        "compile_s": round(time.time() - t0, 1),
+        "memory": mem,
+        "analytic_memory_gb": analytic_memory(
+            cfg, cell, rules,
+            microbatch=(cell.global_batch // (32 if multi_pod else 16))
+            if cell.kind == "train" else 1),
+        "fits_hbm": mem["total_per_device"] < hbm,
+        "bytes_per_device_gb": round(mem["total_per_device"] / 1e9, 3),
+        "roofline": roof.as_dict(),
+        "status": "ok",
+    }
+    return result
+
+
+FALKON_N, FALKON_D, FALKON_M, FALKON_T = 134_217_728, 90, 16_384, 20
+
+
+def run_falkon_cell(multi_pod: bool, *, block_size: int = 8192,
+                    impl: str = "jnp", full_mesh_data: bool = False) -> dict:
+    """Dry-run the paper's own solver on the production mesh: n=2M, d=90
+    (MillionSongs-like), M=16384 centers, t=20 CG iterations, X/y sharded
+    over the data axes, preconditioner replicated."""
+    import jax.numpy as jnp
+    from repro.core import GaussianKernel, falkon_solve, make_distributed_matvec
+    from repro.core.preconditioner import Preconditioner
+    from repro.distributed.mesh import data_axes
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    kern = GaussianKernel(sigma=6.0)
+    n, d, M, t = FALKON_N, FALKON_D, FALKON_M, FALKON_T
+    f32 = jnp.float32
+    t0 = time.time()
+
+    with mesh:
+        # SS Perf iteration 2: the CG sweep is embarrassingly data-parallel,
+        # so flatten the WHOLE mesh (incl. the idle "model" axis) into the
+        # data sweep — 256/512-way instead of 16/32-way.
+        dp = data_axes(mesh) + ("model",) if full_mesh_data else data_axes(mesh)
+        dmv = make_distributed_matvec(mesh, dp, kern, block_size=block_size,
+                                      impl=impl)
+
+        def solve(X, y, C, T, A):
+            pre = Preconditioner(T=T, A=A, Q=None, D=None,
+                                 n=jnp.asarray(n, f32), diag_T=False)
+            st = falkon_solve(X, y, C, pre, kern, 1e-6, t,
+                              block_size=block_size, dist_matvec=dmv,
+                              estimate_cond=False)
+            return st.alpha
+
+        Xs = jax.ShapeDtypeStruct((n, d), f32)
+        ys = jax.ShapeDtypeStruct((n,), f32)
+        Cs = jax.ShapeDtypeStruct((M, d), f32)
+        Ts = jax.ShapeDtypeStruct((M, M), f32)
+        sh = lambda spec: NamedSharding(mesh, spec)
+        lowered = jax.jit(solve, in_shardings=(
+            sh(P(dp)), sh(P(dp)), sh(P()), sh(P()), sh(P()))).lower(
+            Xs, ys, Cs, Ts, Ts)
+        compiled = lowered.compile()
+        mem = memory_report(compiled)
+        print(compiled.memory_analysis())
+        # paper flop count: (t+2) sweeps x 2 kernel matmuls x 2nMd
+        model_flops = (t + 2) * 4.0 * n * M * d
+        roof = derive_roofline(compiled, chips=chips, model_flops=model_flops)
+
+    return {
+        "arch": "falkon-solver", "shape": f"n{n>>20}M_M{M}_t{t}",
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "kind": "solve", "compile_s": round(time.time() - t0, 1),
+        "memory": mem, "fits_hbm": mem["total_per_device"] < 16e9,
+        "bytes_per_device_gb": round(mem["total_per_device"] / 1e9, 3),
+        "block_size": block_size, "impl": impl,
+        "roofline": roof.as_dict(), "status": "ok",
+    }
+
+
+def cell_path(arch, shape, multi_pod):
+    os.makedirs(ART_DIR, exist_ok=True)
+    mesh = "multi" if multi_pod else "single"
+    return os.path.join(ART_DIR, f"{arch}__{shape}__{mesh}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS) + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--falkon", action="store_true",
+                    help="run the FALKON-solver cells only")
+    args = ap.parse_args()
+
+    if args.falkon:
+        import os as _os
+        full = _os.environ.get("FALKON_FULL_MESH", "0") == "1"
+        bs = int(_os.environ.get("FALKON_BLOCK", "8192"))
+        for mp in {"single": [False], "multi": [True],
+                   "both": [False, True]}[args.mesh]:
+            res = run_falkon_cell(mp, full_mesh_data=full, block_size=bs)
+            path = cell_path("falkon-solver", "solve", mp)
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            print(f"falkon cell ({res['mesh']}): "
+                  f"{res['bytes_per_device_gb']} GB/dev, "
+                  f"bottleneck={res['roofline']['bottleneck']}")
+        return
+
+    archs = list(ARCH_IDS) if (args.all or args.arch is None) else [args.arch]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([args.shape] if args.shape else cfg.runnable_shapes())
+        for shape in shapes:
+            if shape in cfg.skip_shapes:
+                print(f"SKIP {arch} x {shape} (per DESIGN.md SS5)")
+                continue
+            for mp in meshes:
+                path = cell_path(arch, shape, mp)
+                if os.path.exists(path) and not args.force:
+                    print(f"cached {path}")
+                    continue
+                tag = f"{arch} x {shape} x {'multi' if mp else 'single'}"
+                print(f"=== dry-run {tag} ===", flush=True)
+                try:
+                    res = run_cell(arch, shape, mp)
+                    print(f"    ok: {res['bytes_per_device_gb']} GB/dev, "
+                          f"bottleneck={res['roofline']['bottleneck']}")
+                except Exception as e:
+                    traceback.print_exc()
+                    res = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "status": "error", "error": repr(e)}
+                    failures.append(tag)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,524 @@
+"""Layers for the 10 assigned architectures.
+
+Everything is functional: ``<layer>_pd(cfg)`` builds the parameter-descriptor
+tree, ``<layer>_apply(params, x, ...)`` the computation. Sharding is expressed
+with logical-axis annotations (``lshard``) resolved by the AxisRules engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.distributed.mesh import lshard
+from .params import PD
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Norms & activations
+# ---------------------------------------------------------------------------
+def rms_norm(x: Array, scale: Array, eps: float) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def _act(name: str, gate: Array, up: Array) -> Array:
+    if name == "swiglu":
+        return jax.nn.silu(gate) * up
+    if name == "geglu":
+        return jax.nn.gelu(gate) * up
+    if name == "gelu":
+        return jax.nn.gelu(up)
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, dh) or (B, S, dh); positions: (S,)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[:, None].astype(jnp.float32) * freqs            # (S, half)
+    ang = ang[None, :, None, :] if x.ndim == 4 else ang[None, :, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+def mlp_pd(cfg: ModelConfig) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": PD((D, F), ("embed", "ff")),
+        "w_up": PD((D, F), ("embed", "ff")),
+        "w_down": PD((F, D), ("ff", "embed")),
+    }
+
+
+def mlp_apply(p: dict, x: Array, cfg: ModelConfig) -> Array:
+    h = _act(cfg.act, x @ p["w_gate"], x @ p["w_up"])
+    h = lshard(h, ("batch", None, "ff"))
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-k, capacity-dropped, scatter dispatch)
+# ---------------------------------------------------------------------------
+def moe_pd(cfg: ModelConfig) -> dict:
+    # expert dim padded to a shardable multiple (e.g. granite's 40 -> 48 on a
+    # 16-way model axis); padded experts are masked out of the router.
+    D, E, Fe = cfg.d_model, cfg.padded_experts, cfg.d_expert
+    return {
+        "router": PD((D, E), ("embed", "experts"), scale=0.02),
+        "w_gate": PD((E, D, Fe), ("experts", "embed", None)),
+        "w_up": PD((E, D, Fe), ("experts", "embed", None)),
+        "w_down": PD((E, Fe, D), ("experts", None, "embed")),
+    }
+
+
+def moe_apply(p: dict, x: Array, cfg: ModelConfig) -> Array:
+    """Token-dropping top-k MoE.
+
+    Two paths:
+    * shard_map expert parallelism (training/prefill on a mesh with a model
+      axis): tokens resharded (batch->data, seq->model), local dispatch,
+      explicit all_to_all to make experts local, local expert matmuls,
+      all_to_all back, local combine. Measured SS Perf 4.2: the GSPMD
+      scatter fallback all-reduces the full (E*C, D) buffer per layer per
+      microbatch (10.5 TB/step/device on jamba-398B); the a2a moves only
+      the dispatched tokens.
+    * local jnp fallback (single device, tiny token counts, decode S==1):
+      cumsum positions + scatter-add.
+    """
+    from repro.distributed.mesh import current_rules
+    rules = current_rules()
+    mesh = rules.mesh
+    if mesh is not None and "model" in mesh.shape:
+        mp = mesh.shape["model"]
+        dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        dp_size = 1
+        for a in dp:
+            dp_size *= mesh.shape[a]
+        B, S, D = x.shape
+        if S % mp == 0 and B % dp_size == 0 and S // mp >= 1 and S > 1:
+            return _moe_sharded(p, x, cfg, mesh, mp, dp)
+    return _moe_local(p, x, cfg)
+
+
+def _moe_sharded(p: dict, x: Array, cfg: ModelConfig, mesh, mp: int,
+                 dp: tuple) -> Array:
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    E, K = cfg.padded_experts, cfg.top_k
+    E_loc = E // mp
+
+    def local(x_loc, router, wg, wu, wd):
+        # x_loc: (B_loc, S_loc, D); router replicated; w*: (E_loc, ...)
+        Bl, Sl, D = x_loc.shape
+        T = Bl * Sl
+        C = max(1, int(-(-T * K * cfg.capacity_factor // cfg.n_experts)))
+        xf = x_loc.reshape(T, D)
+        logits = (xf @ router).astype(jnp.float32)
+        if E != cfg.n_experts:
+            logits = jnp.where(jnp.arange(E)[None, :] >= cfg.n_experts,
+                               -1e30, logits)
+        gate, eidx = jax.lax.top_k(jax.nn.softmax(logits, -1), K)
+        gate = (gate / jnp.sum(gate, -1, keepdims=True)).astype(x_loc.dtype)
+        e_flat = eidx.reshape(-1)
+        onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)
+        pos = jnp.take_along_axis(jnp.cumsum(onehot, 0) - onehot,
+                                  e_flat[:, None], axis=1)[:, 0]
+        keep = pos < C
+        slot = jnp.where(keep, e_flat * C + pos, E * C)
+        x_rep = jnp.repeat(xf, K, axis=0)
+        buf = jnp.zeros((E * C + 1, D), x_loc.dtype).at[slot].add(
+            x_rep * keep[:, None].astype(x_loc.dtype))
+        xe = buf[:-1].reshape(E, C, D)
+        # expert all-to-all: (E, C, D) -> (E_loc, mp*C, D). Expert ids are
+        # shard-major (expert = j*E_loc + e_loc, matching P("model") weight
+        # sharding). split==concat==0 (symmetric) — the asymmetric form has
+        # a broken VJP cotangent layout in jax 0.8.
+        xe = jax.lax.all_to_all(xe.reshape(mp, E_loc, C, D), "model", 0, 0,
+                                tiled=False)          # (src_shard, E_loc, C, D)
+        xe = xe.transpose(1, 0, 2, 3).reshape(E_loc, mp * C, D)
+        h = _act(cfg.act, jnp.einsum("ecd,edf->ecf", xe, wg),
+                 jnp.einsum("ecd,edf->ecf", xe, wu))
+        ye = jnp.einsum("ecf,efd->ecd", h, wd)       # (E_loc, mp*C, D)
+        # inverse all-to-all: back to the (E, C, D) source-local layout
+        ye = ye.reshape(E_loc, mp, C, D).transpose(1, 0, 2, 3)
+        ye = jax.lax.all_to_all(ye, "model", 0, 0, tiled=False)
+        ye = ye.reshape(E * C, D)                     # (mp*E_loc, C, D) flat
+        y_tok = jnp.where(keep[:, None], ye[jnp.minimum(slot, E * C - 1)], 0.0)
+        y = (y_tok.reshape(T, K, D) * gate[..., None]).sum(axis=1)
+        return y.reshape(Bl, Sl, D)
+
+    xspec = P(dp, "model", None)
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(xspec, P(), P("model"), P("model"), P("model")),
+        out_specs=xspec, check_rep=False,
+    )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+
+
+def _moe_local(p: dict, x: Array, cfg: ModelConfig) -> Array:
+    B, S, D = x.shape
+    E, K, Fe = cfg.padded_experts, cfg.top_k, cfg.d_expert
+    T = B * S
+    C = max(1, int(T * K / cfg.n_experts * cfg.capacity_factor))
+
+    xf = x.reshape(T, D)
+    logits = (xf @ p["router"]).astype(jnp.float32)          # (T, E_pad)
+    if E != cfg.n_experts:   # mask padded experts out of the routing
+        logits = jnp.where(jnp.arange(E)[None, :] >= cfg.n_experts, -1e30,
+                           logits)
+    probs = jax.nn.softmax(logits, -1)
+    gate, eidx = jax.lax.top_k(probs, K)                     # (T, K)
+    gate = (gate / jnp.sum(gate, -1, keepdims=True)).astype(x.dtype)
+
+    e_flat = eidx.reshape(-1)                                # (T*K,)
+    # position of each assignment within its expert (priority: token order)
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)      # (T*K, E)
+    pos = (jnp.cumsum(onehot, axis=0) - onehot)              # count before me
+    pos = jnp.take_along_axis(pos, e_flat[:, None], axis=1)[:, 0]
+    keep = pos < C
+    slot = jnp.where(keep, e_flat * C + pos, E * C)          # overflow -> pad
+
+    x_rep = jnp.repeat(xf, K, axis=0)                        # (T*K, D)
+    buf = jnp.zeros((E * C + 1, D), x.dtype).at[slot].add(
+        x_rep * keep[:, None].astype(x.dtype))
+    xe = buf[:-1].reshape(E, C, D)
+    xe = lshard(xe, ("experts", "expert_cap", None))
+
+    h = _act(cfg.act,
+             jnp.einsum("ecd,edf->ecf", xe, p["w_gate"]),
+             jnp.einsum("ecd,edf->ecf", xe, p["w_up"]))
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    ye = lshard(ye, ("experts", "expert_cap", None))
+
+    yf = ye.reshape(E * C, D)
+    y_tok = jnp.where(keep[:, None], yf[jnp.minimum(slot, E * C - 1)], 0.0)
+    y = (y_tok.reshape(T, K, D) * gate[..., None]).sum(axis=1)
+    return y.reshape(B, S, D)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / sliding / cross) with chunked online-softmax option
+# ---------------------------------------------------------------------------
+def attn_pd(cfg: ModelConfig, cross: bool = False) -> dict:
+    D, Hkv, dh = cfg.d_model, cfg.n_kv_heads, cfg.d_head
+    Hq = cfg.padded_heads     # dummy heads masked in attn_apply (SS Perf #2)
+    kv_in = cfg.d_model if not cross else cfg.d_model   # vision proj upstream
+    p = {
+        "wq": PD((D, Hq, dh), ("embed", "heads", None)),
+        "wk": PD((kv_in, Hkv, dh), ("embed", "kv_heads", None)),
+        "wv": PD((kv_in, Hkv, dh), ("embed", "kv_heads", None)),
+        "wo": PD((Hq, dh, D), ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = PD((Hq, dh), ("heads", None), "zeros")
+        p["bk"] = PD((Hkv, dh), ("kv_heads", None), "zeros")
+        p["bv"] = PD((Hkv, dh), ("kv_heads", None), "zeros")
+    if cross:
+        p["q_norm"] = PD((dh,), (None,), "ones")
+        p["k_norm"] = PD((dh,), (None,), "ones")
+        p["gate"] = PD((1,), (None,), "zeros")   # zero-init cross gate
+    return p
+
+
+def _mask(si: Array, sj: Array, causal: bool, window: int) -> Array:
+    """si: query positions (Sq,), sj: key positions (Sk,) -> bool (Sq, Sk)."""
+    m = jnp.ones((si.shape[0], sj.shape[0]), bool)
+    if causal:
+        m &= sj[None, :] <= si[:, None]
+    if window > 0:
+        m &= sj[None, :] > si[:, None] - window
+    return m
+
+
+def _masked_write(cache: Array, new: Array, idx) -> Array:
+    """cache: (B, Smax, ...), new: (B, 1, ...): write at position idx via an
+    elementwise select over the (possibly sharded) seq dim."""
+    Smax = cache.shape[1]
+    mask = (jnp.arange(Smax) == idx)
+    mask = mask.reshape((1, Smax) + (1,) * (cache.ndim - 2))
+    return jnp.where(mask, new.astype(cache.dtype), cache)
+
+
+def _block_write(cache: Array, new: Array) -> Array:
+    """Write a length-S block at position 0 (prefill). S == Smax short-cuts
+    to the block itself; otherwise pad + select (no DUS on sharded dims)."""
+    Smax, S = cache.shape[1], new.shape[1]
+    if S == Smax:
+        return new.astype(cache.dtype)
+    pad = [(0, 0), (0, Smax - S)] + [(0, 0)] * (cache.ndim - 2)
+    newp = jnp.pad(new.astype(cache.dtype), pad)
+    mask = (jnp.arange(Smax) < S).reshape((1, Smax) + (1,) * (cache.ndim - 2))
+    return jnp.where(mask, newp, cache)
+
+
+def _expand_kv(k: Array, groups: int) -> Array:
+    """(B,S,Hkv,dh) -> (B,S,Hq,dh). Flat heads shard cleanly over the model
+    axis (a (Hkv, G) grouped layout would need Hkv % model == 0)."""
+    return jnp.repeat(k, groups, axis=2) if groups > 1 else k
+
+
+def _sdpa(q: Array, k: Array, v: Array, mask: Array | None) -> Array:
+    """q: (B,Sq,H,dh), k/v: (B,Sk,H,dh) -> (B,Sq,H,dh)."""
+    dh = q.shape[-1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(dh)
+    if mask is not None:
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def _chunked_sdpa(q: Array, k: Array, v: Array, q_pos: Array, k_pos: Array,
+                  causal: bool, window: int, chunk: int,
+                  q_block: int = 2048) -> Array:
+    """Online-softmax attention: q processed in blocks (lax.map, rematted),
+    kv scanned in chunks. Peak score tensor: (B, H, q_block, chunk) — capped
+    even for archs whose few heads cannot shard over the model axis."""
+    B, Sq, H, dh = q.shape
+    if Sq > q_block and Sq % q_block == 0:
+        nq = Sq // q_block
+        qb = q.reshape(B, nq, q_block, H, dh).transpose(1, 0, 2, 3, 4)
+        pb = q_pos.reshape(nq, q_block)
+
+        def one(args):
+            qi, pi = args
+            return _chunked_sdpa_core(qi, k, v, pi, k_pos, causal, window,
+                                      chunk)
+
+        out = jax.lax.map(jax.checkpoint(one), (qb, pb))
+        return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, v.shape[-1])
+    return _chunked_sdpa_core(q, k, v, q_pos, k_pos, causal, window, chunk)
+
+
+def _chunked_sdpa_core(q: Array, k: Array, v: Array, q_pos: Array,
+                       k_pos: Array, causal: bool, window: int,
+                       chunk: int) -> Array:
+    """KV-chunk online-softmax scan. q: (B,Sq,H,dh), k/v: (B,Sk,H,dh|dv)."""
+    B, Sq, H, dh = q.shape
+    dv = v.shape[-1]
+    Sk = k.shape[1]
+    nc = -(-Sk // chunk)
+    pad = nc * chunk - Sk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kpos = jnp.pad(k_pos, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+    kc = kp.reshape(B, nc, chunk, H, dh).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(B, nc, chunk, H, dv).transpose(1, 0, 2, 3, 4)
+    pc = kpos.reshape(nc, chunk)
+    scale = 1.0 / jnp.sqrt(dh)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, pb = inp
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kb).astype(jnp.float32) * scale
+        msk = _mask(q_pos, pb, causal, window) & (pb[None, :] < Sk)
+        s = jnp.where(msk[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, -1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, -1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vb).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, dv), jnp.float32)
+    # checkpointed body: the (B,H,Sq,chunk) score tensor is recomputed in
+    # bwd instead of being saved per scan step (flash-attention-style memory)
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0),
+                                  (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)        # (B,Sq,H,dv)
+
+
+def attn_apply(p: dict, x: Array, cfg: ModelConfig, spec: LayerSpec, *,
+               positions: Array, kv_x: Array | None = None,
+               cache: dict | None = None, pos_scalar: Array | None = None):
+    """Returns (out, new_cache).
+
+    Modes:
+    * train / prefill: ``cache is None`` — full-sequence attention (dense or
+      chunked online-softmax above cfg.dense_attn_max_seq).
+    * decode: x is (B, 1, D); ``cache`` holds k/v at capacity S_max and
+      ``pos_scalar`` is the write index. Cross layers reuse the static image
+      kv held in the cache.
+    ``positions``: (Sq,) absolute positions of the query tokens.
+    """
+    B, Sq, D = x.shape
+    Hkv, dh = cfg.n_kv_heads, cfg.d_head
+    Hq = cfg.padded_heads
+    G = Hq // Hkv
+    cross = spec.kind == "cross"
+    window = cfg.sliding_window if spec.kind == "sliding" else 0
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+
+    if cross:
+        if cache is not None and kv_x is None:
+            k, v = cache["k"], cache["v"]          # static image kv
+            new_cache = cache
+        else:
+            k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"])
+            new_cache = {"k": k, "v": v}
+        if "q_norm" in p:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+        q = lshard(q, ("batch", None, "heads", None))
+        o = _sdpa(q, _expand_kv(k, G), _expand_kv(v, G), None)
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        if "bk" in p:
+            k, v = k + p["bk"], v + p["bv"]
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)     # new tokens only
+        q = lshard(q, ("batch", None, "heads", None))
+
+        if cache is not None and Sq > 1:
+            # prefill: write the whole kv block at 0, attend over fresh kv
+            new_cache = {"k": _block_write(cache["k"], k),
+                         "v": _block_write(cache["v"], v)}
+            kf, vf = _expand_kv(k, G), _expand_kv(v, G)
+            if Sq <= cfg.dense_attn_max_seq:
+                o = _sdpa(q, kf, vf, _mask(positions, positions, True, window))
+            else:
+                o = _chunked_sdpa(q, kf, vf, positions, positions, True,
+                                  window, cfg.attn_chunk)
+        elif cache is not None:
+            # decode: write new kv at pos_scalar, attend over the cache.
+            # masked elementwise write — a dynamic-update-slice at a traced
+            # index on the sharded seq dim would make GSPMD all-gather the
+            # whole cache; the select keeps it fully sharded.
+            idx = pos_scalar
+            kc = _masked_write(cache["k"], k, idx)
+            vc = _masked_write(cache["v"], v, idx)
+            new_cache = {"k": kc, "v": vc}
+            kc = lshard(kc, ("batch", "kv_seq", "kv_heads", None))
+            vc = lshard(vc, ("batch", "kv_seq", "kv_heads", None))
+            Smax = kc.shape[1]
+            k_pos = jnp.arange(Smax)
+            valid = k_pos <= idx
+            if window > 0:
+                valid &= k_pos > idx - window
+            # grouped-q form: contract each kv head against its G q-heads
+            qg = q.reshape(B, Sq, Hkv, G, dh)
+            s = jnp.einsum("bqngd,bknd->bngqk", qg, kc).astype(jnp.float32)
+            s = s / jnp.sqrt(dh)
+            s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+            w = jax.nn.softmax(s, -1).astype(x.dtype)
+            o = jnp.einsum("bngqk,bknd->bqngd", w, vc)
+        else:
+            new_cache = None
+            kf, vf = _expand_kv(k, G), _expand_kv(v, G)
+            if Sq <= cfg.dense_attn_max_seq:
+                o = _sdpa(q, kf, vf, _mask(positions, positions, True, window))
+            else:
+                o = _chunked_sdpa(q, kf, vf, positions, positions, True,
+                                  window, cfg.attn_chunk)
+
+    o = o.reshape(B, Sq, Hq, dh)
+    if Hq != cfg.n_heads:   # zero dummy-head outputs: exact true-head model
+        o = o * (jnp.arange(Hq) < cfg.n_heads)[None, None, :, None
+                                               ].astype(o.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if cross and "gate" in p:
+        out = out * jnp.tanh(p["gate"])
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (MiniCPM3 / DeepSeek-style latent attention)
+# ---------------------------------------------------------------------------
+def mla_pd(cfg: ModelConfig) -> dict:
+    D, H = cfg.d_model, cfg.padded_heads
+    r_q, r_kv = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rp, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq_a": PD((D, r_q), ("embed", None)),
+        "q_a_norm": PD((r_q,), (None,), "ones"),
+        "wq_b": PD((r_q, H, nope + rp), (None, "heads", None)),
+        "w_dkv": PD((D, r_kv), ("embed", None)),
+        "kv_a_norm": PD((r_kv,), (None,), "ones"),
+        "w_krope": PD((D, rp), ("embed", None)),
+        "w_uk": PD((r_kv, H, nope), (None, "heads", None)),
+        "w_uv": PD((r_kv, H, vd), (None, "heads", None)),
+        "wo": PD((H, vd, D), ("heads", None, "embed")),
+    }
+
+
+def mla_apply(p: dict, x: Array, cfg: ModelConfig, *, positions: Array,
+              cache: dict | None = None, pos_scalar: Array | None = None):
+    B, Sq, D = x.shape
+    H = cfg.padded_heads
+    nope, rp, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+
+    qa = rms_norm(x @ p["wq_a"], p["q_a_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", qa, p["wq_b"])            # (B,S,H,nope+rp)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    c_kv = rms_norm(x @ p["w_dkv"], p["kv_a_norm"], cfg.norm_eps)  # (B,S,r_kv)
+    k_rope = x @ p["w_krope"]                                  # (B,S,rp)
+
+    if cache is None or Sq > 1:
+        q_rope = rope(q_rope, positions, cfg.rope_theta)
+        k_rope = rope(k_rope, positions, cfg.rope_theta)
+        new_cache = None
+        if cache is not None:   # prefill: store compressed kv at position 0
+            new_cache = {"c_kv": _block_write(cache["c_kv"], c_kv),
+                         "k_rope": _block_write(cache["k_rope"], k_rope)}
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"])
+        v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"])
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None], (B, Sq, H, rp))], -1)
+        qfull = jnp.concatenate([q_nope, q_rope], -1)
+        if Sq <= cfg.dense_attn_max_seq:
+            o = _sdpa(qfull, k, v, _mask(positions, positions, True, 0))
+        else:
+            o = _chunked_sdpa(qfull, k, v, positions, positions, True, 0,
+                              cfg.attn_chunk)
+    else:
+        # absorbed decode: score in the latent space (B,S,r_kv) — the MLA
+        # cache is the compressed c_kv + shared k_rope, O(S*(r_kv+rp)) memory.
+        idx = pos_scalar
+        q_rope = rope(q_rope, idx[None], cfg.rope_theta)
+        k_rope = rope(k_rope, idx[None], cfg.rope_theta)
+        ckv_c = _masked_write(cache["c_kv"], c_kv, idx)
+        krope_c = _masked_write(cache["k_rope"], k_rope, idx)
+        new_cache = {"c_kv": ckv_c, "k_rope": krope_c}
+        Smax = ckv_c.shape[1]
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])  # absorb W_uk
+        s = (jnp.einsum("bshr,btr->bhst", q_lat, ckv_c) +
+             jnp.einsum("bshk,btk->bhst", q_rope, krope_c)).astype(jnp.float32)
+        s = s / jnp.sqrt(nope + rp)
+        valid = jnp.arange(Smax) <= idx
+        s = jnp.where(valid[None, None, None, :], s, -1e30)
+        w = jax.nn.softmax(s, -1).astype(x.dtype)
+        o_lat = jnp.einsum("bhst,btr->bshr", w, ckv_c)           # (B,1,H,r_kv)
+        o = jnp.einsum("bshr,rhk->bshk", o_lat, p["w_uv"])       # absorb W_uv
+
+    if H != cfg.n_heads:    # zero dummy-head outputs (head padding)
+        o = o * (jnp.arange(H) < cfg.n_heads)[None, None, :, None
+                                              ].astype(o.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, new_cache

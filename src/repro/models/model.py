@@ -1,0 +1,365 @@
+"""Model assembly: period-scan layer stacking, loss, prefill/decode.
+
+Heterogeneous layer patterns (jamba's 1-attn:7-mamba, gemma3's 5-local:1-global,
+llama-vision's every-5th-cross) are expressed as the smallest repeating
+*period*: params for one period are stacked over n_periods and applied with
+``lax.scan`` — one traced period body regardless of depth, which is what keeps
+the 80–100-layer dry-run HLO small. The non-periodic tail (e.g. gemma3-1b's
+last 2 layers) is applied unrolled.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.distributed.mesh import lshard
+from . import layers as L
+from . import ssm as S
+from .params import PD, init_params, param_pspecs, param_shape_structs, stack_pds
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Period decomposition
+# ---------------------------------------------------------------------------
+def split_periods(pattern: tuple[LayerSpec, ...]):
+    """-> (period, n_periods, tail). Smallest p with pattern = period*k + tail
+    and tail a prefix of the period; k maximal."""
+    Lp = len(pattern)
+    for p in range(1, Lp + 1):
+        k = Lp // p
+        period = pattern[:p]
+        if period * k == pattern[:p * k] and \
+                pattern[p * k:] == period[:Lp - p * k]:
+            if k >= 1:
+                return period, k, pattern[p * k:]
+    return pattern, 1, ()
+
+
+# ---------------------------------------------------------------------------
+# Per-layer param descriptors / apply
+# ---------------------------------------------------------------------------
+def layer_pd(cfg: ModelConfig, spec: LayerSpec) -> dict:
+    D = cfg.d_model
+    d: dict[str, Any] = {"ln1": PD((D,), ("embed",), "ones")}
+    if spec.kind == "mamba":
+        d["mixer"] = S.ssm_pd(cfg)
+    elif spec.kind == "cross":
+        d["mixer"] = L.attn_pd(cfg, cross=True)
+    elif cfg.use_mla:
+        d["mixer"] = L.mla_pd(cfg)
+    else:
+        d["mixer"] = L.attn_pd(cfg)
+    has_mlp = spec.moe or cfg.d_ff > 0
+    if has_mlp:
+        d["ln2"] = PD((D,), ("embed",), "ones")
+        d["mlp"] = L.moe_pd(cfg) if spec.moe else L.mlp_pd(cfg)
+    return d
+
+
+def layer_apply(p: dict, x: Array, cfg: ModelConfig, spec: LayerSpec, *,
+                positions, vision_kv=None, cache=None, pos_scalar=None):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if spec.kind == "mamba":
+        mix, new_cache = S.ssm_apply(p["mixer"], h, cfg, cache=cache)
+    elif spec.kind == "cross":
+        mix, new_cache = L.attn_apply(p["mixer"], h, cfg, spec,
+                                      positions=positions, kv_x=vision_kv,
+                                      cache=cache, pos_scalar=pos_scalar)
+    elif cfg.use_mla:
+        mix, new_cache = L.mla_apply(p["mixer"], h, cfg, positions=positions,
+                                     cache=cache, pos_scalar=pos_scalar)
+    else:
+        mix, new_cache = L.attn_apply(p["mixer"], h, cfg, spec,
+                                      positions=positions, cache=cache,
+                                      pos_scalar=pos_scalar)
+    x = x + mix
+    if "mlp" in p:
+        h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        out = L.moe_apply(p["mlp"], h2, cfg) if spec.moe else \
+            L.mlp_apply(p["mlp"], h2, cfg)
+        x = x + out
+    x = lshard(x, ("batch", None, "embed"))
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model params
+# ---------------------------------------------------------------------------
+def model_pd(cfg: ModelConfig) -> dict:
+    D, V = cfg.d_model, cfg.padded_vocab
+    period, n_per, tail = split_periods(cfg.layer_pattern)
+    tree: dict[str, Any] = {}
+    # the embed table always exists: "embeds" frontends (audio) use it for
+    # decode (the EnCodec codebook is the vocab); training consumes embeds.
+    tree["embed"] = PD((V, D), ("vocab", "embed"), "embed", scale=0.02)
+    if cfg.frontend == "tokens+vision":
+        tree["vision_proj"] = PD((cfg.d_vision, D), (None, "embed"))
+    tree["period"] = [stack_pds(layer_pd(cfg, spec), n_per) for spec in period]
+    tree["tail"] = [layer_pd(cfg, spec) for spec in tail]
+    tree["ln_f"] = PD((D,), ("embed",), "ones")
+    tree["lm_head"] = PD((D, V), ("embed", "vocab"), scale=0.02)
+    return tree
+
+
+def model_params(key: jax.Array, cfg: ModelConfig):
+    return init_params(key, model_pd(cfg), jnp.dtype(cfg.dtype))
+
+
+def model_param_structs(cfg: ModelConfig):
+    return param_shape_structs(model_pd(cfg), jnp.dtype(cfg.dtype))
+
+
+def model_param_pspecs(cfg: ModelConfig, rules):
+    return param_pspecs(model_pd(cfg), rules)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+def _embed_inputs(params, cfg: ModelConfig, batch: dict) -> Array:
+    if "embeds" in batch:
+        return batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    return jnp.take(params["embed"], batch["tokens"], axis=0)
+
+
+def _vision_kv_src(params, cfg: ModelConfig, batch: dict) -> Array | None:
+    if cfg.frontend != "tokens+vision":
+        return None
+    return batch["vision_embeds"].astype(jnp.dtype(cfg.dtype)) @ \
+        params["vision_proj"]
+
+
+def _stack_apply(params, cfg: ModelConfig, x: Array, *, positions,
+                 vision_kv=None, caches=None, pos_scalar=None):
+    """Run period-scan + tail. caches: None or matching structure
+    {"period": [stacked per period-slot], "tail": [...]}. Returns (x, caches).
+    """
+    period, n_per, tail = split_periods(cfg.layer_pattern)
+
+    def period_body(x, slices):
+        p_slice, c_slice = slices
+        new_cs = []
+        for i, spec in enumerate(period):
+            x, nc = layer_apply(p_slice[i], x, cfg, spec, positions=positions,
+                                vision_kv=vision_kv,
+                                cache=None if c_slice is None else c_slice[i],
+                                pos_scalar=pos_scalar)
+            new_cs.append(nc if nc is not None else 0)
+        return x, new_cs
+
+    body = period_body
+    if cfg.remat == "full":
+        body = jax.checkpoint(period_body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    cache_xs = None if caches is None else caches["period"]
+    a = _sqrt_factor(n_per)
+    if caches is None and cfg.remat == "full" and n_per >= 12 and a > 1:
+        # 2-level (sqrt) checkpointing over periods: bwd keeps O(a + n/a)
+        # period carries live instead of O(n) — the difference between a
+        # deep stack fitting HBM or not (see EXPERIMENTS.md SS Perf).
+        b = n_per // a
+        p2 = jax.tree.map(lambda t: t.reshape((a, b) + t.shape[1:]),
+                          params["period"])
+
+        def outer_body(xc, p_slice_b):
+            xc, _ = jax.lax.scan(lambda xx, ps: body(xx, (ps, None)),
+                                 xc, p_slice_b)
+            return xc, 0
+
+        x, _ = jax.lax.scan(jax.checkpoint(outer_body), x, p2)
+        new_period_cache = None
+    else:
+        x, new_period_cache = jax.lax.scan(body, x,
+                                           (params["period"], cache_xs))
+    new_caches = None
+    tail_caches = []
+    for i, spec in enumerate(tail):
+        c = None if caches is None else caches["tail"][i]
+
+        def tail_fn(p, xx, cc):
+            return layer_apply(p, xx, cfg, tail[i], positions=positions,
+                               vision_kv=vision_kv, cache=cc,
+                               pos_scalar=pos_scalar)
+
+        if cfg.remat == "full" and caches is None:
+            tail_fn = jax.checkpoint(tail_fn)
+        x, nc = tail_fn(params["tail"][i], x, c)
+        tail_caches.append(nc if nc is not None else 0)
+    if caches is not None:
+        new_caches = {"period": new_period_cache, "tail": tail_caches}
+    return x, new_caches
+
+
+def _sqrt_factor(n: int) -> int:
+    """Largest divisor of n that is <= sqrt(n)."""
+    best = 1
+    for a in range(2, int(n ** 0.5) + 1):
+        if n % a == 0:
+            best = a
+    return best
+
+
+def _backbone(params, cfg: ModelConfig, batch: dict) -> Array:
+    """Embed -> stack -> final norm. Returns hidden states (B, S, D)."""
+    x = _embed_inputs(params, cfg, batch)
+    x = lshard(x, ("batch", None, "embed"))
+    S_ = x.shape[1]
+    positions = jnp.arange(S_)
+    vkv = _vision_kv_src(params, cfg, batch)
+    x, _ = _stack_apply(params, cfg, x, positions=positions, vision_kv=vkv)
+    return L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, batch: dict) -> Array:
+    """Training/prefill forward -> logits (B, S, padded_vocab)."""
+    x = _backbone(params, cfg, batch)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return lshard(logits, ("batch", None, "vocab"))
+
+
+def _ce_chunk(x_c: Array, labels_c: Array, lm_head: Array, cfg: ModelConfig):
+    """CE over one sequence chunk: logits live only inside this (rematted)
+    body, so peak memory is O(B * S_chunk * V) instead of O(B * S * V)."""
+    logits = jnp.einsum("bsd,dv->bsv", x_c, lm_head)
+    logits = lshard(logits, ("batch", None, "vocab"))
+    V = cfg.padded_vocab
+    if V != cfg.vocab:   # mask padded vocab entries out of the normalizer
+        neg = jnp.asarray(jnp.finfo(logits.dtype).min, logits.dtype)
+        logits = jnp.where((jnp.arange(V) >= cfg.vocab)[None, None, :], neg,
+                           logits)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1))
+    sumexp = jnp.sum(jnp.exp((logits - m[..., None]).astype(jnp.float32)),
+                     axis=-1)
+    lse = m.astype(jnp.float32) + jnp.log(sumexp)
+    gold = jnp.take_along_axis(logits, labels_c[..., None], axis=-1)[..., 0]
+    return jnp.sum(lse - gold.astype(jnp.float32))
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, *, ce_chunk: int = 512):
+    x = _backbone(params, cfg, batch)              # (B,S,D)
+    labels = batch["labels"]
+    B, S_, D = x.shape
+    Sc = min(ce_chunk, S_)
+    if S_ % Sc:
+        Sc = S_                                     # odd sizes: single chunk
+    nc = S_ // Sc
+    xs = x.reshape(B, nc, Sc, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, nc, Sc).transpose(1, 0, 2)
+
+    def body(tot, inp):
+        xc, lc = inp
+        return tot + _ce_chunk(xc, lc, params["lm_head"], cfg), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(body), jnp.zeros((), jnp.float32),
+                            (xs, ls))
+    loss = total / (B * S_)
+    return loss, {"loss": loss, "ppl_proxy": jnp.exp(jnp.minimum(loss, 20.0))}
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init/specs, prefill, decode
+# ---------------------------------------------------------------------------
+def layer_cache_pd(cfg: ModelConfig, spec: LayerSpec, B: int, S_max: int):
+    f = jnp.dtype(cfg.dtype)
+    if spec.kind == "mamba":
+        H, N, P_, di, K = (cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim,
+                           cfg.d_inner, cfg.ssm_conv)
+        return {
+            "state": PD((B, H, N, P_), ("batch", "heads", None, None), "zeros"),
+            "conv": PD((B, K - 1, di + 2 * N), ("batch", None, "ff"), "zeros"),
+        }
+    if spec.kind == "cross":
+        return {
+            "k": PD((B, cfg.n_image_tokens, cfg.n_kv_heads, cfg.d_head),
+                    ("batch", None, "kv_heads", None), "zeros"),
+            "v": PD((B, cfg.n_image_tokens, cfg.n_kv_heads, cfg.d_head),
+                    ("batch", None, "kv_heads", None), "zeros"),
+        }
+    if cfg.use_mla:
+        return {
+            "c_kv": PD((B, S_max, cfg.kv_lora_rank),
+                       ("batch", "cache_seq", None), "zeros"),
+            "k_rope": PD((B, S_max, cfg.qk_rope_dim),
+                         ("batch", "cache_seq", None), "zeros"),
+        }
+    seq_ax = "cache_seq" if B == 1 else "kv_seq"
+    return {
+        "k": PD((B, S_max, cfg.n_kv_heads, cfg.d_head),
+                ("batch", seq_ax, "kv_heads", None), "zeros"),
+        "v": PD((B, S_max, cfg.n_kv_heads, cfg.d_head),
+                ("batch", seq_ax, "kv_heads", None), "zeros"),
+    }
+
+
+def cache_pd(cfg: ModelConfig, B: int, S_max: int) -> dict:
+    period, n_per, tail = split_periods(cfg.layer_pattern)
+    return {
+        "pos": PD((), (), "zeros"),
+        "period": [stack_pds(layer_cache_pd(cfg, spec, B, S_max), n_per,
+                             axis_name=None) for spec in period],
+        "tail": [layer_cache_pd(cfg, spec, B, S_max) for spec in tail],
+    }
+
+
+def cache_specs(cfg: ModelConfig, B: int, S_max: int):
+    tree = cache_pd(cfg, B, S_max)
+    structs = param_shape_structs(tree, jnp.dtype(cfg.dtype))
+    structs["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return structs
+
+
+def init_cache(cfg: ModelConfig, B: int, S_max: int):
+    tree = cache_pd(cfg, B, S_max)
+    out = init_params(jax.random.PRNGKey(0), tree, jnp.dtype(cfg.dtype))
+    out["pos"] = jnp.zeros((), jnp.int32)
+    return out
+
+
+def cache_pspecs(cfg: ModelConfig, B: int, S_max: int, rules):
+    tree = cache_pd(cfg, B, S_max)
+    specs = param_pspecs(tree, rules)
+    from jax.sharding import PartitionSpec as P
+    specs["pos"] = P()
+    return specs
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, S_max: int):
+    """Run the prompt through the stack, building a cache of capacity S_max."""
+    B, S_ = (batch["embeds"] if cfg.frontend == "embeds" else
+             batch["tokens"]).shape[:2]
+    cache = init_cache(cfg, B, S_max)
+    x = _embed_inputs(params, cfg, batch)
+    positions = jnp.arange(S_)
+    vkv = _vision_kv_src(params, cfg, batch)
+    x, new_caches = _stack_apply(
+        params, cfg, x, positions=positions, vision_kv=vkv,
+        caches={"period": cache["period"], "tail": cache["tail"]})
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], params["lm_head"])
+    new_caches["pos"] = jnp.asarray(S_, jnp.int32)
+    return logits[:, 0], new_caches
+
+
+def decode_step(params, cfg: ModelConfig, cache: dict, batch: dict):
+    """One token step. batch: {"token": (B,)} (+ vision embeds use cache)."""
+    tok = batch["token"]
+    x = jnp.take(params["embed"], tok, axis=0)[:, None, :]
+    x = lshard(x, ("batch", None, "embed"))
+    pos = cache["pos"]
+    positions = pos[None]
+    x, new_caches = _stack_apply(
+        params, cfg, x, positions=positions,
+        caches={"period": cache["period"], "tail": cache["tail"]},
+        pos_scalar=pos)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+    new_caches["pos"] = pos + 1
+    return lshard(logits, ("batch", "vocab")), new_caches

@@ -1,0 +1,73 @@
+"""Parameter descriptor system.
+
+Layers declare parameters as ``PD(shape, logical_axes, init)`` trees; from one
+descriptor tree we derive (a) initialized arrays (smoke tests / examples),
+(b) ShapeDtypeStructs (dry-run — no allocation), (c) PartitionSpecs (via the
+AxisRules engine). This guarantees the three views never diverge.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.mesh import AxisRules
+
+
+class PD(NamedTuple):
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones | embed | ssm_A
+    scale: float | None = None    # stddev; default 1/sqrt(fan_in)
+
+
+def _is_pd(x) -> bool:
+    return isinstance(x, PD)
+
+
+def init_params(key: jax.Array, tree, dtype) -> dict:
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_pd)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, pd in zip(keys, leaves):
+        if pd.init == "zeros":
+            arr = jnp.zeros(pd.shape, dtype)
+        elif pd.init == "ones":
+            arr = jnp.ones(pd.shape, dtype)
+        elif pd.init == "ssm_A":     # A_log in [log 1, log 16]
+            arr = jnp.log(jax.random.uniform(k, pd.shape, jnp.float32,
+                                             1.0, 16.0)).astype(dtype)
+        else:
+            fan_in = pd.shape[0] if len(pd.shape) == 1 else int(
+                np.prod(pd.shape[:-1]) if pd.init == "embed" else
+                np.prod(pd.shape[:-1]))
+            scale = pd.scale if pd.scale is not None else fan_in ** -0.5
+            if pd.init == "embed":
+                scale = 1.0 if pd.scale is None else pd.scale
+            arr = (jax.random.normal(k, pd.shape, jnp.float32) * scale
+                   ).astype(dtype)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_shape_structs(tree, dtype) -> dict:
+    return jax.tree.map(
+        lambda pd: jax.ShapeDtypeStruct(pd.shape, jnp.dtype(dtype)),
+        tree, is_leaf=_is_pd)
+
+
+def param_pspecs(tree, rules: AxisRules) -> dict:
+    return jax.tree.map(
+        lambda pd: rules.spec_for(pd.shape, pd.axes), tree, is_leaf=_is_pd)
+
+
+def stack_pds(tree, n: int, axis_name: str | None = "fsdp") -> dict:
+    """Stack descriptors along a new leading (scan) axis — period stacking.
+    The leading axis carries ``axis_name`` ("fsdp": sharded over data when
+    cfg.fsdp, else replicated)."""
+    return jax.tree.map(
+        lambda pd: PD((n,) + pd.shape, (axis_name,) + pd.axes, pd.init,
+                      pd.scale),
+        tree, is_leaf=_is_pd)

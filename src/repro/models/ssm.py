@@ -1,0 +1,192 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) in JAX.
+
+Chunked SSD algorithm for train/prefill (the quadratic-within-chunk /
+recurrent-across-chunks decomposition, chunk = cfg.ssm_chunk) and the O(1)
+recurrent update for decode. Multi-value variant: B/C shared across heads
+(n_groups = 1), heads H = d_inner / head_dim.
+
+Recurrence (head h, step i):
+    a_i = exp(dt_i * A_h)            (A_h < 0)
+    h_i = a_i * h_{i-1} + dt_i * B_i (x) x_i
+    y_i = C_i . h_i + D_h * x_i
+Contribution of x_j to y_i:  C_i B_j dt_j exp(cl_i - cl_j) x_j  with cl the
+inclusive cumsum of log a — the "1-semiseparable attention" form the chunked
+algorithm factorizes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.mesh import lshard
+from .params import PD
+from .layers import rms_norm
+
+Array = jax.Array
+
+
+def ssm_pd(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    di, N, H, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv
+    return {
+        "w_x": PD((D, di), ("embed", "ff")),
+        "w_z": PD((D, di), ("embed", "ff")),
+        "w_B": PD((D, N), ("embed", None)),
+        "w_C": PD((D, N), ("embed", None)),
+        "w_dt": PD((D, H), ("embed", "heads")),
+        "dt_bias": PD((H,), ("heads",), "zeros"),
+        "conv_w": PD((K, di + 2 * N), (None, "ff"), scale=0.2),
+        "A_log": PD((H,), ("heads",), "ssm_A"),
+        "D_skip": PD((H,), ("heads",), "ones"),
+        "out_norm": PD((di,), ("ff",), "ones"),
+        "w_out": PD((di, D), ("ff", "embed")),
+    }
+
+
+def _causal_conv(xBC: Array, w: Array) -> Array:
+    """Depthwise causal conv, xBC: (B,S,Ch), w: (K,Ch)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC)
+    for i in range(K):                       # K is tiny (4): unrolled taps
+        out = out + pad[:, i:i + xBC.shape[1]] * w[i]
+    return out
+
+
+def ssm_apply(p: dict, x_in: Array, cfg: ModelConfig, *,
+              cache: dict | None = None):
+    """x_in: (B,S,D). Returns (out, new_cache).
+
+    cache (decode): {"state": (B,H,N,P), "conv": (B,K-1,di+2N)}.
+    """
+    B, S, D = x_in.shape
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P_ = cfg.ssm_head_dim
+    K = cfg.ssm_conv
+
+    xz = x_in @ p["w_x"]                                    # (B,S,di)
+    z = x_in @ p["w_z"]
+    Bc = x_in @ p["w_B"]
+    Cc = x_in @ p["w_C"]
+    dt = jax.nn.softplus((x_in @ p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # (H,)
+    xBC = jnp.concatenate([xz, Bc, Cc], -1)                  # (B,S,di+2N)
+
+    if cache is None:
+        xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"]))
+        new_cache = None
+    else:
+        conv_prev = cache["conv"]                            # (B,K-1,Ch)
+        window = jnp.concatenate([conv_prev, xBC], 1)        # (B,K-1+S,Ch)
+        full = jax.nn.silu(_causal_conv(
+            jnp.concatenate([jnp.zeros_like(conv_prev[:, :0]), window], 1),
+            p["conv_w"]))
+        xBC = full[:, K - 1:]                                # aligned outputs
+        new_conv = window[:, -(K - 1):]
+        new_cache = {"conv": new_conv}
+
+    xs, Bs, Cs = jnp.split(xBC, [di, di + N], axis=-1)
+    xh = xs.reshape(B, S, H, P_)
+    xh = lshard(xh, ("batch", None, "heads", None))
+
+    if cache is not None and S == 1:
+        # O(1) decode update
+        a = jnp.exp(dt[:, 0] * A)                            # (B,H)
+        dBx = jnp.einsum("bh,bn,bhp->bhnp", dt[:, 0],
+                         Bs[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32))
+        state = cache["state"] * a[..., None, None] + dBx    # (B,H,N,P)
+        y = jnp.einsum("bn,bhnp->bhp", Cs[:, 0].astype(jnp.float32), state)
+        y = y + p["D_skip"].astype(jnp.float32)[None, :, None] * xh[:, 0]
+        y = y.reshape(B, 1, di).astype(x_in.dtype)
+        new_cache = {"state": state, "conv": new_cache["conv"]}
+    else:
+        y, state = _ssd_chunked(xh, dt, A, Bs, Cs, p["D_skip"], cfg)
+        if cache is not None:
+            new_cache = {"state": state, "conv": new_cache["conv"]}
+        y = y.reshape(B, S, di).astype(x_in.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    return y @ p["w_out"], new_cache
+
+
+def _ssd_chunked(xh: Array, dt: Array, A: Array, Bs: Array, Cs: Array,
+                 D_skip: Array, cfg: ModelConfig):
+    """Chunked SSD, sequential over chunks. xh: (B,S,H,P); dt: (B,S,H) fp32;
+    A: (H,) fp32; Bs/Cs: (B,S,N). Returns (y (B,S,H,P), state (B,H,N,P)).
+
+    One lax.scan step = one chunk: the (B,Q,Q,H) intra-chunk decay tensor is
+    a transient of a single step (checkpointed body — recomputed in bwd), so
+    peak memory is O(B*Q^2*H), not O(B*S*Q*H)."""
+    B, S, H, P_ = xh.shape
+    N = Bs.shape[-1]
+    Q = min(cfg.ssm_chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bs = jnp.pad(Bs, ((0, 0), (0, pad), (0, 0)))
+        Cs = jnp.pad(Cs, ((0, 0), (0, pad), (0, 0)))
+
+    out_dtype = xh.dtype
+    # (nc, B, Q, ...) — chunk-major for the scan
+    xc = xh.reshape(B, nc, Q, H, P_).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(B, nc, Q, H).transpose(1, 0, 2, 3)
+    Bcq = Bs.reshape(B, nc, Q, N).transpose(1, 0, 2, 3)
+    Ccq = Cs.reshape(B, nc, Q, N).transpose(1, 0, 2, 3)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+
+    def body(h, inp):
+        x_, dt_, B_, C_ = inp
+        x_ = x_.astype(jnp.float32)
+        B_ = B_.astype(jnp.float32)
+        C_ = C_.astype(jnp.float32)
+        l = dt_ * A                                      # (B,Q,H) <= 0
+        cl = jnp.cumsum(l, axis=1)
+        # intra: scores[i,j] = (C_i.B_j) exp(cl_i - cl_j) dt_j,  j <= i.
+        # Mask the exponent BEFORE exp — for j > i it is positive and would
+        # overflow to inf, poisoning gradients through the outer where.
+        CB = jnp.einsum("bin,bjn->bij", C_, B_)
+        diff = cl[:, :, None, :] - cl[:, None, :, :]     # (B,i,j,H)
+        decay = jnp.exp(jnp.where(tri, diff, -jnp.inf))
+        y = jnp.einsum("bijh,bjh,bjhp->bihp", CB[..., None] * decay, dt_, x_)
+        # inter: y_i += C_i . (exp(cl_i) h_prev)
+        y = y + jnp.einsum("bin,bih,bhnp->bihp", C_, jnp.exp(cl), h)
+        y = y + D_skip.astype(jnp.float32)[None, None, :, None] * x_
+        # state update
+        dec_end = jnp.exp(cl[:, -1:, :] - cl)            # (B,Q,H)
+        h_new = h * jnp.exp(cl[:, -1, :])[..., None, None] + \
+            jnp.einsum("bjh,bjh,bjn,bjhp->bhnp", dec_end, dt_, B_, x_)
+        return h_new, y.astype(out_dtype)
+
+    h0 = jnp.zeros((B, H, N, P_), jnp.float32)
+    a = _sqrt_factor(nc)
+    if nc >= 16 and a > 1:
+        # 2-level (sqrt) checkpointing over chunks: during bwd only
+        # O(a + nc/a) fp32 state carries stay live instead of O(nc) — the
+        # dominant train-memory term for wide-state SSMs (jamba H=256).
+        bI = nc // a
+        r2 = lambda t: t.reshape((a, bI) + t.shape[1:])
+        xs2 = (r2(xc), r2(dtc), r2(Bcq), r2(Ccq))
+
+        def outer(h, xs_b):
+            h, ys_b = jax.lax.scan(jax.checkpoint(body), h, xs_b)
+            return h, ys_b
+
+        h_last, ys = jax.lax.scan(jax.checkpoint(outer), h0, xs2)
+        ys = ys.reshape((nc,) + ys.shape[2:])
+    else:
+        h_last, ys = jax.lax.scan(jax.checkpoint(body), h0, (xc, dtc, Bcq, Ccq))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nc * Q, H, P_)[:, :S]
+    return y.astype(jnp.float32), h_last
+
+
+def _sqrt_factor(n: int) -> int:
+    best = 1
+    for a in range(2, int(n ** 0.5) + 1):
+        if n % a == 0:
+            best = a
+    return best

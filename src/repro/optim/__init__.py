@@ -1,0 +1,2 @@
+from .optimizers import (adafactor, adamw, clip_by_global_norm, global_norm,
+                         make_optimizer, sgdm, warmup_cosine)

@@ -1,0 +1,149 @@
+"""Optimizers (optax-like, self-contained): AdamW, Adafactor, SGD-momentum.
+
+State trees mirror the param tree, so optimizer state inherits the params'
+PartitionSpecs (ZeRO-style: sharded states come for free). Adafactor keeps
+row/col second-moment factors — the sublinear-memory choice for the >=70B
+assigned archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, Array], tuple[Any, Any]]
+    # update(grads, state, params, lr) -> (new_params, new_state)
+
+
+def global_norm(tree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), tree), norm
+
+
+def adamw(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(state_dtype)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * g32 * g32
+            mh = m / bc1
+            vh = v / bc2
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(state_dtype)
+            return (p.astype(state_dtype) - lr * delta).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"mu": new_m, "nu": new_v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def adafactor(eps=1e-30, clip_threshold=1.0, decay=0.8,
+              weight_decay=0.0) -> Optimizer:
+    """Factored second moments for >=2D params (rows+cols), full for 1D —
+    O(n+m) state instead of O(nm) for matrices (Shazeer & Stern 2018)."""
+    def init(params):
+        def f(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(f, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        beta = 1.0 - step.astype(jnp.float32) ** -decay
+
+        def upd(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                u = g32 / jnp.sqrt(
+                    (vr / denom)[..., None] * vc[..., None, :] + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g32 / jnp.sqrt(v + eps)
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            delta = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), new_s
+
+        out = jax.tree.map(upd, grads, state["f"], params,
+                           is_leaf=lambda x: isinstance(x, dict) and
+                           ("vr" in x or "v" in x))
+        is_pair = lambda x: isinstance(x, tuple)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=is_pair)
+        new_s = jax.tree.map(lambda t: t[1], out, is_leaf=is_pair)
+        return new_p, {"f": new_s, "step": step}
+
+    return Optimizer(init, update)
+
+
+def sgdm(momentum=0.9, weight_decay=0.0) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                   params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        def upd(g, m, p):
+            m = momentum * m + g.astype(jnp.float32) + \
+                weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+        out = jax.tree.map(upd, grads, state["mu"], params)
+        is_pair = lambda x: isinstance(x, tuple)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=is_pair)
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=is_pair)
+        return new_p, {"mu": new_m, "step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor, "sgdm": sgdm}[name](**kw)
+
+
+# -- schedules ---------------------------------------------------------------
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  min_ratio: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = base_lr * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr

@@ -1,0 +1,224 @@
+"""Roofline derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), at TPU v5e constants:
+    compute    = HLO_FLOPs_per_device / 197e12        [s]
+    memory     = HLO_bytes_per_device / 819e9         [s]
+    collective = collective_bytes_per_device / 50e9   [s]
+
+``compiled.cost_analysis()`` reports per-device numbers on the
+SPMD-partitioned module (verified empirically: a (data,model)-sharded matmul
+reports global_flops/n_devices). collective_bytes is parsed from the
+post-partitioning HLO text — operand shapes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (shard shapes, i.e.
+per-device wire bytes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+# --- v5e hardware constants (per chip) --------------------------------------
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum operand bytes of collective ops, keyed by collective kind."""
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done(" in line:   # -done consumes the -start, no new bytes
+            continue
+        kind = m.group(1)
+        # operands are everything after the op name's '('; their typed shapes
+        # appear inline: op(f32[128]{0} %x, bf16[4,8]{1,0} %y)
+        args = line[m.end():]
+        depth, j = 1, 0
+        for j, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        args = args[:j]
+        total = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(args))
+        out[kind] = out.get(kind, 0) + total
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: dict[str, float]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float            # 6 N D (global, per step)
+    useful_flops_ratio: float     # model_flops / (flops_per_device * chips)
+    chips: int
+    xla_flops_once: float         # XLA's (loop-body-once) number, reference
+    unbounded_whiles: int
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def derive_roofline(compiled, *, chips: int, model_flops: float) -> Roofline:
+    """Terms from the trip-count-corrected HLO walk (hlo_cost.analyze);
+    XLA's cost_analysis counts while bodies once and is kept only as a
+    reference field."""
+    from .hlo_cost import analyze
+    cost = analyze(compiled.as_text())
+    ca = compiled.cost_analysis()
+
+    flops = float(cost.flops)
+    byts = float(cost.bytes)
+    coll_total = cost.collective_total
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = coll_total / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    global_flops = flops * chips
+    ratio = model_flops / global_flops if global_flops else 0.0
+    return Roofline(flops_per_device=flops, bytes_per_device=byts,
+                    collective_bytes=dict(cost.collective_bytes),
+                    compute_s=compute_s,
+                    memory_s=memory_s, collective_s=collective_s,
+                    bottleneck=bottleneck, model_flops=model_flops,
+                    useful_flops_ratio=ratio, chips=chips,
+                    xla_flops_once=float(ca.get("flops", 0.0)),
+                    unbounded_whiles=cost.unbounded_whiles)
+
+
+def memory_report(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    fields = ["argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"]
+    rep = {f: int(getattr(ma, f, 0)) for f in fields}
+    rep["total_per_device"] = (rep["argument_size_in_bytes"] +
+                               rep["output_size_in_bytes"] +
+                               rep["temp_size_in_bytes"] -
+                               rep["alias_size_in_bytes"])
+    return rep
+
+
+def train_model_flops(cfg, tokens: int) -> float:
+    """MODEL_FLOPS = 6 * N_active * D_tokens (fwd+bwd)."""
+    return 6.0 * cfg.param_count(active_only=bool(cfg.n_experts)) * tokens
+
+
+def decode_model_flops(cfg, batch: int, kv_len: int) -> float:
+    """One decode step: 2 * N_active matmul flops + attention over the cache
+    (2 * 2 * H*dh * kv_len per layer per sequence, q@k and p@v)."""
+    n_active = cfg.param_count(active_only=bool(cfg.n_experts))
+    flops = 2.0 * n_active * batch
+    attn_layers = sum(1 for s in cfg.layer_pattern if s.kind in ("full", "sliding"))
+    if cfg.use_mla:
+        per = 2 * 2 * cfg.n_heads * cfg.kv_lora_rank * kv_len
+    else:
+        per = 2 * 2 * cfg.n_heads * cfg.d_head * kv_len
+    flops += attn_layers * per * batch
+    return flops
+
+
+# ---------------------------------------------------------------------------
+# Analytic per-device memory (TPU expectation).
+#
+# The CPU-backend buffer assignment inflates ``memory_analysis`` two ways the
+# TPU target does not: (i) bf16 dot operands are converted to f32 copies (no
+# native bf16 dot on CPU), (ii) the FSDP all-gather is hoisted out of the
+# layer loop (gathering the whole stack at once). We therefore also report an
+# analytic estimate: params/optimizer/cache bytes computed EXACTLY from the
+# parameter descriptors + sharding rules, plus a coarse activation model.
+# ---------------------------------------------------------------------------
+def _pd_device_bytes(pd_tree, rules, dtype_bytes: float) -> float:
+    import numpy as _np
+    from repro.models.params import PD
+
+    def leaf(pd):
+        shards = 1
+        spec = rules.spec_for(pd.shape, pd.axes)
+        for entry in spec:
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            for nm in names:
+                shards *= rules.mesh.shape[nm]
+        return float(_np.prod(pd.shape)) * dtype_bytes / shards
+
+    import jax as _jax
+    return float(sum(_jax.tree.leaves(_jax.tree.map(
+        leaf, pd_tree, is_leaf=lambda x: isinstance(x, PD)))))
+
+
+def analytic_memory(cfg, cell, rules, *, microbatch: int = 1) -> dict:
+    """Per-device bytes: exact params/opt/grads/cache + coarse activations."""
+    from repro.models.model import cache_pd, model_pd, split_periods
+
+    pd_tree = model_pd(cfg)
+    params = _pd_device_bytes(pd_tree, rules, 2.0)          # bf16
+    out = {"params": params}
+    if cell.kind == "train":
+        out["grads"] = params
+        if cfg.optimizer == "adamw":
+            out["opt"] = _pd_device_bytes(pd_tree, rules, 8.0)  # fp32 mu+nu
+        elif cfg.optimizer == "adafactor":
+            out["opt"] = params * 0.06                       # row+col factors
+        else:
+            out["opt"] = params * 2
+    else:
+        out["grads"] = out["opt"] = 0.0
+    if cell.kind == "decode":
+        out["cache"] = _pd_device_bytes(
+            cache_pd(cfg, cell.global_batch, cell.seq_len), rules, 2.0)
+    else:
+        out["cache"] = 0.0
+    # activations: tokens/device (per microbatch) x d_model x live-layer count
+    dp = 1
+    for a in ("pod", "data"):
+        if a in rules.mesh.shape:
+            dp *= rules.mesh.shape[a]
+    if cell.kind == "train":
+        tok = cell.global_batch * cell.seq_len / dp / max(microbatch, 1)
+        period, n_per, tail = split_periods(cfg.layer_pattern)
+        import math
+        a = max(1, int(math.sqrt(n_per)))
+        live = (a + n_per // a + len(tail)) + 12   # carries + transients
+        out["activations"] = tok * cfg.d_model * 2.0 * live
+    elif cell.kind == "prefill":
+        tok = cell.global_batch * cell.seq_len / dp
+        out["activations"] = tok * cfg.d_model * 2.0 * 10
+    else:
+        out["activations"] = cell.global_batch * cfg.d_model * 2.0 * 64
+    out["total"] = sum(out.values())
+    return {k: round(v / 1e9, 3) for k, v in out.items()}

@@ -1,0 +1,25 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the 512-device override belongs to
+# the dry-run ONLY — see src/repro/launch/dryrun.py). Distributed tests spawn
+# subprocesses with their own XLA_FLAGS.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def synthetic_regression(key, n, d=5, noise=0.05, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    X = jax.random.normal(k1, (n, d), dtype)
+    w = jax.random.normal(k2, (d,), dtype)
+    y = jnp.sin(X @ w) + noise * jax.random.normal(k3, (n,), dtype)
+    return X, y

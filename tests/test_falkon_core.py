@@ -1,0 +1,258 @@
+"""Correctness of the FALKON core against the paper's own claims.
+
+Keyed to the paper:
+* Lemma 5  — FALKON with enough CG iterations equals the exact Nystrom
+             estimator (Eq. 8).
+* Thm 1/2  — cond(B^T H B) is small once M is large enough, and the gap to the
+             Nystrom estimator decays exponentially in t.
+* Thm 3    — with lam = n^{-1/2}, M = c sqrt(n), t = O(log n), FALKON matches
+             exact KRR accuracy.
+* Appendix A — the general preconditioner (rank-deficient K_MM, leverage-score
+             D) still converges to the exact Nystrom solution.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import synthetic_regression
+from repro.core import (FalkonConfig, GaussianKernel, conjugate_gradient,
+                        exact_leverage_scores, approximate_leverage_scores,
+                        falkon_fit, falkon_solve, knm_apply, knm_matvec,
+                        krr_direct, krr_gradient, make_kernel,
+                        make_preconditioner, nystrom_direct, nystrom_gradient,
+                        select_centers, uniform_centers)
+
+
+def _fit(X, y, **kw):
+    defaults = dict(kernel="gaussian", kernel_params=(("sigma", 2.0),),
+                    lam=1e-5, num_centers=300, iterations=40, block_size=256)
+    defaults.update(kw)
+    cfg = FalkonConfig(**defaults)
+    return falkon_fit(jax.random.PRNGKey(1), X, y, cfg) + (cfg,)
+
+
+# ---------------------------------------------------------------------------
+# Blocked matvec == dense matvec
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("block_size", [64, 100, 256, 1500])
+def test_blocked_matvec_matches_dense(rng, block_size):
+    X, y = synthetic_regression(rng, 777)
+    kern = GaussianKernel(sigma=1.5)
+    C = X[:93]
+    u = jax.random.normal(jax.random.PRNGKey(7), (93,))
+    KnM = kern(X, C)
+    expect = KnM.T @ (KnM @ u + y)
+    got = knm_matvec(X, C, u, y, kern, block_size=block_size)
+    np.testing.assert_allclose(got, expect, rtol=2e-4, atol=2e-3)
+
+
+def test_blocked_matvec_multirhs(rng):
+    X, _ = synthetic_regression(rng, 300)
+    kern = GaussianKernel(sigma=1.5)
+    C = X[:50]
+    U = jax.random.normal(jax.random.PRNGKey(3), (50, 4))
+    V = jax.random.normal(jax.random.PRNGKey(4), (300, 4))
+    KnM = kern(X, C)
+    expect = KnM.T @ (KnM @ U + V)
+    got = knm_matvec(X, C, U, V, kern, block_size=128)
+    np.testing.assert_allclose(got, expect, rtol=2e-4, atol=2e-3)
+
+
+def test_knm_apply_matches_dense(rng):
+    X, _ = synthetic_regression(rng, 311)
+    kern = GaussianKernel(sigma=1.5)
+    C = X[:40]
+    u = jax.random.normal(jax.random.PRNGKey(5), (40,))
+    np.testing.assert_allclose(knm_apply(X, C, u, kern, block_size=100),
+                               kern(X, C) @ u, rtol=2e-4, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# CG
+# ---------------------------------------------------------------------------
+def test_cg_solves_spd_system(rng):
+    A0 = jax.random.normal(rng, (40, 40))
+    A = A0 @ A0.T + 40 * jnp.eye(40)
+    b = jax.random.normal(jax.random.PRNGKey(2), (40,))
+    res = conjugate_gradient(lambda v: A @ v, b, t=40)
+    np.testing.assert_allclose(res.x, jnp.linalg.solve(A, b), rtol=1e-3, atol=1e-4)
+    assert res.residual_norms[-1] < 1e-3 * res.residual_norms[0]
+
+
+def test_cg_multirhs_matches_percolumn(rng):
+    A0 = jax.random.normal(rng, (30, 30))
+    A = A0 @ A0.T + 30 * jnp.eye(30)
+    B = jax.random.normal(jax.random.PRNGKey(2), (30, 3))
+    res = conjugate_gradient(lambda v: A @ v, B, t=30)
+    for j in range(3):
+        col = conjugate_gradient(lambda v: A @ v, B[:, j], t=30)
+        np.testing.assert_allclose(res.x[:, j], col.x, rtol=1e-3, atol=1e-4)
+
+
+def test_cg_tol_freezes_converged_state(rng):
+    A0 = jax.random.normal(rng, (20, 20))
+    A = A0 @ A0.T + 20 * jnp.eye(20)
+    b = jax.random.normal(jax.random.PRNGKey(2), (20,))
+    res = conjugate_gradient(lambda v: A @ v, b, t=200, tol=1e-5)
+    assert int(res.iterations) < 200  # stopped early (masked no-ops)
+    np.testing.assert_allclose(res.x, jnp.linalg.solve(A, b), rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Lemma 5: FALKON -> exact Nystrom estimator
+# ---------------------------------------------------------------------------
+def test_falkon_converges_to_nystrom(rng):
+    with jax.enable_x64(True):
+        X, y = synthetic_regression(rng, 1200, dtype=jnp.float64)
+        est, state, cfg = _fit(X, y, iterations=60, dtype="float64")
+        ny = nystrom_direct(X, y, est.centers, cfg.make_kernel(), cfg.lam,
+                            jitter=0.0)
+        pred_f, pred_n = est.predict(X), ny.predict(X)
+        rel = jnp.linalg.norm(pred_f - pred_n) / jnp.linalg.norm(pred_n)
+        assert float(rel) < 1e-5, f"Lemma 5 violated: rel={float(rel):.2e}"
+
+
+def test_falkon_rank_deficient_path(rng):
+    """Appendix A: duplicated centers => singular K_MM; eig path still works."""
+    with jax.enable_x64(True):
+        X, y = synthetic_regression(rng, 600, dtype=jnp.float64)
+        # force duplicates: tile a small set of rows
+        Xd = jnp.concatenate([X[:550], X[:50]], axis=0)
+        yd = jnp.concatenate([y[:550], y[:50]], axis=0)
+        est, state, cfg = _fit(Xd, yd, num_centers=200, iterations=60,
+                               rank_deficient=True, dtype="float64")
+        assert jnp.all(jnp.isfinite(est.alpha))
+        mse = float(jnp.mean((est.predict(Xd) - yd) ** 2))
+        assert mse < 0.3
+
+
+def test_falkon_leverage_scores_path(rng):
+    with jax.enable_x64(True):
+        X, y = synthetic_regression(rng, 800, dtype=jnp.float64)
+        est, state, cfg = _fit(X, y, num_centers=250, iterations=60, lam=1e-4,
+                               center_selection="leverage", dtype="float64")
+        assert jnp.all(jnp.isfinite(est.alpha))
+        # Thm 4: conditioning under leverage sampling is controlled too
+        assert float(state.cond_estimate) < 100.0
+        mse = float(jnp.mean((est.predict(X) - y) ** 2))
+        assert mse < 0.3
+
+
+# ---------------------------------------------------------------------------
+# Thm 1/2: conditioning and exponential decay in t
+# ---------------------------------------------------------------------------
+def test_preconditioner_conditioning_improves_with_M(rng):
+    with jax.enable_x64(True):
+        X, y = synthetic_regression(rng, 1000, dtype=jnp.float64)
+        conds = []
+        for M in (20, 100, 400):
+            est, state, cfg = _fit(X, y, num_centers=M, iterations=5,
+                                   lam=1e-4, dtype="float64")
+            conds.append(float(state.cond_estimate))
+        # cond(W) -> small constant as M grows (Thm 2: ~17 suffices for nu>=1/2)
+        assert conds[-1] < conds[0] + 1e-6
+        assert conds[-1] < 30.0
+
+
+def test_exponential_decay_in_iterations(rng):
+    """Gap to the exact Nystrom estimator decays ~exponentially in t (Thm 1)."""
+    with jax.enable_x64(True):
+        X, y = synthetic_regression(rng, 1000, dtype=jnp.float64)
+        cfg = FalkonConfig(kernel="gaussian", kernel_params=(("sigma", 2.0),),
+                           lam=1e-4, num_centers=300, iterations=1,
+                           block_size=256, dtype="float64")
+        kern = cfg.make_kernel()
+        sel = uniform_centers(jax.random.PRNGKey(1), X, 300)
+        ny = nystrom_direct(X, y, sel.centers, kern, cfg.lam, jitter=0.0)
+        KMM = kern(sel.centers, sel.centers)
+        pre = make_preconditioner(KMM, cfg.lam, X.shape[0])
+        gaps = []
+        for t in (2, 5, 10, 20):
+            st = falkon_solve(X, y, sel.centers, pre, kern, cfg.lam, t,
+                              block_size=256)
+            gaps.append(float(jnp.linalg.norm(st.alpha - ny.alpha)))
+        assert gaps[1] < gaps[0] and gaps[2] < gaps[1] and gaps[3] < gaps[2]
+        # at least geometric decay with rate ~e^{-1/2} per iteration on average
+        assert gaps[3] < gaps[0] * np.exp(-0.5 * (20 - 2) / 2)
+
+
+# ---------------------------------------------------------------------------
+# Thm 3: matches exact KRR accuracy at paper hyperparameters
+# ---------------------------------------------------------------------------
+def test_falkon_matches_krr_accuracy(rng):
+    X, y = synthetic_regression(rng, 2000)
+    Xte, yte = synthetic_regression(jax.random.PRNGKey(99), 500)
+    n = X.shape[0]
+    lam = 1.0 / np.sqrt(n)
+    M = int(3 * np.sqrt(n))
+    est, state, cfg = _fit(X, y, lam=lam, num_centers=M,
+                           iterations=int(np.log(n) * 3))
+    kern = cfg.make_kernel()
+    kr = krr_direct(X, y, kern, lam)
+    mse_f = float(jnp.mean((est.predict(Xte) - yte) ** 2))
+    mse_k = float(jnp.mean((kr.predict(Xte) - yte) ** 2))
+    assert mse_f < mse_k * 1.1 + 1e-3, (mse_f, mse_k)
+
+
+def test_falkon_beats_unpreconditioned_gradient(rng):
+    """The point of the paper: at equal iteration budget, preconditioned CG
+    beats plain gradient descent on the Nystrom problem."""
+    with jax.enable_x64(True):
+        X, y = synthetic_regression(rng, 1500, dtype=jnp.float64)
+        t = 15
+        est, state, cfg = _fit(X, y, lam=1e-4, num_centers=300, iterations=t,
+                               dtype="float64")
+        kern = cfg.make_kernel()
+        ny_gd = nystrom_gradient(X, y, est.centers, kern, cfg.lam, t=t,
+                                 block_size=256)
+        ny_exact = nystrom_direct(X, y, est.centers, kern, cfg.lam, jitter=0.0)
+        gap_falkon = float(jnp.linalg.norm(est.predict(X) - ny_exact.predict(X)))
+        gap_gd = float(jnp.linalg.norm(ny_gd.predict(X) - ny_exact.predict(X)))
+        assert gap_falkon < 0.1 * gap_gd, (gap_falkon, gap_gd)
+
+
+# ---------------------------------------------------------------------------
+# Leverage scores
+# ---------------------------------------------------------------------------
+def test_approximate_leverage_scores_close_to_exact(rng):
+    with jax.enable_x64(True):
+        X, _ = synthetic_regression(rng, 400, dtype=jnp.float64)
+        kern = GaussianKernel(sigma=2.0)
+        lam = 1e-3
+        exact = exact_leverage_scores(X, kern, lam)
+        approx = approximate_leverage_scores(jax.random.PRNGKey(0), X, kern,
+                                             lam, pilot_size=300,
+                                             block_size=128)
+        # q-approximation (Def. 1) with a generous q; also rank correlation
+        ratio = approx / exact
+        assert float(jnp.median(ratio)) > 0.2 and float(jnp.median(ratio)) < 5.0
+        corr = np.corrcoef(np.asarray(exact), np.asarray(approx))[0, 1]
+        assert corr > 0.9
+
+
+def test_multiclass_solve(rng):
+    """Multiclass (one-vs-all): CG over (M, p) rhs — the TIMIT/IMAGENET path."""
+    X, _ = synthetic_regression(rng, 900)
+    labels = jnp.argmax(jax.random.normal(jax.random.PRNGKey(5), (900, 4)), -1)
+    Y = jax.nn.one_hot(labels, 4)
+    est, state, cfg = _fit(X, Y, num_centers=200, iterations=25, lam=1e-4)
+    pred = est.predict(X)
+    assert pred.shape == (900, 4)
+    acc = float(jnp.mean(jnp.argmax(pred, -1) == labels))
+    assert acc > 0.5  # far above 25% chance
+
+
+def test_jit_falkon_solve(rng):
+    """The whole solve lowers + compiles + runs under jit (dry-run substrate)."""
+    X, y = synthetic_regression(rng, 512)
+    cfg = FalkonConfig(lam=1e-4, num_centers=128, iterations=10, block_size=128,
+                       kernel_params=(("sigma", 2.0),))
+    kern = cfg.make_kernel()
+    sel = uniform_centers(jax.random.PRNGKey(1), X, 128)
+    KMM = kern(sel.centers, sel.centers)
+    pre = make_preconditioner(KMM, cfg.lam, X.shape[0])
+    fn = jax.jit(lambda X, y: falkon_solve(X, y, sel.centers, pre, kern,
+                                           cfg.lam, 10, block_size=128).alpha)
+    alpha = fn(X, y)
+    assert alpha.shape == (128,) and bool(jnp.all(jnp.isfinite(alpha)))

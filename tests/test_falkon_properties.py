@@ -1,0 +1,108 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (GaussianKernel, LaplacianKernel, Matern32Kernel,
+                        conjugate_gradient, knm_matvec, make_kernel,
+                        make_preconditioner)
+
+SET = settings(max_examples=15, deadline=None)
+
+
+def _data(seed, n, d):
+    k = jax.random.PRNGKey(seed)
+    return jax.random.normal(k, (n, d))
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(3, 40),
+       d=st.integers(1, 6),
+       kname=st.sampled_from(["gaussian", "laplacian", "matern32"]))
+def test_kernel_gram_is_psd_and_bounded(seed, n, d, kname):
+    X = _data(seed, n, d)
+    kern = make_kernel(kname, sigma=1.3)
+    K = kern(X, X)
+    # symmetry
+    np.testing.assert_allclose(K, K.T, atol=1e-5)
+    # bounded: K(x,x) <= kappa^2 = 1 for these kernels
+    assert float(jnp.max(jnp.abs(K))) <= 1.0 + 1e-5
+    # PSD (up to fp32 noise)
+    evals = jnp.linalg.eigvalsh(K + 1e-5 * jnp.eye(n))
+    assert float(jnp.min(evals)) > -1e-3
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(5, 60),
+       m=st.integers(2, 20), bs=st.integers(3, 64))
+def test_blocked_matvec_invariant_to_block_size(seed, n, m, bs):
+    X = _data(seed, n, 4)
+    C = _data(seed + 1, m, 4)
+    u = jax.random.normal(jax.random.PRNGKey(seed + 2), (m,))
+    v = jax.random.normal(jax.random.PRNGKey(seed + 3), (n,))
+    kern = GaussianKernel(sigma=1.5)
+    ref = knm_matvec(X, C, u, v, kern, block_size=n)  # single block
+    got = knm_matvec(X, C, u, v, kern, block_size=bs)
+    np.testing.assert_allclose(got, ref, rtol=5e-4, atol=5e-4)
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1), q=st.integers(2, 25))
+def test_cg_matches_direct_solve_on_random_spd(seed, q):
+    A0 = jax.random.normal(jax.random.PRNGKey(seed), (q, q))
+    A = A0 @ A0.T + q * jnp.eye(q)
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (q,))
+    x = conjugate_gradient(lambda v: A @ v, b, t=q + 5).x
+    np.testing.assert_allclose(x, jnp.linalg.solve(A, b), rtol=2e-2, atol=2e-3)
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(3, 30),
+       lam=st.floats(1e-5, 1e-1))
+def test_preconditioner_whitens_KMM_regime(seed, m, lam):
+    """When K_nM^T K_nM / n ~= K_MM^2-free regime n==M (centers==data), the
+    preconditioned operator W = B^T H B equals the identity up to the sample
+    fluctuation term E (Lemma 2: W = I + E). With X == C exactly, E = 0 so the
+    eigenvalues of A^{-T}(T^{-T} KMM^T KMM T^{-1}/M + lam I)A^{-1} are all 1."""
+    X = _data(seed, m, 3)
+    kern = GaussianKernel(sigma=2.0)
+    KMM = kern(X, X).astype(jnp.float32)
+    pre = make_preconditioner(KMM, lam, n=m, jitter=1e-6)
+    # Build W densely via the operator identities used in falkon.py
+    KnM = KMM  # X == C
+    def W(u):
+        gamma = pre.right(u)
+        w = KnM.T @ (KnM @ gamma) / m
+        out = pre.left(w)
+        from jax.scipy.linalg import solve_triangular
+        ai = solve_triangular(pre.A, u, lower=False)
+        return out + lam * solve_triangular(pre.A, ai, lower=False, trans=1)
+    I = jnp.eye(m)
+    Wm = jax.vmap(W, in_axes=1, out_axes=1)(I)
+    ev = jnp.linalg.eigvalsh((Wm + Wm.T) / 2)
+    np.testing.assert_allclose(np.asarray(ev), 1.0, rtol=0.05, atol=0.05)
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(4, 30),
+       shift=st.floats(-3.0, 3.0))
+def test_gaussian_kernel_translation_invariance(seed, n, shift):
+    X = _data(seed, n, 3)
+    kern = GaussianKernel(sigma=1.1)
+    np.testing.assert_allclose(kern(X, X), kern(X + shift, X + shift),
+                               rtol=1e-4, atol=1e-5)
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1), t=st.integers(1, 10))
+def test_cg_monotone_residual(seed, t):
+    """CG residual norms are (numerically near-)monotone for SPD systems."""
+    q = 12
+    A0 = jax.random.normal(jax.random.PRNGKey(seed), (q, q))
+    A = A0 @ A0.T + q * jnp.eye(q)
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (q,))
+    res = conjugate_gradient(lambda v: A @ v, b, t=t)
+    r = np.asarray(res.residual_norms)
+    # energy-norm is strictly monotone; 2-norm can wiggle — allow 10% slack
+    assert r[-1] <= r[0] * 1.1

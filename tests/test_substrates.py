@@ -1,0 +1,207 @@
+"""Substrate tests: optimizers, schedules, checkpointing, compression,
+data pipeline, trainer fault tolerance, sharding rules, HLO cost analyzer."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (latest_step, load_checkpoint, save_checkpoint,
+                              step_dir)
+from repro.data import ShardedLoader, TokenStreamConfig, token_stream
+from repro.distributed.compression import (compressed_grads, dequantize_int8,
+                                           init_residuals, quantize_int8)
+from repro.distributed.mesh import AxisRules
+from repro.optim import (adafactor, adamw, clip_by_global_norm, global_norm,
+                         sgdm, warmup_cosine)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+def _quadratic_params(key):
+    return {"w": jax.random.normal(key, (8, 4)), "b": jnp.ones((4,))}
+
+
+@pytest.mark.parametrize("make_opt", [adamw, adafactor, sgdm])
+def test_optimizers_reduce_quadratic(make_opt):
+    opt = make_opt()
+    params = _quadratic_params(jax.random.PRNGKey(0))
+    target = jax.tree.map(lambda p: p * 0 + 0.5, params)
+
+    def loss(p):
+        return sum(jnp.sum((a - b) ** 2)
+                   for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(target)))
+
+    state = opt.init(params)
+    l0 = float(loss(params))
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, 0.05)
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_adafactor_state_is_sublinear():
+    opt = adafactor()
+    p = {"w": jnp.zeros((256, 512))}
+    st = opt.init(p)
+    n_state = sum(x.size for x in jax.tree.leaves(st))
+    assert n_state < 256 * 512 / 50  # rows+cols << full matrix
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    assert float(norm) > 30
+
+
+def test_warmup_cosine_schedule():
+    lr = warmup_cosine(1e-3, warmup=10, total=100)
+    assert float(lr(jnp.asarray(0))) < 2e-4
+    assert abs(float(lr(jnp.asarray(10))) - 1e-3) < 1e-4
+    assert float(lr(jnp.asarray(99))) < 3e-4
+
+
+# ---------------------------------------------------------------------------
+# Compression
+# ---------------------------------------------------------------------------
+def test_int8_quantization_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,))
+    q, s = quantize_int8(x)
+    err = jnp.max(jnp.abs(dequantize_int8(q, s) - x))
+    assert float(err) <= float(s) * 0.51 + 1e-6  # half-ulp of the scale
+
+
+def test_error_feedback_reduces_bias():
+    """With error feedback, the *accumulated* compressed gradient converges to
+    the accumulated true gradient (residual stays bounded)."""
+    g = {"w": jax.random.normal(jax.random.PRNGKey(1), (64,)) * 1e-3}
+    res = init_residuals(g)
+    total_true = jnp.zeros((64,))
+    total_comp = jnp.zeros((64,))
+    for i in range(50):
+        gi = {"w": g["w"] * (1 + 0.1 * i)}
+        comp, res = compressed_grads(gi, res)
+        total_true += gi["w"]
+        total_comp += comp["w"]
+    drift = float(jnp.linalg.norm(total_comp - total_true) /
+                  jnp.linalg.norm(total_true))
+    assert drift < 0.05, drift
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip_and_atomicity():
+    tree = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16)}}
+    with tempfile.TemporaryDirectory() as d:
+        p = step_dir(d, 3)
+        save_checkpoint(p, tree, 3, blocking=True)
+        like = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+        out, step = load_checkpoint(p, like)
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(tree["a"]))
+        assert out["b"]["c"].dtype == jnp.bfloat16
+        assert latest_step(d) == 3
+        # shape mismatch must be caught loudly (not silently truncated)
+        bad = {"a": jnp.zeros((4, 4)), "b": {"c": jnp.ones((5,), jnp.bfloat16)}}
+        with pytest.raises(ValueError):
+            load_checkpoint(p, bad)
+
+
+def test_checkpoint_async_then_restore():
+    tree = {"w": jnp.full((16,), 7.0)}
+    with tempfile.TemporaryDirectory() as d:
+        t = save_checkpoint(step_dir(d, 1), tree, 1, blocking=False)
+        t.join()
+        out, _ = load_checkpoint(step_dir(d, 1), tree)
+        assert float(out["w"][0]) == 7.0
+
+
+# ---------------------------------------------------------------------------
+# Data
+# ---------------------------------------------------------------------------
+def test_token_stream_deterministic_and_restartable():
+    cfg = TokenStreamConfig(vocab=64, seq_len=16, batch=2)
+    a = [next(token_stream(cfg, seed=3)) for _ in range(1)][0]
+    b = [next(token_stream(cfg, seed=3)) for _ in range(1)][0]
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    # labels are next-token shifted
+    np.testing.assert_array_equal(np.asarray(a["tokens"][:, 1:]),
+                                  np.asarray(a["labels"][:, :-1]))
+
+
+def test_sharded_loader_prefetch():
+    cfg = TokenStreamConfig(vocab=16, seq_len=8, batch=2)
+
+    def gen():
+        it = token_stream(cfg, seed=0)
+        for _ in range(5):
+            yield next(it)
+
+    loader = ShardedLoader(gen(), mesh=None, prefetch=2)
+    batches = list(loader)
+    assert len(batches) == 5
+    assert batches[0]["tokens"].shape == (2, 8)
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+def test_axis_rules_divisibility_fallback():
+    # no mesh available with >1 device here; use a fake mesh via spec logic
+    import jax.sharding as shd
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    mesh = shd.Mesh(devs, ("data", "model"))
+    rules = AxisRules(mesh=mesh)
+    # every dim divides a size-1 axis: spec assigns named axes
+    spec = rules.spec_for((8, 16, 64), ("batch", None, "heads"))
+    assert spec[0] == ("data",) or spec[0] == "data"
+
+
+def test_axis_rules_replicates_non_divisible():
+    """Check against a simulated 16-way axis using the pure spec logic."""
+    import jax.sharding as shd
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+
+    rules = AxisRules(mesh=FakeMesh())
+    # gemma3-1b: 4 heads on a 16-way model axis -> replicated; ff shards
+    spec = rules.spec_for((1152, 4, 256), ("embed", "heads", None))
+    assert len(spec) == 0 or all(s is None for s in spec)
+    spec2 = rules.spec_for((1152, 6912), ("embed", "ff"))
+    assert spec2[1] == "model" or spec2[1] == ("model",)
+    # kv cache: batch/data + seq absorbs model when kv_heads can't shard
+    spec3 = rules.spec_for((128, 32768, 8, 128),
+                           ("batch", "kv_seq", "kv_heads", None))
+    flat = [s for s in spec3]
+    assert any(s in ("model", ("model",)) for s in flat if s), spec3
+
+
+# ---------------------------------------------------------------------------
+# HLO cost analyzer
+# ---------------------------------------------------------------------------
+def test_hlo_cost_trip_count_scaling():
+    from repro.roofline.hlo_cost import analyze
+    M = 256
+
+    def loop(a, b):
+        def body(c, _):
+            return c @ b, None
+        out, _ = jax.lax.scan(body, a, None, length=7)
+        return out
+
+    a = jax.ShapeDtypeStruct((M, M), jnp.float32)
+    b = jax.ShapeDtypeStruct((M, M), jnp.float32)
+    compiled = jax.jit(loop).lower(a, b).compile()
+    cost = analyze(compiled.as_text())
+    assert abs(cost.flops / (7 * 2 * M ** 3) - 1.0) < 0.01
+    assert cost.unbounded_whiles == 0
