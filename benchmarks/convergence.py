@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import enable_x64
 from repro.core import (FalkonConfig, falkon_fit, falkon_solve,
                         make_preconditioner, nystrom_direct, uniform_centers)
 from repro.data.synthetic import KernelTask, make_kernel_dataset
@@ -40,7 +41,7 @@ def run(fast: bool = True):
     # the unstable one — that is the paper's own point about conditioning)
     kern = FalkonConfig(kernel="gaussian",
                         kernel_params=(("sigma", 3.0),)).make_kernel()
-    with jax.enable_x64(True):
+    with enable_x64(True):
         X64 = X.astype(jnp.float64)
         y64 = y.astype(jnp.float64)
         sel = uniform_centers(jax.random.PRNGKey(2), X64, 300)

@@ -15,12 +15,14 @@ def main() -> None:
                     help="substring filter on module name")
     args = ap.parse_args()
 
-    from . import (convergence, roofline_report, table1_complexity,
-                   table2_regression, table3_classification)
+    from . import (convergence, roofline_report, sweep_fusion,
+                   table1_complexity, table2_regression,
+                   table3_classification)
     mods = [("table1_complexity", table1_complexity),
             ("table2_regression", table2_regression),
             ("table3_classification", table3_classification),
             ("convergence", convergence),
+            ("sweep_fusion", sweep_fusion),
             ("roofline_report", roofline_report)]
     print("name,us_per_call,derived")
     for name, mod in mods:

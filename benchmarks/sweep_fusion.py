@@ -1,0 +1,105 @@
+"""Fused single-pass sweep vs. legacy two-matmul sweep vs. jnp reference.
+
+The FALKON hot loop is ``w = K_nM^T (K_nM u + v)`` once per CG iteration.
+This benchmark times three implementations at several (n, M, d) points:
+
+* ``fused``    — one Pallas pass, each Gram tile evaluated once
+                 (``repro.ops`` "pallas" backend / ``fused_sweep_pallas``).
+* ``two_pass`` — the pre-refactor composition of two kernel matmuls, each
+                 Gram tile evaluated twice (``two_pass_knm_matvec``).
+* ``jnp``      — the blocked lax.scan reference backend.
+
+Besides wall-clock it records the analytically known Gram-tile evaluation
+counts (the fused kernel's int32 counter is cross-checked), since on non-TPU
+hosts the Pallas kernels run in interpret mode and wall-clock is
+Python-emulation noise — tile evals and HBM bytes are the hardware-portable
+metric. Results go to stdout as CSV rows (benchmarks/run.py contract) and to
+``BENCH_sweep.json``.
+
+    PYTHONPATH=src python -m benchmarks.sweep_fusion [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import GaussianKernel, spec_of
+from repro.kernels.kernel_matvec import fused_sweep_pallas, sweep_tile_grid
+from repro.kernels.ops import two_pass_knm_matvec
+from repro.ops import get_ops
+
+from .common import emit, timed
+
+FAST_POINTS = [(2048, 256, 16), (2048, 512, 32), (4096, 512, 16)]
+FULL_POINTS = [(65536, 1024, 32), (131072, 2048, 64), (262144, 4096, 32)]
+
+
+def _tile_counts(n: int, M: int, block_m: int, block_n: int) -> tuple[int, int]:
+    nbi, nbj = sweep_tile_grid(n, M, block_m, block_n)
+    return nbi * nbj, 2 * nbi * nbj  # fused vs two-pass evaluations per sweep
+
+
+def run(fast: bool = True):
+    points = FAST_POINTS if fast else FULL_POINTS
+    interpret = jax.default_backend() != "tpu"
+    kern = GaussianKernel(sigma=2.0)
+    block_m, block_n = 256, 512
+    rows, records = [], []
+
+    for (n, M, d) in points:
+        ks = jax.random.split(jax.random.PRNGKey(n + M + d), 4)
+        X = jax.random.normal(ks[0], (n, d))
+        C = jax.random.normal(ks[1], (M, d))
+        u = jax.random.normal(ks[2], (M,))
+        v = jax.random.normal(ks[3], (n,))
+
+        fused = jax.jit(lambda X, C, u, v: fused_sweep_pallas(
+            X, C, u, v, spec=spec_of(kern), block_m=block_m, block_n=block_n,
+            interpret=interpret))
+        two = jax.jit(lambda X, C, u, v: two_pass_knm_matvec(
+            X, C, u, v, kern, block_size=block_m))
+        jops = get_ops("jnp", kern, block_size=2048)
+        jref = jax.jit(lambda X, C, u, v: jops.sweep(X, C, u, v))
+
+        _, t_fused = timed(fused, X, C, u, v)
+        _, t_two = timed(two, X, C, u, v)
+        _, t_jnp = timed(jref, X, C, u, v)
+
+        # counter cross-check: the kernel reports one eval per tile
+        _, cnt = fused_sweep_pallas(X, C, u, v, spec=spec_of(kern),
+                                    block_m=block_m, block_n=block_n,
+                                    interpret=interpret,
+                                    return_tile_count=True)
+        evals_fused, evals_two = _tile_counts(n, M, block_m, block_n)
+        assert int(cnt) == evals_fused, (int(cnt), evals_fused)
+
+        rec = dict(n=n, M=M, d=d, block_m=block_m, block_n=block_n,
+                   backend=jax.default_backend(), interpret=interpret,
+                   us_fused=round(t_fused * 1e6, 1),
+                   us_two_pass=round(t_two * 1e6, 1),
+                   us_jnp=round(t_jnp * 1e6, 1),
+                   speedup_vs_two_pass=round(t_two / t_fused, 3),
+                   tile_evals_fused=evals_fused,
+                   tile_evals_two_pass=evals_two)
+        records.append(rec)
+        rows.append(dict(name=f"sweep_fusion/n{n}_M{M}_d{d}",
+                         us_per_call=rec["us_fused"],
+                         **{k: v for k, v in rec.items()
+                            if k not in ("n", "M", "d", "us_fused")}))
+
+    out = os.environ.get("BENCH_SWEEP_JSON", "BENCH_sweep.json")
+    with open(out, "w") as f:
+        json.dump({"benchmark": "sweep_fusion", "records": records}, f,
+                  indent=2)
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    run(fast=not ap.parse_args().full)

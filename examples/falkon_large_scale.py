@@ -27,7 +27,9 @@ def main():
     ap.add_argument("--iters", type=int, default=15)
     ap.add_argument("--mesh", default=None, help="e.g. 8 or 4x2")
     ap.add_argument("--pallas", action="store_true",
-                    help="use the fused Pallas kernel matvec")
+                    help="use the fused single-pass Pallas sweep backend")
+    ap.add_argument("--precision", default="fp32", choices=("fp32", "bf16"),
+                    help="bf16 = bf16 inputs / fp32 accumulation")
     args = ap.parse_args()
 
     n = args.n
@@ -48,10 +50,11 @@ def main():
     cfg = FalkonConfig(
         kernel="gaussian", kernel_params=(("sigma", 4.0),),
         lam=float(1 / n ** 0.5), num_centers=M, iterations=args.iters,
-        block_size=4096, matvec_impl="pallas" if args.pallas else "jnp",
+        block_size=4096, ops_impl="pallas" if args.pallas else "jnp",
+        precision=args.precision,
     )
     print(f"n={n} d={args.d} M={M} t={args.iters} lam={cfg.lam:.2e} "
-          f"impl={cfg.matvec_impl}")
+          f"impl={cfg.impl} precision={cfg.precision}")
     t0 = time.perf_counter()
     est, state = falkon_fit(jax.random.PRNGKey(2), X, y, cfg, mesh=mesh,
                             data_axes=data_axes if mesh else ("data",))

@@ -9,6 +9,11 @@ scaling): leaves are loaded on host and device_put with the new shardings.
 Writes go through a tmp-dir + atomic rename so a preemption mid-write never
 corrupts the latest checkpoint; an optional background thread makes the save
 async (fault tolerance without stalling the step loop).
+
+``zstandard`` is an optional dependency: when missing, leaves are written
+uncompressed as ``.npy.raw`` (the manifest records the codec per checkpoint,
+so mixed environments interoperate — reading a zstd checkpoint without the
+module is the only unsupported combination and raises a clear error).
 """
 from __future__ import annotations
 
@@ -21,9 +26,17 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
-import zstandard as zstd
 
 _SEP = "/"
+
+
+def _zstd():
+    """Lazy optional import: the zstandard module, or None if unavailable."""
+    try:
+        import zstandard
+        return zstandard
+    except ImportError:
+        return None
 
 
 def _flatten(tree) -> tuple[dict[str, Any], Any]:
@@ -44,12 +57,16 @@ def save_checkpoint(path: str, tree, step: int, *, blocking: bool = True,
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp, exist_ok=True)
-        cctx = zstd.ZstdCompressor(level=3)
-        manifest = {"step": int(step), "extra": extra or {}, "leaves": {}}
+        zstd = _zstd()
+        codec = "zstd" if zstd is not None else "raw"
+        ext = ".npy.zst" if zstd is not None else ".npy.raw"
+        cctx = zstd.ZstdCompressor(level=3) if zstd is not None else None
+        manifest = {"step": int(step), "extra": extra or {}, "codec": codec,
+                    "leaves": {}}
         for k, arr in host.items():
             raw = arr.tobytes()
-            with open(os.path.join(tmp, k + ".npy.zst"), "wb") as f:
-                f.write(cctx.compress(raw))
+            with open(os.path.join(tmp, k + ext), "wb") as f:
+                f.write(cctx.compress(raw) if cctx is not None else raw)
             manifest["leaves"][k] = {
                 "shape": list(arr.shape),
                 "dtype": str(arr.dtype),
@@ -77,16 +94,27 @@ def load_checkpoint(path: str, like_tree, shardings=None) -> tuple[Any, int]:
     leaves_like, treedef = jax.tree.flatten(like_tree)
     shard_leaves = (jax.tree.flatten(shardings)[0] if shardings is not None
                     else [None] * len(leaves_like))
-    dctx = zstd.ZstdDecompressor()
+    codec = manifest.get("codec", "zstd")   # pre-codec manifests were zstd
+    dctx = None
+    if codec == "zstd":
+        zstd = _zstd()
+        if zstd is None:
+            raise RuntimeError(
+                f"checkpoint {path} is zstd-compressed but the optional "
+                "'zstandard' module is not installed")
+        dctx = zstd.ZstdDecompressor()
+    ext = ".npy.zst" if codec == "zstd" else ".npy.raw"
     out = []
     for i, like in enumerate(leaves_like):
         k = f"leaf_{i:05d}"
         meta = manifest["leaves"][k]
-        with open(os.path.join(path, k + ".npy.zst"), "rb") as f:
-            raw = dctx.decompress(f.read(),
-                                  max_output_size=int(
-                                      np.prod(meta["shape"]) *
-                                      np.dtype(meta["dtype"]).itemsize) or 1)
+        with open(os.path.join(path, k + ext), "rb") as f:
+            raw = f.read()
+            if dctx is not None:
+                raw = dctx.decompress(raw,
+                                      max_output_size=int(
+                                          np.prod(meta["shape"]) *
+                                          np.dtype(meta["dtype"]).itemsize) or 1)
         arr = np.frombuffer(raw, dtype=meta["dtype"]).reshape(meta["shape"])
         exp_shape = tuple(getattr(like, "shape", ()) or ())
         if tuple(arr.shape) != exp_shape:

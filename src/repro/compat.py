@@ -1,0 +1,45 @@
+"""JAX API compatibility shims (repo pin: jax==0.4.37).
+
+JAX moves fast; these wrappers give tests/benchmarks one stable import for
+APIs that have migrated across versions:
+
+* ``enable_x64``  — ``jax.enable_x64`` (newer) -> ``jax.experimental.enable_x64``
+                    (0.4.x). Context manager: ``with enable_x64(True): ...``
+* ``use_mesh``    — ``jax.sharding.use_mesh`` -> ``jax.set_mesh`` ->
+                    entering the ``Mesh`` object itself (0.4.x context
+                    manager). Context manager: ``with use_mesh(mesh): ...``
+"""
+from __future__ import annotations
+
+import jax
+
+
+def enable_x64(new_val: bool = True):
+    """Context manager enabling (or disabling) 64-bit types."""
+    fn = getattr(jax, "enable_x64", None)
+    if fn is not None:
+        return fn(new_val)
+    from jax.experimental import enable_x64 as _enable_x64
+    return _enable_x64(new_val)
+
+
+def use_mesh(mesh):
+    """Context manager making ``mesh`` the ambient mesh."""
+    fn = getattr(jax.sharding, "use_mesh", None)
+    if fn is None:
+        fn = getattr(jax, "set_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    return mesh  # jax.sharding.Mesh is its own context manager on 0.4.x
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict across JAX versions.
+
+    Older versions returned a per-program list of dicts (often length 1);
+    newer ones return the dict directly (or None for trivial programs).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}

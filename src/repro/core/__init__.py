@@ -6,18 +6,22 @@ Public API:
     conjugate_gradient
     select_centers, uniform_centers, leverage_score_centers,
     approximate_leverage_scores, exact_leverage_scores
-    make_kernel, GaussianKernel, LaplacianKernel, Matern32Kernel,
-    LinearKernel, PolynomialKernel
-    knm_matvec, knm_apply, make_distributed_matvec
+    make_kernel, KernelSpec, spec_of, GaussianKernel, LaplacianKernel,
+    Matern32Kernel, LinearKernel, PolynomialKernel
+    knm_matvec, knm_apply, make_distributed_matvec   (KernelOps delegates)
     baselines: krr_direct, krr_gradient, nystrom_direct, nystrom_gradient
+
+Kernel compute is pluggable: the ``repro.ops`` KernelOps registry ("jnp"
+reference / "pallas" fused) backs every sweep, apply and gram above.
 """
 from .baselines import (krr_direct, krr_gradient, nystrom_direct,
                         nystrom_gradient)
 from .cg import CGResult, conjugate_gradient
 from .falkon import (FalkonConfig, FalkonEstimator, FalkonState, falkon_fit,
                      falkon_solve)
-from .kernels import (GaussianKernel, KernelFn, LaplacianKernel, LinearKernel,
-                      Matern32Kernel, PolynomialKernel, make_kernel)
+from .kernels import (GaussianKernel, KernelFn, KernelSpec, LaplacianKernel,
+                      LinearKernel, Matern32Kernel, PolynomialKernel,
+                      available_kernels, make_kernel, spec_of)
 from .matvec import knm_apply, knm_matvec, make_distributed_matvec
 from .nystrom import (NystromCenters, approximate_leverage_scores,
                       exact_leverage_scores, leverage_score_centers,

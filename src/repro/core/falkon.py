@@ -5,6 +5,12 @@ data sweep over the mesh data axes (see matvec.py) — the preconditioner and th
 (q,)-sized CG state are replicated (they are O(M^2)/O(M), the paper's memory
 budget).
 
+All kernel work flows through a pluggable ``KernelOps`` backend
+(``repro.ops``): ``FalkonConfig.ops_impl`` selects it ("jnp" reference or
+"pallas" fused single-pass sweep) and ``FalkonConfig.precision`` sets the
+input/accumulate policy ("fp32" or "bf16" inputs with fp32 accumulation).
+``matvec_impl`` is kept as a deprecated alias of ``ops_impl``.
+
 The solve is fully jittable: ``falkon_solve`` is a pure function of
 (X, y, centers, preconditioner) so it can be lowered/compiled for the dry-run
 like any train_step.
@@ -12,18 +18,18 @@ like any train_step.
 from __future__ import annotations
 
 import dataclasses
-import time
-from functools import partial
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from .cg import CGResult, conjugate_gradient
+from repro.ops import KernelOps, get_ops
+
+from .cg import conjugate_gradient
 from .kernels import KernelFn, make_kernel
-from .matvec import knm_apply, knm_matvec, make_distributed_matvec
-from .nystrom import NystromCenters, select_centers
+from .matvec import make_distributed_matvec
+from .nystrom import select_centers
 from .preconditioner import Preconditioner, make_preconditioner
 
 Array = jax.Array
@@ -41,12 +47,24 @@ class FalkonConfig:
     block_size: int = 2048
     jitter: float | None = None
     rank_deficient: bool = False
-    matvec_impl: str = "jnp"               # "jnp" | "pallas"
+    ops_impl: str = "jnp"                  # KernelOps backend: "jnp" | "pallas"
+    precision: str = "fp32"                # "fp32" | "bf16" (fp32 accumulate)
+    matvec_impl: str | None = None         # deprecated alias of ops_impl
     tol: float = 0.0
     dtype: str = "float32"
 
+    @property
+    def impl(self) -> str:
+        """Resolved backend name (honors the deprecated ``matvec_impl``)."""
+        return self.matvec_impl if self.matvec_impl is not None else self.ops_impl
+
     def make_kernel(self) -> KernelFn:
         return make_kernel(self.kernel, **dict(self.kernel_params))
+
+    def make_ops(self, kernel: KernelFn | None = None) -> KernelOps:
+        return get_ops(self.impl, kernel if kernel is not None
+                       else self.make_kernel(),
+                       block_size=self.block_size, precision=self.precision)
 
 
 class FalkonState(NamedTuple):
@@ -66,10 +84,15 @@ class FalkonEstimator:
     alpha: Array
     kernel: KernelFn
     block_size: int = dataclasses.field(metadata=dict(static=True), default=2048)
+    ops_impl: str = dataclasses.field(metadata=dict(static=True), default="jnp")
+    precision: str = dataclasses.field(metadata=dict(static=True), default="fp32")
+
+    def _ops(self) -> KernelOps:
+        return get_ops(self.ops_impl, self.kernel, block_size=self.block_size,
+                       precision=self.precision)
 
     def predict(self, X: Array) -> Array:
-        return knm_apply(X, self.centers, self.alpha, self.kernel,
-                         block_size=self.block_size)
+        return self._ops().apply(X, self.centers, self.alpha)
 
     def __call__(self, X: Array) -> Array:
         return self.predict(X)
@@ -113,22 +136,32 @@ def falkon_solve(
     t: int,
     *,
     block_size: int = 2048,
-    matvec_impl: str = "jnp",
+    ops_impl: str = "jnp",
+    precision: str = "fp32",
+    matvec_impl: str | None = None,
     tol: float = 0.0,
     dist_matvec: Callable | None = None,
     estimate_cond: bool = True,
+    ops: KernelOps | None = None,
 ) -> FalkonState:
-    """Run t preconditioned-CG iterations; return coefficients + diagnostics."""
+    """Run t preconditioned-CG iterations; return coefficients + diagnostics.
+
+    The per-iteration sweep runs on ``ops`` if given, else on the KernelOps
+    backend named by ``ops_impl`` (``matvec_impl`` is a deprecated alias) —
+    unless a ``dist_matvec`` (already backend-bound, see
+    ``make_distributed_matvec``) is supplied.
+    """
     n = X.shape[0]
+    if ops is None:
+        impl = matvec_impl if matvec_impl is not None else ops_impl
+        ops = get_ops(impl, kernel, block_size=block_size, precision=precision)
 
     if dist_matvec is None:
         def matvec(g):
-            return knm_matvec(X, centers, g, None, kernel,
-                              block_size=block_size, impl=matvec_impl)
+            return ops.sweep(X, centers, g, None)
         def rhs_sweep():
             zeros = jnp.zeros((centers.shape[0],) + y.shape[1:], X.dtype)
-            return knm_matvec(X, centers, zeros, y, kernel,
-                              block_size=block_size, impl=matvec_impl)
+            return ops.sweep(X, centers, zeros, y)
     else:
         zeros_u = jnp.zeros((centers.shape[0],) + y.shape[1:], X.dtype)
         matvec = lambda g: dist_matvec(X, centers, g, jnp.zeros_like(y))
@@ -180,9 +213,12 @@ def falkon_fit(
     """Select centers, build the preconditioner, run the solve.
 
     With ``mesh`` given, X/y are swept shard-locally over ``data_axes`` and
-    reduced with one psum per CG iteration (see DESIGN.md §6).
+    reduced with one psum per CG iteration (see DESIGN.md §6). The K_MM Gram
+    block, every CG sweep and the returned estimator's predict path all run
+    on the backend named by ``config.ops_impl``.
     """
     kernel = config.make_kernel()
+    ops = config.make_ops(kernel)
     dt = jnp.dtype(config.dtype)
     X = X.astype(dt)
     y = y.astype(dt)
@@ -192,7 +228,7 @@ def falkon_fit(
     sel = select_centers(key, X, M, kernel=kernel, lam=config.lam,
                          scheme=config.center_selection,
                          pilot_size=config.pilot_size)
-    KMM = kernel(sel.centers, sel.centers)
+    KMM = ops.gram(sel.centers, sel.centers)
     precond = make_preconditioner(
         KMM, config.lam, n, D=sel.D, jitter=config.jitter,
         rank_deficient=config.rank_deficient,
@@ -202,13 +238,15 @@ def falkon_fit(
     if mesh is not None:
         dist = make_distributed_matvec(mesh, data_axes, kernel,
                                        block_size=config.block_size,
-                                       impl=config.matvec_impl)
+                                       impl=config.impl,
+                                       precision=config.precision)
 
     state = falkon_solve(
         X, y, sel.centers, precond, kernel, config.lam, config.iterations,
-        block_size=config.block_size, matvec_impl=config.matvec_impl,
-        tol=config.tol, dist_matvec=dist,
+        block_size=config.block_size, tol=config.tol, dist_matvec=dist,
+        ops=ops,
     )
     est = FalkonEstimator(centers=sel.centers, alpha=state.alpha, kernel=kernel,
-                          block_size=config.block_size)
+                          block_size=config.block_size, ops_impl=config.impl,
+                          precision=config.precision)
     return est, state

@@ -1,47 +1,38 @@
-"""Blocked and distributed K_nM matvecs — the O(nMt) hot loop of FALKON.
+"""Blocked and distributed K_nM matvecs — thin veneer over ``repro.ops``.
 
 The primitive (paper Alg. 1 ``KnM_times_vector``) is, for block b of X:
 
     w += K(X_b, C)^T (K(X_b, C) u + v_b)
 
 so one sweep over the data computes ``K_nM^T (K_nM u + v)`` in O(M * block)
-memory without ever materializing K_nM. Three implementations:
+memory without ever materializing K_nM. Since the KernelOps refactor the
+actual implementations live in the pluggable backend layer:
 
-* ``knm_matvec``      — jnp, lax.scan over row blocks (reference/CPU path).
-* Pallas              — ``repro.kernels.ops.fused_knm_matvec`` (TPU target),
-                        selected via ``impl="pallas"``.
-* ``make_distributed_matvec`` — shard_map over the mesh data axes: each device
-  sweeps its local shard and contributions are psum-reduced. This is how the
-  single-machine paper algorithm becomes a multi-pod one: the sweep is
-  embarrassingly data-parallel in n, the psum is the only communication
-  (M floats per iteration).
+* ``repro.ops.jnp_backend``    — lax.scan reference (impl="jnp")
+* ``repro.ops.pallas_backend`` — single-pass fused Pallas sweep
+                                 (impl="pallas"; each Gram tile computed once)
+
+This module keeps the historical functional API (``knm_matvec``,
+``knm_apply``) as one-line delegates, and owns the distributed wrapper:
+``make_distributed_matvec`` shard_maps a backend's ``sweep`` over the mesh
+data axes — each device sweeps its local shard with whichever backend was
+selected (the distributed path gets the fused kernel for free) and
+contributions are psum-reduced. This is how the single-machine paper
+algorithm becomes a multi-pod one: the sweep is embarrassingly data-parallel
+in n, the psum is the only communication (M floats per iteration).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.ops import get_ops
 
 from .kernels import KernelFn
 
 Array = jax.Array
-
-
-def _pad_blocks(X: Array, v: Array | None, block_size: int):
-    """Pad rows of X (and v) to a multiple of block_size; return mask."""
-    n = X.shape[0]
-    nb = -(-n // block_size)
-    pad = nb * block_size - n
-    Xp = jnp.pad(X, ((0, pad), (0, 0)))
-    mask = jnp.pad(jnp.ones((n,), X.dtype), (0, pad))
-    vp = None
-    if v is not None:
-        widths = ((0, pad),) + ((0, 0),) * (v.ndim - 1)
-        vp = jnp.pad(v, widths)
-    return Xp.reshape(nb, block_size, X.shape[1]), mask.reshape(nb, block_size), vp, nb
 
 
 def knm_matvec(
@@ -53,38 +44,14 @@ def knm_matvec(
     *,
     block_size: int = 2048,
     impl: str = "jnp",
+    precision: str = "fp32",
 ) -> Array:
     """Return ``K_nM^T (K_nM u + v)`` with blocked O(M * block) memory.
 
     ``u``: (M,) or (M, p); ``v``: (n,) or (n, p) or None (treated as 0).
     """
-    if impl == "pallas":
-        from repro.kernels.ops import fused_knm_matvec
-        return fused_knm_matvec(X, C, u, v, kernel, block_size=block_size)
-
-    n = X.shape[0]
-    Xb, mask, vp, nb = _pad_blocks(X, v, block_size)
-    out_shape = (C.shape[0],) + u.shape[1:]
-    if vp is not None:
-        vb = vp.reshape((nb, block_size) + v.shape[1:])
-
-    def body(carry, inp):
-        if v is None:
-            xb, mb = inp
-            Kb = kernel(xb, C) * mb[:, None]          # mask padded rows
-            t = Kb @ u
-        else:
-            xb, mb, vblk = inp
-            Kb = kernel(xb, C) * mb[:, None]
-            # Kb's zeroed rows already null padded contributions in Kb.T @ t;
-            # masking v too keeps t finite for arbitrary padded v.
-            t = Kb @ u + vblk * (mb[:, None] if vblk.ndim > 1 else mb)
-        return carry + Kb.T @ t, None
-
-    init = jnp.zeros(out_shape, X.dtype)
-    xs = (Xb, mask) if v is None else (Xb, mask, vb)
-    w, _ = jax.lax.scan(body, init, xs)
-    return w
+    ops = get_ops(impl, kernel, block_size=block_size, precision=precision)
+    return ops.sweep(X, C, u, v)
 
 
 def knm_apply(
@@ -94,17 +61,12 @@ def knm_apply(
     kernel: KernelFn,
     *,
     block_size: int = 2048,
+    impl: str = "jnp",
+    precision: str = "fp32",
 ) -> Array:
     """Return ``K_nM u`` (prediction path), blocked over rows of X."""
-    n = X.shape[0]
-    Xb, mask, _, nb = _pad_blocks(X, None, block_size)
-
-    def body(xb):
-        return kernel(xb, C) @ u
-
-    out = jax.lax.map(body, Xb)
-    out = out.reshape((nb * Xb.shape[1],) + u.shape[1:])
-    return out[:n]
+    ops = get_ops(impl, kernel, block_size=block_size, precision=precision)
+    return ops.apply(X, C, u)
 
 
 def make_distributed_matvec(
@@ -114,18 +76,21 @@ def make_distributed_matvec(
     *,
     block_size: int = 2048,
     impl: str = "jnp",
+    precision: str = "fp32",
 ) -> Callable:
     """shard_map-wrapped ``K_nM^T (K_nM u + v)`` over the mesh data axes.
 
     X, v are sharded over ``data_axes``; C, u replicated; output replicated
     (psum over data axes). One call = one full data sweep = 4 * n_local * M
-    flops per device + one (M, p) psum.
+    flops per device + one (M, p) psum. The local sweep runs on whichever
+    KernelOps backend ``impl`` names.
     """
     from jax.experimental.shard_map import shard_map
 
+    ops = get_ops(impl, kernel, block_size=block_size, precision=precision)
+
     def local(Xl, C, u, vl):
-        w = knm_matvec(Xl, C, u, vl, kernel, block_size=block_size, impl=impl)
-        return jax.lax.psum(w, data_axes)
+        return jax.lax.psum(ops.sweep(Xl, C, u, vl), data_axes)
 
     xspec = P(data_axes)
     return shard_map(

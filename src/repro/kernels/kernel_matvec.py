@@ -1,21 +1,37 @@
 """Pallas TPU kernels for FALKON's O(nMt) hot loop.
 
-The primitive is a *kernel matmul*: ``out = K(A, B) @ V`` with the Gram tile
-``K(A_i, B_j)`` computed on the fly in VMEM (pairwise squared distances via one
-MXU matmul ``-2 A_i B_j^T`` plus row/col norms on the VPU, then the kernel's
-elementwise map) and immediately contracted against ``V_j`` on the MXU. The
-(bm x bn) Gram tile never touches HBM — this is the paper's "compute K_nM in
-blocks" insight mapped onto the HBM->VMEM->MXU hierarchy.
+Two primitives:
 
-A full FALKON sweep ``w = K_nM^T (K_nM u + v)`` is two kernel matmuls
-(K(X,C) @ u then K(C,X) @ t, using K^T(X,C) = K(C,X)) — see ops.py.
+* ``kernel_matmul_pallas`` — ``out = K(A, B) @ V`` with the Gram tile
+  ``K(A_i, B_j)`` computed on the fly in VMEM (pairwise precursors via one MXU
+  matmul ``A_i B_j^T`` plus row/col norms on the VPU, then the registered
+  kernel's elementwise map) and immediately contracted against ``V_j`` on the
+  MXU. The (bm x bn) Gram tile never touches HBM.
 
-Grid: (i over A-tiles, j over B-tiles), j minor. The output block (indexed by
-i only) is revisited across j and accumulated in a fp32 VMEM scratch,
-initialised at j == 0 and flushed at j == last — the standard Pallas reduction
-pattern. Tile sizes default to (256, 512) rows — multiples of the 128-wide MXU
-systolic dimensions; the wrapper pads every operand to tile multiples (zero
-rows of B are harmless: their kernel value is masked via a validity mask).
+* ``fused_sweep_pallas`` — the whole FALKON CG sweep
+  ``w = K(X,C)^T (K(X,C) u + v)`` in ONE pass over the data: for each (i, j)
+  grid tile the Gram tile ``K(X_i, C_j)`` is computed exactly once, staged in
+  a VMEM row-strip scratch, used for the forward product ``t_i += K_ij u_j``,
+  and — once the row strip is complete — re-read from VMEM for the transposed
+  accumulation ``w_j += K_ij^T t_i`` into a persistent fp32 VMEM accumulator.
+  Versus composing two ``kernel_matmul_pallas`` calls this halves kernel-tile
+  evaluations and HBM round-trips per CG iteration: every Gram entry is
+  evaluated once and never re-materialized.
+
+Kernel math is NOT duplicated here: both kernels evaluate tiles through
+``repro.core.kernels.tile_transform`` keyed by a declarative ``KernelSpec``,
+so every kernel registered in ``core/kernels.py`` (gaussian, laplacian,
+matern32, linear, polynomial, ...) runs on the Pallas path with no
+per-backend kernel lists.
+
+Grid conventions: (i over A/X row tiles, j over B/C tiles), j minor.
+Accumulators are fp32 VMEM scratch initialised on the first visit and flushed
+on the last — the standard Pallas reduction pattern. Inputs may be bf16
+(``precision='bf16'`` upstream): the distance/dot matmuls feed the MXU in the
+input dtype with ``preferred_element_type=float32``, i.e. bf16-in/fp32-
+accumulate. Tile sizes default to multiples of the 128-wide MXU systolic
+dimensions; wrappers pad every operand to tile multiples and mask padded rows
+with in-kernel iota masks (no mask operands in HBM).
 """
 from __future__ import annotations
 
@@ -24,25 +40,71 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.kernels import KernelSpec, tile_transform
 
 Array = jax.Array
 
-LANE = 128  # MXU/VREG lane width — last-dim tile alignment
+LANE = 128   # MXU/VREG lane width — last-dim tile alignment
+SUBLANE = 8  # fp32 sublane granularity
 
 
-def _kernel_elementwise(sq, kind: str, scale: float):
-    if kind == "gaussian":
-        return jnp.exp(-0.5 / (scale * scale) * sq)
-    if kind == "laplacian":
-        return jnp.exp(-jnp.sqrt(sq + 1e-12) / scale)
-    if kind == "matern32":
-        a = jnp.sqrt(3.0) * jnp.sqrt(sq + 1e-12) / scale
-        return (1.0 + a) * jnp.exp(-a)
-    raise ValueError(f"pallas path does not support kernel {kind!r}")
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
 
 
-def _kernel_matmul_kernel(a_ref, b_ref, v_ref, bmask_ref, o_ref, acc_ref, *,
-                          kind: str, scale: float, nbj: int):
+def _as_spec(kind: str, scale: float, spec: KernelSpec | None) -> KernelSpec:
+    """Back-compat shim: legacy (kind, scale) callers -> KernelSpec.
+
+    Only the sigma-kernels are expressible through the legacy signature;
+    kernels with more params (polynomial's degree/c) must come in as a spec —
+    defaulting them silently would compute the wrong Gram values.
+    """
+    if spec is not None:
+        return spec
+    if kind in ("gaussian", "laplacian", "matern32"):
+        return KernelSpec(kind, (("sigma", scale),))
+    raise ValueError(
+        f"legacy (kind, scale) interface supports only the sigma kernels; "
+        f"pass spec=KernelSpec(...) for {kind!r}")
+
+
+def sweep_block_dims(n: int, M: int, block_m: int, block_n: int
+                     ) -> tuple[int, int]:
+    """(bm, bn) the fused sweep actually tiles with — the single source of
+    the rounding policy, used by ``fused_sweep_pallas`` itself and by the
+    grid/count derivations below."""
+    bm = min(_round_up(block_m, SUBLANE), _round_up(n, SUBLANE))
+    bn = min(_round_up(block_n, LANE), _round_up(M, LANE))
+    return bm, bn
+
+
+def sweep_tile_grid(n: int, M: int, block_m: int, block_n: int
+                    ) -> tuple[int, int]:
+    """(nbi, nbj) tile grid the fused sweep runs over for these shapes —
+    benchmarks and tests derive expected Gram-tile evaluation counts from
+    this: one per tile."""
+    bm, bn = sweep_block_dims(n, M, block_m, block_n)
+    return -(-n // bm), -(-M // bn)
+
+
+def _tile(a, b, spec: KernelSpec) -> Array:
+    """K(a, b) tile: one MXU matmul + VPU elementwise, fp32 accumulate."""
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    a2 = jnp.sum(af * af, axis=-1, keepdims=True)              # (bm, 1) VPU
+    b2 = jnp.sum(bf * bf, axis=-1, keepdims=True).T            # (1, bn) VPU
+    ab = jax.lax.dot_general(                                   # (bm, bn) MXU
+        a, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    return tile_transform(ab, a2, b2, spec)
+
+
+# ---------------------------------------------------------------------------
+# kernel matmul: out = K(A, B) @ V
+# ---------------------------------------------------------------------------
+def _kernel_matmul_kernel(a_ref, b_ref, v_ref, o_ref, acc_ref, *,
+                          spec: KernelSpec, n_valid: int, bn: int, nbj: int):
     """One (i, j) grid step: acc_i += K(A_i, B_j) @ V_j."""
     j = pl.program_id(1)
 
@@ -50,17 +112,11 @@ def _kernel_matmul_kernel(a_ref, b_ref, v_ref, bmask_ref, o_ref, acc_ref, *,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    a = a_ref[...].astype(jnp.float32)           # (bm, d)
-    b = b_ref[...].astype(jnp.float32)           # (bn, d)
-    v = v_ref[...].astype(jnp.float32)           # (bn, p)
-    bmask = bmask_ref[...].astype(jnp.float32)   # (1, bn) 1=valid row of B
-
-    a2 = jnp.sum(a * a, axis=-1, keepdims=True)               # (bm, 1) VPU
-    b2 = jnp.sum(b * b, axis=-1, keepdims=True).T             # (1, bn) VPU
-    ab = jax.lax.dot_general(                                  # (bm, bn) MXU
-        a, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
-    sq = jnp.maximum(a2 + b2 - 2.0 * ab, 0.0)
-    k = _kernel_elementwise(sq, kind, scale) * bmask           # mask padded B
+    # mask padded B rows: global column index >= n_valid has no data
+    col = j * bn + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
+    bmask = (col < n_valid).astype(jnp.float32)
+    k = _tile(a_ref[...], b_ref[...], spec) * bmask
+    v = v_ref[...].astype(jnp.float32)
     acc_ref[...] += jax.lax.dot_general(                       # (bm, p) MXU
         k, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
 
@@ -72,83 +128,223 @@ def _kernel_matmul_kernel(a_ref, b_ref, v_ref, bmask_ref, o_ref, acc_ref, *,
 def kernel_matmul_pallas(
     A: Array, B: Array, V: Array, *,
     kind: str = "gaussian", scale: float = 1.0,
+    spec: KernelSpec | None = None,
     block_m: int = 256, block_n: int = 512,
     interpret: bool = True,
 ) -> Array:
     """out = K(A, B) @ V with on-the-fly Gram tiles.
 
     A: (m, d), B: (n, d), V: (n, p) -> (m, p). All shapes may be ragged; the
-    wrapper pads to tile multiples and masks padded B rows. ``interpret=True``
+    wrapper pads to tile multiples and masks padded B rows. Pass either a
+    ``spec`` (preferred) or legacy ``kind``/``scale``. ``interpret=True``
     runs the kernel body in Python (CPU validation); on TPU pass False.
     """
+    spec = _as_spec(kind, scale, spec)
     m, d = A.shape
     n, _ = B.shape
     p = V.shape[1]
     out_dtype = jnp.promote_types(A.dtype, V.dtype)
 
-    bm = min(block_m, max(8, m))
-    bn = min(block_n, max(8, n))
-    mp = -(-m // bm) * bm
-    np_ = -(-n // bn) * bn
-    dp = -(-d // LANE) * LANE
-    pp = -(-p // LANE) * LANE
+    bm = min(_round_up(block_m, SUBLANE), _round_up(m, SUBLANE))
+    bn = min(_round_up(block_n, LANE), _round_up(n, LANE))
+    mp = _round_up(m, bm)
+    np_ = _round_up(n, bn)
+    dp = _round_up(d, LANE)
+    pp = _round_up(p, LANE)
 
     Ap = jnp.pad(A, ((0, mp - m), (0, dp - d)))
     Bp = jnp.pad(B, ((0, np_ - n), (0, dp - d)))
     Vp = jnp.pad(V, ((0, np_ - n), (0, pp - p)))
-    bmask = (jnp.arange(np_) < n).astype(A.dtype)[None, :]     # (1, np_)
 
     nbi, nbj = mp // bm, np_ // bn
 
-    from jax.experimental.pallas import tpu as pltpu
-
     out = pl.pallas_call(
-        functools.partial(_kernel_matmul_kernel, kind=kind, scale=scale,
-                          nbj=nbj),
+        functools.partial(_kernel_matmul_kernel, spec=spec, n_valid=n,
+                          bn=bn, nbj=nbj),
         grid=(nbi, nbj),
         in_specs=[
             pl.BlockSpec((bm, dp), lambda i, j: (i, 0)),      # A_i
             pl.BlockSpec((bn, dp), lambda i, j: (j, 0)),      # B_j
             pl.BlockSpec((bn, pp), lambda i, j: (j, 0)),      # V_j
-            pl.BlockSpec((1, bn), lambda i, j: (0, j)),       # mask_j
         ],
         out_specs=pl.BlockSpec((bm, pp), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((mp, pp), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, pp), jnp.float32)],   # fp32 accum
         interpret=interpret,
-    )(Ap, Bp, Vp, bmask)
+    )(Ap, Bp, Vp)
     return out[:m, :p]
 
 
-def _pairwise_kernel(a_ref, b_ref, o_ref, *, kind: str, scale: float):
-    a = a_ref[...].astype(jnp.float32)
-    b = b_ref[...].astype(jnp.float32)
-    a2 = jnp.sum(a * a, axis=-1, keepdims=True)
-    b2 = jnp.sum(b * b, axis=-1, keepdims=True).T
-    ab = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
-                             preferred_element_type=jnp.float32)
-    sq = jnp.maximum(a2 + b2 - 2.0 * ab, 0.0)
-    o_ref[...] = _kernel_elementwise(sq, kind, scale).astype(o_ref.dtype)
+# ---------------------------------------------------------------------------
+# fused sweep: w = K(X, C)^T (K(X, C) u + v) in ONE pass over X
+# ---------------------------------------------------------------------------
+def _fused_sweep_kernel(x_ref, c_ref, u_ref, *rest,
+                        spec: KernelSpec, has_v: bool,
+                        n_valid: int, m_valid: int,
+                        bm: int, bn: int, nbi: int, nbj: int):
+    """One (i, j) grid step of the single-pass sweep.
+
+    Per step: the Gram tile K_ij is computed ONCE, staged into the row-strip
+    scratch ``strip[j]``, and folded into ``t_i += K_ij u_j``. When the strip
+    for row block i is complete (j == nbj-1), ``t_i`` gains ``v_i``, padded X
+    rows are masked, and the strip is swept a second time FROM VMEM for
+    ``w_j += K_ij^T t_i`` — no kernel re-evaluation, no HBM round-trip.
+    """
+    if has_v:
+        v_ref, o_ref, cnt_ref, strip_ref, t_ref, w_ref = rest
+    else:
+        o_ref, cnt_ref, strip_ref, t_ref, w_ref = rest
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init_w():
+        w_ref[...] = jnp.zeros_like(w_ref)
+        cnt_ref[0, 0] = 0
+
+    @pl.when(j == 0)
+    def _init_t():
+        t_ref[...] = jnp.zeros_like(t_ref)
+
+    # K_ij evaluated exactly once per (i, j): count it.
+    col = j * bn + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
+    cmask = (col < m_valid).astype(jnp.float32)                # pad cols of C
+    k = _tile(x_ref[...], c_ref[...], spec) * cmask            # (bm, bn)
+    strip_ref[j] = k
+    u = u_ref[...].astype(jnp.float32)                         # (bn, p)
+    t_ref[...] += jax.lax.dot_general(                         # (bm, p) MXU
+        k, u, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    cnt_ref[0, 0] += 1
+
+    @pl.when(j == nbj - 1)
+    def _accumulate():
+        t = t_ref[...]
+        if has_v:
+            t = t + v_ref[...].astype(jnp.float32)
+        row = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
+        t = t * (row < n_valid).astype(jnp.float32)            # pad rows of X
+
+        def body(jj, _):
+            w_ref[jj] += jax.lax.dot_general(                  # (bn, p) MXU
+                strip_ref[jj], t, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            return 0
+
+        jax.lax.fori_loop(0, nbj, body, 0)
+
+    @pl.when((i == nbi - 1) & (j == nbj - 1))
+    def _flush():
+        o_ref[...] = w_ref[...].astype(o_ref.dtype)
+
+
+def fused_sweep_pallas(
+    X: Array, C: Array, u: Array, v: Array | None, *,
+    spec: KernelSpec,
+    block_m: int = 256, block_n: int = 512,
+    interpret: bool = True,
+    return_tile_count: bool = False,
+) -> Array | tuple[Array, Array]:
+    """w = K(X,C)^T (K(X,C) u + v) — one fused pass, each Gram tile once.
+
+    X: (n, d), C: (M, d), u: (M, p), v: (n, p) or None -> (M, p).
+
+    VMEM residency per step: one (bm, d) X tile, one (bn, d) C tile, the
+    row-strip scratch (nbj, bm, bn) and the fp32 accumulator (nbj, bn, p) —
+    i.e. O(bm * M + M * p) scratch, the paper's O(M) working-set budget times
+    the block height. With ``return_tile_count=True`` also returns the number
+    of Gram-tile evaluations the kernel performed (an int32 scalar; equals
+    ceil(n/bm) * ceil(M/bn) — exactly one evaluation per tile, which is the
+    fusion claim and is asserted by tests/test_kernel_ops.py).
+    """
+    n, d = X.shape
+    M, _ = C.shape
+    squeeze = u.ndim == 1
+    u2 = u[:, None] if squeeze else u
+    v2 = None if v is None else (v[:, None] if squeeze else v)
+    p = u2.shape[1]
+    out_dtype = jnp.promote_types(X.dtype, u.dtype)
+
+    bm, bn = sweep_block_dims(n, M, block_m, block_n)
+    npad = _round_up(n, bm)
+    Mpad = _round_up(M, bn)
+    dp = _round_up(d, LANE)
+    pp = _round_up(p, LANE)
+    nbi, nbj = npad // bm, Mpad // bn
+
+    Xp = jnp.pad(X, ((0, npad - n), (0, dp - d)))
+    Cp = jnp.pad(C, ((0, Mpad - M), (0, dp - d)))
+    up = jnp.pad(u2, ((0, Mpad - M), (0, pp - p)))
+
+    has_v = v2 is not None
+    in_specs = [
+        pl.BlockSpec((bm, dp), lambda i, j: (i, 0)),          # X_i
+        pl.BlockSpec((bn, dp), lambda i, j: (j, 0)),          # C_j
+        pl.BlockSpec((bn, pp), lambda i, j: (j, 0)),          # u_j
+    ]
+    operands = [Xp, Cp, up]
+    if has_v:
+        vp = jnp.pad(v2, ((0, npad - n), (0, pp - p)))
+        in_specs.append(pl.BlockSpec((bm, pp), lambda i, j: (i, 0)))  # v_i
+        operands.append(vp)
+
+    out, cnt = pl.pallas_call(
+        functools.partial(
+            _fused_sweep_kernel, spec=spec, has_v=has_v,
+            n_valid=n, m_valid=M, bm=bm, bn=bn, nbi=nbi, nbj=nbj),
+        grid=(nbi, nbj),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((nbj, bn, pp), lambda i, j: (0, 0, 0)),   # w
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),                 # tile count
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nbj, bn, pp), out_dtype),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((nbj, bm, bn), jnp.float32),   # Gram row strip
+            pltpu.VMEM((bm, pp), jnp.float32),        # t_i = K_i u + v_i
+            pltpu.VMEM((nbj, bn, pp), jnp.float32),   # fp32 w accumulator
+        ],
+        interpret=interpret,
+    )(*operands)
+
+    w = out.reshape(Mpad, pp)[:M, :p]
+    if squeeze:
+        w = w[:, 0]
+    if return_tile_count:
+        return w, cnt[0, 0]
+    return w
+
+
+# ---------------------------------------------------------------------------
+# pairwise kernel: K(A, B) materialized (preconditioner's K_MM builder)
+# ---------------------------------------------------------------------------
+def _pairwise_kernel(a_ref, b_ref, o_ref, *, spec: KernelSpec):
+    o_ref[...] = _tile(a_ref[...], b_ref[...], spec).astype(o_ref.dtype)
 
 
 def pairwise_kernel_pallas(
     A: Array, B: Array, *, kind: str = "gaussian", scale: float = 1.0,
+    spec: KernelSpec | None = None,
     block_m: int = 256, block_n: int = 256, interpret: bool = True,
 ) -> Array:
     """Materialize K(A, B) tile-by-tile (used to build K_MM for the
     preconditioner). Grid (i, j) with one output tile per step."""
+    spec = _as_spec(kind, scale, spec)
     m, d = A.shape
     n, _ = B.shape
-    bm = min(block_m, max(8, m))
-    bn = min(block_n, max(8, n))
-    mp = -(-m // bm) * bm
-    np_ = -(-n // bn) * bn
-    dp = -(-d // LANE) * LANE
+    bm = min(_round_up(block_m, SUBLANE), _round_up(m, SUBLANE))
+    bn = min(_round_up(block_n, LANE), _round_up(n, LANE))
+    mp = _round_up(m, bm)
+    np_ = _round_up(n, bn)
+    dp = _round_up(d, LANE)
     Ap = jnp.pad(A, ((0, mp - m), (0, dp - d)))
     Bp = jnp.pad(B, ((0, np_ - n), (0, dp - d)))
 
     out = pl.pallas_call(
-        functools.partial(_pairwise_kernel, kind=kind, scale=scale),
+        functools.partial(_pairwise_kernel, spec=spec),
         grid=(mp // bm, np_ // bn),
         in_specs=[
             pl.BlockSpec((bm, dp), lambda i, j: (i, 0)),

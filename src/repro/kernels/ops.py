@@ -1,33 +1,30 @@
-"""jit'd wrappers around the Pallas kernels, with jnp fallback.
+"""jit'd wrappers around the Pallas kernels, with interpret-mode fallback.
 
-``fused_knm_matvec`` is the drop-in replacement for
-``repro.core.matvec.knm_matvec`` (selected via FalkonConfig.matvec_impl =
-"pallas"): one FALKON CG sweep ``w = K_nM^T (K_nM u + v)`` as two kernel
-matmuls. On non-TPU backends the kernels run in interpret mode (Python
-emulation — correctness only); on TPU they compile to Mosaic.
+This module is the thin waist between the ``repro.ops`` backend layer (see
+``repro/ops/pallas_backend.py``) and the raw ``pl.pallas_call`` kernels in
+``kernel_matvec.py``. Kernels are identified by their declarative
+``KernelSpec`` (``repro.core.kernels.spec_of``) — there is no class-name
+sniffing and no per-backend list of supported kernels: anything registered in
+``core/kernels.py`` runs here.
+
+``fused_knm_matvec`` is the single-pass FALKON sweep
+``w = K_nM^T (K_nM u + v)``: each Gram tile is computed once in VMEM and used
+for both the forward product and the transposed accumulation
+(``fused_sweep_pallas``). ``two_pass_knm_matvec`` keeps the legacy
+two-kernel-matmul composition (every Gram tile evaluated twice) for A/B
+benchmarking — see ``benchmarks/sweep_fusion.py``. On non-TPU backends the
+kernels run in interpret mode (Python emulation — correctness only); on TPU
+they compile to Mosaic.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
-import jax.numpy as jnp
 
-from .kernel_matvec import kernel_matmul_pallas, pairwise_kernel_pallas
+from repro.core.kernels import spec_of
+from .kernel_matvec import (fused_sweep_pallas, kernel_matmul_pallas,
+                            pairwise_kernel_pallas)
 
 Array = jax.Array
-
-_SUPPORTED = ("gaussian", "laplacian", "matern32")
-
-
-def _kernel_kind_scale(kernel) -> tuple[str, float]:
-    name = type(kernel).__name__.lower()
-    for kind in _SUPPORTED:
-        if kind.replace("32", "") in name or kind in name:
-            return kind, float(getattr(kernel, "sigma"))
-    raise ValueError(
-        f"pallas matvec supports {_SUPPORTED}, got {type(kernel).__name__}; "
-        "use matvec_impl='jnp'")
 
 
 def _interpret() -> bool:
@@ -38,16 +35,29 @@ def fused_knm_matvec(
     X: Array, C: Array, u: Array, v: Array | None, kernel, *,
     block_size: int = 2048,
 ) -> Array:
-    """w = K(X,C)^T (K(X,C) u + v), Gram tiles VMEM-resident only."""
-    kind, scale = _kernel_kind_scale(kernel)
+    """w = K(X,C)^T (K(X,C) u + v), single pass, Gram tiles VMEM-resident
+    only and evaluated exactly once each."""
+    return fused_sweep_pallas(
+        X, C, u, v, spec=spec_of(kernel),
+        block_m=min(block_size, 256), interpret=_interpret())
+
+
+def two_pass_knm_matvec(
+    X: Array, C: Array, u: Array, v: Array | None, kernel, *,
+    block_size: int = 2048,
+) -> Array:
+    """Legacy sweep as two kernel matmuls (K(X,C) @ u then K(C,X) @ t, using
+    K^T(X,C) = K(C,X)). Evaluates every Gram tile twice — kept only as the
+    baseline the fused kernel is benchmarked against."""
+    spec = spec_of(kernel)
     squeeze = u.ndim == 1
     u2 = u[:, None] if squeeze else u
-    t = kernel_matmul_pallas(X, C, u2, kind=kind, scale=scale,
+    t = kernel_matmul_pallas(X, C, u2, spec=spec,
                              block_m=min(block_size, 256),
                              interpret=_interpret())
     if v is not None:
         t = t + (v[:, None] if squeeze else v)
-    w = kernel_matmul_pallas(C, X, t, kind=kind, scale=scale,
+    w = kernel_matmul_pallas(C, X, t, spec=spec,
                              block_m=min(block_size, 256),
                              interpret=_interpret())
     return w[:, 0] if squeeze else w
@@ -55,10 +65,10 @@ def fused_knm_matvec(
 
 def kernel_matmul(A: Array, B: Array, V: Array, kernel, *,
                   block_m: int = 256, block_n: int = 512) -> Array:
-    kind, scale = _kernel_kind_scale(kernel)
+    """out = K(A, B) @ V (the prediction path's primitive)."""
     squeeze = V.ndim == 1
     V2 = V[:, None] if squeeze else V
-    out = kernel_matmul_pallas(A, B, V2, kind=kind, scale=scale,
+    out = kernel_matmul_pallas(A, B, V2, spec=spec_of(kernel),
                                block_m=block_m, block_n=block_n,
                                interpret=_interpret())
     return out[:, 0] if squeeze else out
@@ -67,7 +77,6 @@ def kernel_matmul(A: Array, B: Array, V: Array, kernel, *,
 def pairwise_kernel(A: Array, B: Array, kernel, *,
                     block_m: int = 256, block_n: int = 256) -> Array:
     """K(A, B) materialized (preconditioner's K_MM builder)."""
-    kind, scale = _kernel_kind_scale(kernel)
-    return pairwise_kernel_pallas(A, B, kind=kind, scale=scale,
+    return pairwise_kernel_pallas(A, B, spec=spec_of(kernel),
                                   block_m=block_m, block_n=block_n,
                                   interpret=_interpret())

@@ -1,29 +1,30 @@
-"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth).
+
+Kernel math comes from the same ``tile_transform`` registry the Pallas bodies
+use (``repro.core.kernels``), so an oracle/kernel mismatch can only be a
+tiling/masking bug, never a formula drift.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.kernels import KernelSpec, tile_eval
+
 Array = jax.Array
 
 
-def _sqdist(A: Array, B: Array) -> Array:
-    a2 = jnp.sum(A * A, axis=-1, keepdims=True)
-    b2 = jnp.sum(B * B, axis=-1, keepdims=True).T
-    return jnp.maximum(a2 + b2 - 2.0 * (A @ B.T), 0.0)
+def _spec(kind: str, scale: float) -> KernelSpec:
+    if kind in ("gaussian", "laplacian", "matern32"):
+        return KernelSpec(kind, (("sigma", scale),))
+    raise ValueError(
+        f"legacy (kind, scale) interface supports only the sigma kernels; "
+        f"use tile_eval with a full KernelSpec for {kind!r}")
 
 
 def kernel_tile(A: Array, B: Array, kind: str, scale: float) -> Array:
-    """K(A, B) for the kernels the Pallas path supports."""
-    sq = _sqdist(A, B)
-    if kind == "gaussian":
-        return jnp.exp(-0.5 / (scale * scale) * sq)
-    if kind == "laplacian":
-        return jnp.exp(-jnp.sqrt(sq + 1e-12) / scale)
-    if kind == "matern32":
-        a = jnp.sqrt(3.0) * jnp.sqrt(sq + 1e-12) / scale
-        return (1.0 + a) * jnp.exp(-a)
-    raise ValueError(kind)
+    """K(A, B) for any registered kernel kind."""
+    return tile_eval(_spec(kind, scale), A, B)
 
 
 def kernel_matmul_ref(A: Array, B: Array, V: Array, kind: str,

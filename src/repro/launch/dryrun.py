@@ -120,7 +120,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, *,
         compiled = lowered.compile()
         mem = memory_report(compiled)
         print(compiled.memory_analysis())     # proves it fits (or not)
-        cost = dict(compiled.cost_analysis())
+        from repro.compat import cost_analysis_dict
+        cost = cost_analysis_dict(compiled)
         print({k: v for k, v in cost.items()
                if k in ("flops", "bytes accessed")})
         roof = derive_roofline(compiled, chips=chips, model_flops=model_flops)

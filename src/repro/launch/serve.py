@@ -1,7 +1,16 @@
-"""Serving launcher: batched prefill + decode loop.
+"""Serving launcher: batched LM prefill+decode loop, or a FALKON predictor.
+
+LM mode (default):
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
         --batch 4 --gen 32
+
+FALKON mode — fit a kernel estimator and serve batched predictions through a
+pluggable KernelOps backend (the same ``repro.ops`` layer the trainer uses,
+so the fused Pallas apply path serves traffic with no extra glue):
+
+    PYTHONPATH=src python -m repro.launch.serve --falkon --ops-impl pallas \
+        --batch 256 --requests 20
 """
 from __future__ import annotations
 
@@ -12,18 +21,10 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ARCH_IDS, get_config, reduced_config
-from repro.models import decode_step, model_params, prefill
 
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma3-1b", choices=ARCH_IDS)
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
-    args = ap.parse_args()
+def serve_lm(args) -> None:
+    from repro.configs import ARCH_IDS, get_config, reduced_config
+    from repro.models import decode_step, model_params, prefill
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     if cfg.frontend == "embeds":
@@ -56,6 +57,69 @@ def main():
     print(f"{cfg.name}: prefill {B}x{P} in {t_prefill*1e3:.0f}ms; "
           f"decode {t_decode*1e3:.1f}ms/token/batch")
     print("sample:", jnp.stack(out, 1)[0, :12].tolist())
+
+
+def serve_falkon(args) -> None:
+    """Fit once, then serve batched predict requests via KernelOps.apply."""
+    from repro.core import FalkonConfig, falkon_fit
+
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    n, d = args.n, args.d
+    X = jax.random.normal(k1, (n, d))
+    w = jax.random.normal(k2, (d,))
+    y = jnp.sin(X @ w) + 0.05 * jax.random.normal(k3, (n,))
+
+    cfg = FalkonConfig(kernel="gaussian", kernel_params=(("sigma", 2.0),),
+                       lam=1e-5, num_centers=args.centers, iterations=15,
+                       block_size=max(args.batch, 128),
+                       ops_impl=args.ops_impl, precision=args.precision)
+    t0 = time.perf_counter()
+    est, state = falkon_fit(jax.random.PRNGKey(1), X, y, cfg)
+    jax.block_until_ready(est.alpha)
+    t_fit = time.perf_counter() - t0
+
+    # The serving step is the estimator's predict — KernelOps.apply on the
+    # backend baked into the estimator — jitted once; the per-request work
+    # is one (batch, M) kernel matmul streamed through VMEM.
+    step = jax.jit(lambda xb: est.predict(xb))
+    xb = jax.random.normal(jax.random.PRNGKey(2), (args.batch, d))
+    jax.block_until_ready(step(xb))         # compile
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        xb = jax.random.normal(jax.random.PRNGKey(3 + i), (args.batch, d))
+        jax.block_until_ready(step(xb))
+    t_req = (time.perf_counter() - t0) / max(args.requests, 1)
+    print(f"falkon[{cfg.impl}/{cfg.precision}]: fit n={n} M={est.centers.shape[0]} "
+          f"in {t_fit:.2f}s; predict batch={args.batch} in {t_req*1e3:.2f}ms "
+          f"({args.batch/t_req:.0f} rows/s); cond(W)={float(state.cond_estimate):.1f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--falkon", action="store_true",
+                    help="serve a FALKON predictor instead of an LM")
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    # FALKON-mode knobs
+    ap.add_argument("--ops-impl", default="jnp", choices=("jnp", "pallas"),
+                    help="KernelOps backend for fit + serving")
+    ap.add_argument("--precision", default="fp32", choices=("fp32", "bf16"))
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--d", type=int, default=16)
+    ap.add_argument("--centers", type=int, default=256)
+    ap.add_argument("--requests", type=int, default=10)
+    args = ap.parse_args()
+
+    if args.falkon:
+        serve_falkon(args)
+    else:
+        from repro.configs import ARCH_IDS
+        if args.arch not in ARCH_IDS:
+            raise SystemExit(f"unknown arch {args.arch}; have {ARCH_IDS}")
+        serve_lm(args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,18 @@
+"""Pluggable kernel-op backends (the ``KernelOps`` layer).
+
+    from repro.ops import get_ops
+    ops = get_ops("pallas", kernel, block_size=2048, precision="bf16")
+    w   = ops.sweep(X, C, u, v)     # K^T (K u + v)  — one CG iteration
+    yh  = ops.apply(Xte, C, alpha)  # K u            — prediction
+    KMM = ops.gram(C, C)            # K(A, B)        — preconditioner
+
+See ``base.py`` for the protocol/registry, ``jnp_backend.py`` for the
+reference implementation and ``pallas_backend.py`` for the fused TPU path.
+"""
+from .base import (KernelOps, OpsBase, PRECISIONS, available_ops, get_ops,
+                   register_ops)
+from . import jnp_backend as _jnp_backend    # noqa: F401  (registers "jnp")
+from . import pallas_backend as _pallas_backend  # noqa: F401  ("pallas")
+
+__all__ = ["KernelOps", "OpsBase", "PRECISIONS", "available_ops", "get_ops",
+           "register_ops"]

@@ -1,0 +1,107 @@
+"""The ``KernelOps`` backend protocol and registry.
+
+FALKON's entire O(n sqrt(n)) time budget reduces to three primitives over an
+(n, d) dataset ``X``, (M, d) Nystrom centers ``C`` and coefficient vectors:
+
+    sweep(X, C, u, v)  =  K(X,C)^T (K(X,C) u + v)    — one CG iteration
+    apply(X, C, u)     =  K(X,C) u                    — the prediction path
+    gram(A, B)         =  K(A, B)                     — the preconditioner path
+
+A ``KernelOps`` backend implements exactly these three, parameterized by a
+kernel object carrying a declarative ``KernelSpec`` (see
+``repro.core.kernels``). Backends are selected by name from a registry:
+
+    ops = get_ops("pallas", kernel, block_size=2048, precision="bf16")
+    w = ops.sweep(X, C, u, v)
+
+Registered implementations:
+
+* ``"jnp"``    — pure-jnp blocked reference (lax.scan over row blocks); runs
+                 anywhere, fp32/fp64, the numerical ground truth.
+* ``"pallas"`` — fused TPU path: the sweep is ONE Pallas pass that computes
+                 each Gram tile once (see ``repro.kernels.kernel_matvec``).
+
+Everything above this layer (core/matvec.py, core/falkon.py, the distributed
+shard_map wrapper, serving, benchmarks) talks to a KernelOps and never to a
+concrete kernel implementation. This module deliberately has no imports from
+``repro.core`` or ``repro.kernels`` so it can never participate in an import
+cycle; backends duck-type the kernel via its ``spec`` attribute / call.
+
+``precision`` is the input/accumulate policy of the hot loop:
+
+* ``"fp32"`` (default) — inputs and accumulation in float32 (or float64
+  under x64).
+* ``"bf16"`` — X and C are quantized to bfloat16 before entering the
+  bandwidth-bound ``sweep``/``apply`` (halving HBM traffic and feeding the
+  MXU bf16 inputs); all contractions still accumulate in float32, and
+  ``gram`` (the preconditioner's Cholesky input) stays full precision.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, runtime_checkable
+
+PRECISIONS = ("fp32", "bf16")
+
+
+@runtime_checkable
+class KernelOps(Protocol):
+    """The three primitives the whole codebase needs — and nothing else."""
+
+    kernel: Any
+    block_size: int
+    precision: str
+
+    def sweep(self, X, C, u, v=None):
+        """K(X,C)^T (K(X,C) u + v); ``v=None`` means v == 0."""
+        ...
+
+    def apply(self, X, C, u):
+        """K(X,C) u — the prediction path."""
+        ...
+
+    def gram(self, A, B):
+        """K(A, B) materialized — the preconditioner path."""
+        ...
+
+
+_REGISTRY: dict[str, type] = {}
+
+
+def register_ops(name: str):
+    """Class decorator registering a KernelOps implementation under ``name``."""
+    def deco(cls):
+        cls.impl_name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def available_ops() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_ops(impl: str, kernel, *, block_size: int = 2048,
+            precision: str = "fp32") -> KernelOps:
+    """Construct the named backend for ``kernel``.
+
+    ``kernel`` must carry a ``KernelSpec`` (anything built by
+    ``repro.core.kernels.make_kernel`` / ``@register_kernel`` does).
+    """
+    if impl not in _REGISTRY:
+        raise ValueError(
+            f"unknown KernelOps impl {impl!r}; registered: {available_ops()}")
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"unknown precision {precision!r}; supported: {PRECISIONS}")
+    return _REGISTRY[impl](kernel=kernel, block_size=block_size,
+                           precision=precision)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpsBase:
+    """Shared constructor shape for backends (kernel + static knobs)."""
+
+    kernel: Any
+    block_size: int = 2048
+    precision: str = "fp32"

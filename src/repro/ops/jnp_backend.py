@@ -1,0 +1,101 @@
+"""Reference ``KernelOps`` backend: pure jnp, blocked, runs anywhere.
+
+The sweep is the paper's Alg. 1 ``KnM_times_vector``: a ``lax.scan`` over row
+blocks of X, each step materializing one (block, M) Gram strip, using it for
+both the forward product and the transposed accumulation, then discarding it —
+O(M * block) memory, never the full K_nM. This is the numerical ground truth
+the Pallas backend is tested against (same math via the shared
+``tile_transform`` registry), and the fp64-capable path for the theory tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .base import OpsBase, register_ops
+
+Array = jax.Array
+
+
+def _pad_blocks(X: Array, v: Array | None, block_size: int):
+    """Pad rows of X (and v) to a multiple of block_size; return mask."""
+    n = X.shape[0]
+    nb = -(-n // block_size)
+    pad = nb * block_size - n
+    Xp = jnp.pad(X, ((0, pad), (0, 0)))
+    mask = jnp.pad(jnp.ones((n,), X.dtype), (0, pad))
+    vp = None
+    if v is not None:
+        widths = ((0, pad),) + ((0, 0),) * (v.ndim - 1)
+        vp = jnp.pad(v, widths)
+    return Xp.reshape(nb, block_size, X.shape[1]), mask.reshape(nb, block_size), vp, nb
+
+
+@register_ops("jnp")
+@dataclasses.dataclass(frozen=True)
+class JnpKernelOps(OpsBase):
+    """Blocked lax.scan reference implementation of the three primitives."""
+
+    def _inputs(self, X: Array, C: Array) -> tuple[Array, Array]:
+        if self.precision == "bf16":
+            # bf16 input quantization, fp32 compute — mirrors the Pallas
+            # backend's bf16-in/fp32-accumulate policy bit-for-policy (not
+            # bit-for-bit: MXU bf16 matmuls round differently).
+            f32 = jnp.float32
+            return (X.astype(jnp.bfloat16).astype(f32),
+                    C.astype(jnp.bfloat16).astype(f32))
+        return X, C
+
+    def sweep(self, X: Array, C: Array, u: Array, v: Array | None = None) -> Array:
+        """K_nM^T (K_nM u + v) with blocked O(M * block) memory.
+
+        ``u``: (M,) or (M, p); ``v``: (n,) or (n, p) or None (treated as 0).
+        """
+        X, C = self._inputs(X, C)
+        block_size = self.block_size
+        kernel = self.kernel
+        Xb, mask, vp, nb = _pad_blocks(X, v, block_size)
+        out_shape = (C.shape[0],) + u.shape[1:]
+        if vp is not None:
+            vb = vp.reshape((nb, block_size) + v.shape[1:])
+
+        def body(carry, inp):
+            if v is None:
+                xb, mb = inp
+                Kb = kernel(xb, C) * mb[:, None]          # mask padded rows
+                t = Kb @ u
+            else:
+                xb, mb, vblk = inp
+                Kb = kernel(xb, C) * mb[:, None]
+                # Kb's zeroed rows already null padded contributions in
+                # Kb.T @ t; masking v too keeps t finite for arbitrary pads.
+                t = Kb @ u + vblk * (mb[:, None] if vblk.ndim > 1 else mb)
+            return carry + Kb.T @ t, None
+
+        init = jnp.zeros(out_shape, X.dtype)
+        xs = (Xb, mask) if v is None else (Xb, mask, vb)
+        w, _ = jax.lax.scan(body, init, xs)
+        return w
+
+    def apply(self, X: Array, C: Array, u: Array) -> Array:
+        """K_nM u (prediction path), blocked over rows of X."""
+        X, C = self._inputs(X, C)
+        n = X.shape[0]
+        Xb, mask, _, nb = _pad_blocks(X, None, self.block_size)
+        kernel = self.kernel
+
+        def body(xb):
+            return kernel(xb, C) @ u
+
+        out = jax.lax.map(body, Xb)
+        out = out.reshape((nb * Xb.shape[1],) + u.shape[1:])
+        return out[:n]
+
+    def gram(self, A: Array, B: Array) -> Array:
+        """K(A, B) dense (M x M for the preconditioner — paper's memory
+        budget, no blocking needed). Always full precision: the Cholesky
+        downstream is the numerically fragile step, and the bf16 policy's
+        bandwidth win does not apply to this one-shot block."""
+        return self.kernel(A, B)

@@ -1,0 +1,126 @@
+"""Fused Pallas ``KernelOps`` backend (TPU target; interpret mode elsewhere).
+
+* ``sweep`` — the headline kernel: ONE Pallas pass per CG iteration. Each
+  (block_m x block_n) Gram tile is computed once in VMEM, used for the forward
+  product ``t = K u (+ v)`` and re-read from the VMEM row strip for the
+  transposed accumulation ``w += K^T t`` into an fp32 scratch — half the
+  kernel-tile evaluations and HBM round-trips of the two-matmul composition.
+* ``apply`` / ``gram`` — thin wrappers over the kernel-matmul and pairwise
+  Pallas kernels.
+
+With ``precision="bf16"`` the data operands (X, C) are cast to bfloat16 before
+entering the bandwidth-bound kernels (``sweep``/``apply``); the
+distance/contraction matmuls then feed the MXU bf16 inputs with
+``preferred_element_type=float32`` (bf16-in/fp32-accumulate). Coefficients,
+v, outputs — and the one-shot ``gram`` feeding the Cholesky — stay full
+precision.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .base import OpsBase, register_ops
+
+Array = jax.Array
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@register_ops("pallas")
+@dataclasses.dataclass(frozen=True)
+class PallasKernelOps(OpsBase):
+    """KernelOps over the fused Pallas kernels, keyed by the kernel's spec."""
+
+    @property
+    def _spec(self):
+        from repro.core.kernels import spec_of
+        return spec_of(self.kernel)
+
+    @property
+    def _block_m(self) -> int:
+        return min(self.block_size, 256)
+
+    def _inputs(self, X: Array, C: Array) -> tuple[Array, Array]:
+        if self.precision == "bf16":
+            return X.astype(jnp.bfloat16), C.astype(jnp.bfloat16)
+        return X, C
+
+    def _fused_fits_vmem(self, n: int, M: int, d: int, p: int) -> bool:
+        """The fused sweep keeps the Gram row strip and the (M, p) accumulator
+        VMEM-resident: scratch ~ (bm * Mpad + Mpad * pp * 2) fp32, on top of
+        the double-buffered (bm, dp)/(bn, dp) input tiles. Past ~16MB of VMEM
+        that fails to compile on real TPUs, so fall back to the two-pass
+        composition there (interpret mode has no such limit)."""
+        if _interpret():
+            return True
+        from repro.kernels.kernel_matvec import sweep_block_dims
+        lane = 128
+        Mpad = -(-M // lane) * lane
+        dp = -(-d // lane) * lane
+        pp = -(-max(p, 1) // lane) * lane
+        bm, bn = sweep_block_dims(n, M, self._block_m, 512)
+        itemsize = 2 if self.precision == "bf16" else 4
+        scratch_bytes = 4 * (bm * Mpad + 2 * Mpad * pp + bm * pp)
+        # inputs/outputs are pipelined double-buffered: X_i, C_j, u_j, v_i
+        io_bytes = 2 * (itemsize * (bm + bn) * dp + 4 * (bn + bm) * pp)
+        return scratch_bytes + io_bytes <= 12 * 2**20
+
+    def sweep(self, X: Array, C: Array, u: Array, v: Array | None = None) -> Array:
+        from repro.kernels.kernel_matvec import fused_sweep_pallas
+        from repro.kernels.ops import two_pass_knm_matvec
+        X, C = self._inputs(X, C)
+        p = u.shape[1] if u.ndim > 1 else 1
+        if not self._fused_fits_vmem(X.shape[0], C.shape[0], X.shape[1], p):
+            return two_pass_knm_matvec(X, C, u, v, self.kernel,
+                                       block_size=self.block_size)
+        return fused_sweep_pallas(X, C, u, v, spec=self._spec,
+                                  block_m=self._block_m,
+                                  interpret=_interpret())
+
+    def sweep_with_stats(self, X: Array, C: Array, u: Array,
+                         v: Array | None = None) -> tuple[Array, Array]:
+        """sweep() plus the kernel's Gram-tile evaluation counter (int32).
+
+        The counter is the fusion proof: it equals
+        ceil(n/block_m) * ceil(M/block_n) — one evaluation per tile per call.
+        Diagnostic path: it is always the fused kernel, so shapes the VMEM
+        guard would route to the two-pass fallback are rejected here rather
+        than silently measuring a different implementation.
+        """
+        from repro.kernels.kernel_matvec import fused_sweep_pallas
+        X, C = self._inputs(X, C)
+        p = u.shape[1] if u.ndim > 1 else 1
+        if not self._fused_fits_vmem(X.shape[0], C.shape[0], X.shape[1], p):
+            raise ValueError(
+                f"fused sweep scratch for n={X.shape[0]}, M={C.shape[0]}, "
+                f"d={X.shape[1]}, p={p} exceeds the VMEM budget on this "
+                "backend; sweep() would fall back to the two-pass path, "
+                "which has no tile counter")
+        return fused_sweep_pallas(X, C, u, v, spec=self._spec,
+                                  block_m=self._block_m,
+                                  interpret=_interpret(),
+                                  return_tile_count=True)
+
+    def apply(self, X: Array, C: Array, u: Array) -> Array:
+        from repro.kernels.kernel_matvec import kernel_matmul_pallas
+        X, C = self._inputs(X, C)
+        squeeze = u.ndim == 1
+        u2 = u[:, None] if squeeze else u
+        out = kernel_matmul_pallas(X, C, u2, spec=self._spec,
+                                   block_m=self._block_m,
+                                   interpret=_interpret())
+        return out[:, 0] if squeeze else out
+
+    def gram(self, A: Array, B: Array) -> Array:
+        # Full precision regardless of the bf16 policy: gram feeds the
+        # preconditioner's Cholesky (one-shot O(M^2) work with no bandwidth
+        # win to harvest), and bf16 quantization can push a borderline-PSD
+        # K_MM indefinite.
+        from repro.kernels.kernel_matvec import pairwise_kernel_pallas
+        return pairwise_kernel_pallas(A, B, spec=self._spec,
+                                      interpret=_interpret())

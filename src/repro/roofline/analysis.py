@@ -94,8 +94,9 @@ def derive_roofline(compiled, *, chips: int, model_flops: float) -> Roofline:
     XLA's cost_analysis counts while bodies once and is kept only as a
     reference field."""
     from .hlo_cost import analyze
+    from repro.compat import cost_analysis_dict
     cost = analyze(compiled.as_text())
-    ca = compiled.cost_analysis()
+    ca = cost_analysis_dict(compiled)
 
     flops = float(cost.flops)
     byts = float(cost.bytes)

@@ -29,6 +29,7 @@ def test_distributed_matvec_matches_single_device():
     _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.compat import use_mesh
         from repro.core import GaussianKernel, knm_matvec, make_distributed_matvec
         assert len(jax.devices()) == 8
         mesh = jax.make_mesh((4, 2), ("data", "model"))
@@ -42,7 +43,7 @@ def test_distributed_matvec_matches_single_device():
         dmv = make_distributed_matvec(mesh, ("data",), kern, block_size=64)
         Xs = jax.device_put(X, NamedSharding(mesh, P("data")))
         vs = jax.device_put(v, NamedSharding(mesh, P("data")))
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             got = dmv(Xs, C, u, vs)
         np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                    rtol=2e-4, atol=2e-3)
@@ -54,6 +55,7 @@ def test_distributed_fit_matches_single_device():
     _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.compat import use_mesh
         from repro.core import FalkonConfig, falkon_fit
         mesh = jax.make_mesh((8,), ("data",))
         k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
@@ -64,7 +66,7 @@ def test_distributed_fit_matches_single_device():
                            lam=1e-4, num_centers=128, iterations=20,
                            block_size=128)
         est_1, _ = falkon_fit(jax.random.PRNGKey(1), X, y, cfg)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             est_8, _ = falkon_fit(jax.random.PRNGKey(1), X, y, cfg, mesh=mesh,
                                   data_axes=("data",))
         # alpha itself is ill-conditioned in fp32; predictions are the
@@ -82,6 +84,7 @@ def test_distributed_fit_multipod_axes():
     _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.compat import use_mesh
         from repro.core import FalkonConfig, falkon_fit
         mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
         k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
@@ -92,7 +95,7 @@ def test_distributed_fit_multipod_axes():
                            lam=1e-4, num_centers=64, iterations=15,
                            block_size=64)
         est_1, _ = falkon_fit(jax.random.PRNGKey(1), X, y, cfg)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             est_d, _ = falkon_fit(jax.random.PRNGKey(1), X, y, cfg, mesh=mesh,
                                   data_axes=("pod", "data"))
         p1, pd = est_1.predict(X), est_d.predict(X)

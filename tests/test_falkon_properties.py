@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")   # optional dep: skip, never collect-error
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (GaussianKernel, LaplacianKernel, Matern32Kernel,
                         conjugate_gradient, knm_matvec, make_kernel,
