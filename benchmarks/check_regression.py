@@ -1,0 +1,130 @@
+"""Bench-regression gate for the fused sweep (CI: the bench-regression job).
+
+Compares a fresh ``sweep_fusion`` run against the checked-in
+``BENCH_sweep.json`` baseline and exits non-zero on regression. Two gates
+per matching (n, M, d, block_m, block_n) record:
+
+* ``tile_evals_fused`` must equal the baseline exactly — more Gram-tile
+  evaluations per sweep means the single-pass fusion property broke, the
+  one regression that is deterministic and machine-independent.
+* the **geometric mean** of ``speedup_vs_two_pass`` over all matched points
+  (fused wall-clock normalized by the two-pass composition *measured in the
+  same run on the same machine*) must not drop more than
+  ``--max-regression-pct`` (default 20%). Raw microseconds are deliberately
+  NOT gated — CI runners and interpret-mode emulation make absolute
+  wall-clock incomparable across machines — and single points are not
+  gated either: even best-of-5 per-point ratios swing ~15% on shared
+  runners, while the cross-point geomean is stable to a few percent.
+
+Override knobs (documented for CI):
+
+* ``--max-regression-pct N`` or env ``BENCH_MAX_REGRESSION_PCT`` — widen or
+  tighten the throughput band (e.g. a deliberate trade-off PR sets 35).
+* env ``BENCH_SKIP_REGRESSION=1`` — skip the gate entirely (exit 0); for
+  emergencies, the PR description should say why.
+
+    PYTHONPATH=src python -m benchmarks.sweep_fusion --quick  # new run
+    python benchmarks/check_regression.py \
+        --baseline BENCH_sweep.json --candidate BENCH_sweep.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+KEY = ("n", "M", "d", "block_m", "block_n")
+
+
+def _index(records):
+    return {tuple(r[k] for k in KEY): r for r in records}
+
+
+def _geomean(values):
+    prod = 1.0
+    for v in values:
+        prod *= v
+    return prod ** (1.0 / len(values))
+
+
+def compare(baseline: dict, candidate: dict, max_pct: float) -> list[str]:
+    """Return a list of human-readable failures (empty == gate passes)."""
+    base = _index(baseline["records"])
+    cand = _index(candidate["records"])
+    failures = []
+    base_speedups, cand_speedups = [], []
+    for key, b in base.items():
+        c = cand.get(key)
+        if c is None:
+            failures.append(f"{key}: baseline point missing from candidate")
+            continue
+        base_speedups.append(b["speedup_vs_two_pass"])
+        cand_speedups.append(c["speedup_vs_two_pass"])
+        if c["tile_evals_fused"] != b["tile_evals_fused"]:
+            failures.append(
+                f"{key}: tile_evals_fused {c['tile_evals_fused']} != "
+                f"baseline {b['tile_evals_fused']} — single-pass fusion "
+                "property regressed"
+            )
+    if not base_speedups:
+        failures.append("no baseline points matched the candidate run")
+        return failures
+    got = _geomean(cand_speedups)
+    floor = _geomean(base_speedups) * (1.0 - max_pct / 100.0)
+    print(
+        f"speedup_vs_two_pass geomean over {len(cand_speedups)} points: "
+        f"{got:.3f} (floor {floor:.3f})"
+    )
+    if got < floor:
+        failures.append(
+            f"speedup_vs_two_pass geomean {got:.3f} < {floor:.3f} "
+            f"(baseline {_geomean(base_speedups):.3f} - {max_pct:.0f}%)"
+        )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_sweep.json")
+    ap.add_argument(
+        "--candidate",
+        required=True,
+        help="json written by a fresh sweep_fusion run "
+        "(BENCH_SWEEP_JSON=... python -m benchmarks.sweep_fusion --quick)",
+    )
+    ap.add_argument(
+        "--max-regression-pct",
+        type=float,
+        default=float(os.environ.get("BENCH_MAX_REGRESSION_PCT", 20.0)),
+    )
+    args = ap.parse_args(argv)
+
+    if os.environ.get("BENCH_SKIP_REGRESSION") == "1":
+        print("BENCH_SKIP_REGRESSION=1 — bench-regression gate skipped")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.candidate) as f:
+        candidate = json.load(f)
+
+    failures = compare(baseline, candidate, args.max_regression_pct)
+    if failures:
+        print("bench-regression gate FAILED:")
+        for line in failures:
+            print(f"  {line}")
+        print(
+            "(override: --max-regression-pct / BENCH_MAX_REGRESSION_PCT, "
+            "or BENCH_SKIP_REGRESSION=1 with a justification in the PR)"
+        )
+        return 1
+    print(
+        f"bench-regression gate passed: {len(baseline['records'])} points "
+        f"within {args.max_regression_pct:.0f}% of baseline"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,142 @@
+"""Out-of-core FALKON: streaming-loader throughput + sweep-path planning.
+
+Two measurements, written to ``BENCH_streaming.json``:
+
+1. **Streaming vs in-core throughput** — the same ``K_nM^T (K_nM u + y)``
+   sweep run (a) in-core on device-resident X and (b) through the
+   double-buffered host->device ``StreamingLoader`` in ``chunk_rows`` chunks.
+   Reported as rows/s plus ``stream_vs_incore_ratio`` — the acceptance
+   number (the streaming path should sustain >= 0.7 of in-core throughput at
+   the largest in-core-feasible size). Both paths run the jnp backend with
+   the per-chunk sweep jitted, so the ratio isolates streaming overhead
+   (transfer + host loop), not backend differences. Peak memory is reported
+   two ways: the analytic device working set per path (the hardware-portable
+   number — on CPU "device" and host are the same arena) and the process
+   ``ru_maxrss`` high-water mark.
+
+2. **Planner routing** — ``KernelOps.plan()`` decisions of the pallas
+   backend across the M axis, recording where fused hands off to two-pass
+   and j-sharded and the VMEM budget numbers behind each decision.
+
+    PYTHONPATH=src python -m benchmarks.streaming_sweep [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import resource
+
+import jax
+import numpy as np
+
+from repro.core import GaussianKernel
+from repro.data import ArrayChunkSource, StreamingLoader, streaming_sweep
+from repro.data.streaming import JittedOps
+from repro.ops import get_ops
+
+from .common import emit, timed_best
+
+FAST_POINTS = [(16384, 512, 32), (32768, 1024, 32)]
+FULL_POINTS = FAST_POINTS + [(131072, 2048, 32), (262144, 2048, 64)]
+
+CHUNK_ROWS = 8192
+# On CPU the "transfer" shares cores with compute, so the overlap thread
+# only contends — stream inline there; double-buffer on real accelerators.
+PREFETCH = 0 if jax.default_backend() == "cpu" else 2
+
+PLAN_POINTS = [
+    (8192, 1024, 32),
+    (8192, 8192, 32),
+    (8192, 32768, 32),
+    (8192, 131072, 32),
+]
+
+
+def _throughput_point(n: int, M: int, d: int) -> dict:
+    rng = np.random.default_rng(n + M + d)
+    X = rng.standard_normal((n, d), dtype=np.float32)
+    y = rng.standard_normal((n,), dtype=np.float32)
+    u = rng.standard_normal((M,), dtype=np.float32)
+    C = X[:M].copy()
+
+    # JittedOps is the facade falkon_solve_streaming itself runs, so the
+    # streaming side of the ratio measures the real fit path; the in-core
+    # side uses the same jitted sweep for symmetry.
+    ops = JittedOps(get_ops("jnp", GaussianKernel(sigma=2.0), block_size=CHUNK_ROWS))
+    Xd, yd, Cd, ud = map(jax.device_put, (X, y, C, u))
+    _, t_incore = timed_best(ops.sweep, Xd, Cd, ud, yd, repeat=5)
+
+    source = ArrayChunkSource(X, y, chunk_rows=CHUNK_ROWS)
+    loader = StreamingLoader(source, prefetch=PREFETCH)
+    _, t_stream = timed_best(
+        lambda: streaming_sweep(ops, loader, Cd, ud, use_targets=True),
+        repeat=5,
+    )
+
+    itemsize = 4
+    incore_ws = (n * d + n + M * d + M) * itemsize
+    stream_ws = ((PREFETCH + 1) * CHUNK_ROWS * (d + 1) + M * d + M) * itemsize
+    return dict(
+        n=n,
+        M=M,
+        d=d,
+        chunk_rows=CHUNK_ROWS,
+        prefetch=PREFETCH,
+        num_chunks=source.num_chunks,
+        backend=jax.default_backend(),
+        us_incore=round(t_incore * 1e6, 1),
+        us_stream=round(t_stream * 1e6, 1),
+        rows_per_s_incore=round(n / t_incore, 1),
+        rows_per_s_stream=round(n / t_stream, 1),
+        stream_vs_incore_ratio=round(t_incore / t_stream, 3),
+        device_workingset_bytes_incore=incore_ws,
+        device_workingset_bytes_stream=stream_ws,
+        ru_maxrss_kb=resource.getrusage(resource.RUSAGE_SELF).ru_maxrss,
+    )
+
+
+def _plan_point(n: int, M: int, d: int) -> dict:
+    ops = get_ops("pallas", GaussianKernel(sigma=2.0), block_size=2048)
+    plan = dataclasses.asdict(ops.plan(n, M, d, 1))
+    plan["total_bytes"] = plan["scratch_bytes"] + plan["io_bytes"]
+    return plan
+
+
+def run(fast: bool = True):
+    points = FAST_POINTS if fast else FULL_POINTS
+    records = [_throughput_point(*pt) for pt in points]
+    plans = [_plan_point(*pt) for pt in PLAN_POINTS]
+
+    payload = {
+        "benchmark": "streaming_sweep",
+        "records": records,
+        "sweep_plans": plans,
+    }
+    out = os.environ.get("BENCH_STREAMING_JSON", "BENCH_streaming.json")
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+
+    rows = []
+    for r in records:
+        rest = {k: v for k, v in r.items() if k not in ("n", "M", "d", "us_stream")}
+        name = f"streaming_sweep/n{r['n']}_M{r['M']}_d{r['d']}"
+        rows.append(dict(name=name, us_per_call=r["us_stream"], **rest))
+    for p in plans:
+        row = dict(
+            name=f"sweep_plan/M{p['M']}",
+            us_per_call="",
+            path=p["path"],
+            shard_m=p["shard_m"],
+            total_bytes=p["total_bytes"],
+        )
+        rows.append(row)
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    run(fast=not ap.parse_args().full)

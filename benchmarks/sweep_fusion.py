@@ -14,9 +14,10 @@ counts (the fused kernel's int32 counter is cross-checked), since on non-TPU
 hosts the Pallas kernels run in interpret mode and wall-clock is
 Python-emulation noise — tile evals and HBM bytes are the hardware-portable
 metric. Results go to stdout as CSV rows (benchmarks/run.py contract) and to
-``BENCH_sweep.json``.
+``BENCH_sweep.json`` (path override: env ``BENCH_SWEEP_JSON``), which
+``benchmarks/check_regression.py`` gates CI against.
 
-    PYTHONPATH=src python -m benchmarks.sweep_fusion [--full]
+    PYTHONPATH=src python -m benchmarks.sweep_fusion [--quick | --full]
 """
 from __future__ import annotations
 
@@ -25,14 +26,13 @@ import json
 import os
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import GaussianKernel, spec_of
 from repro.kernels.kernel_matvec import fused_sweep_pallas, sweep_tile_grid
 from repro.kernels.ops import two_pass_knm_matvec
 from repro.ops import get_ops
 
-from .common import emit, timed
+from .common import emit, timed_best
 
 FAST_POINTS = [(2048, 256, 16), (2048, 512, 32), (4096, 512, 16)]
 FULL_POINTS = [(65536, 1024, 32), (131072, 2048, 64), (262144, 4096, 32)]
@@ -65,9 +65,12 @@ def run(fast: bool = True):
         jops = get_ops("jnp", kern, block_size=2048)
         jref = jax.jit(lambda X, C, u, v: jops.sweep(X, C, u, v))
 
-        _, t_fused = timed(fused, X, C, u, v)
-        _, t_two = timed(two, X, C, u, v)
-        _, t_jnp = timed(jref, X, C, u, v)
+        # best-of-5: the CI bench gate reads speedup_vs_two_pass off these
+        # numbers, and on shared runners mean timings of interpret-mode
+        # Pallas swing >20% run-to-run; the minimum filters load spikes.
+        _, t_fused = timed_best(fused, X, C, u, v, repeat=5)
+        _, t_two = timed_best(two, X, C, u, v, repeat=5)
+        _, t_jnp = timed_best(jref, X, C, u, v, repeat=5)
 
         # counter cross-check: the kernel reports one eval per tile
         _, cnt = fused_sweep_pallas(X, C, u, v, spec=spec_of(kern),
@@ -101,5 +104,11 @@ def run(fast: bool = True):
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fast points only (the default; kept explicit for "
+                         "the CI bench-regression job)")
     ap.add_argument("--full", action="store_true")
-    run(fast=not ap.parse_args().full)
+    args = ap.parse_args()
+    if args.quick and args.full:
+        raise SystemExit("--quick and --full are mutually exclusive")
+    run(fast=not args.full)

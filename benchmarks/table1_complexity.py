@@ -10,10 +10,9 @@ from __future__ import annotations
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 from repro.core import (FalkonConfig, falkon_fit, krr_direct, krr_gradient,
-                        nystrom_direct, uniform_centers)
+                        nystrom_direct)
 from repro.data.synthetic import KernelTask, make_kernel_dataset
 
 from .common import emit, mse, timed

@@ -10,9 +10,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import (FalkonConfig, falkon_fit, krr_direct, nystrom_direct)
+from repro.core import FalkonConfig, falkon_fit, nystrom_direct
 from repro.data.synthetic import PAPER_TASKS, make_kernel_dataset
 
 from .common import c_err, emit, mse, relative_error, rmse, timed

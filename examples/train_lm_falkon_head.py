@@ -10,17 +10,14 @@ head. CPU-sized by default (a ~10M reduced config); pass --d-model 768
 --layers 12 for the true ~100M run if you have the patience.
 """
 import argparse
-import dataclasses
 import tempfile
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config
-from repro.configs.base import LayerSpec, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.core import FalkonConfig, falkon_fit
-from repro.data import ShardedLoader, TokenStreamConfig, token_stream
-from repro.models import model_params
+from repro.data import TokenStreamConfig, token_stream
 from repro.models.model import _backbone
 from repro.train import TrainConfig, Trainer, TrainerConfig
 

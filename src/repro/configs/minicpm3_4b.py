@@ -1,7 +1,7 @@
 """minicpm3-4b [dense] — 62L d_model=2560 40H d_ff=6400 vocab=73448, MLA.
 [hf:openbmb/MiniCPM3-4B] MLA: q_lora 768, kv_lora 256, nope 64, rope 32, v 64.
 """
-from .base import LayerSpec, ModelConfig
+from .base import ModelConfig
 
 
 def get_config() -> ModelConfig:

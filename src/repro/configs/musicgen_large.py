@@ -4,7 +4,7 @@ Frontend is a stub per the assignment: input_specs() provides precomputed
 frame embeddings (the 4-codebook delay-pattern sum); the decode path embeds
 EnCodec code ids through the (vocab=2048) table.
 """
-from .base import LayerSpec, ModelConfig
+from .base import ModelConfig
 
 
 def get_config() -> ModelConfig:

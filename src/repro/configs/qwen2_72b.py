@@ -1,7 +1,7 @@
 """qwen2-72b [dense] — 80L d_model=8192 64H (GQA kv=8) d_ff=29568
 vocab=152064, QKV bias. [arXiv:2407.10671; hf]
 """
-from .base import LayerSpec, ModelConfig
+from .base import ModelConfig
 
 
 def get_config() -> ModelConfig:

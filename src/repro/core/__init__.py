@@ -2,13 +2,15 @@
 
 Public API:
     FalkonConfig, falkon_fit, falkon_solve, FalkonEstimator
+    falkon_fit_streaming, falkon_solve_streaming   (out-of-core n)
     make_preconditioner, Preconditioner
-    conjugate_gradient
+    conjugate_gradient, conjugate_gradient_host
     select_centers, uniform_centers, leverage_score_centers,
     approximate_leverage_scores, exact_leverage_scores
     make_kernel, KernelSpec, spec_of, GaussianKernel, LaplacianKernel,
     Matern32Kernel, LinearKernel, PolynomialKernel
-    knm_matvec, knm_apply, make_distributed_matvec   (KernelOps delegates)
+    knm_matvec, knm_apply, make_distributed_matvec,
+    streaming_knm_matvec, streaming_knm_apply        (KernelOps delegates)
     baselines: krr_direct, krr_gradient, nystrom_direct, nystrom_gradient
 
 Kernel compute is pluggable: the ``repro.ops`` KernelOps registry ("jnp"
@@ -16,13 +18,15 @@ reference / "pallas" fused) backs every sweep, apply and gram above.
 """
 from .baselines import (krr_direct, krr_gradient, nystrom_direct,
                         nystrom_gradient)
-from .cg import CGResult, conjugate_gradient
+from .cg import CGResult, conjugate_gradient, conjugate_gradient_host
 from .falkon import (FalkonConfig, FalkonEstimator, FalkonState, falkon_fit,
-                     falkon_solve)
+                     falkon_fit_streaming, falkon_solve,
+                     falkon_solve_streaming)
 from .kernels import (GaussianKernel, KernelFn, KernelSpec, LaplacianKernel,
                       LinearKernel, Matern32Kernel, PolynomialKernel,
                       available_kernels, make_kernel, spec_of)
-from .matvec import knm_apply, knm_matvec, make_distributed_matvec
+from .matvec import (knm_apply, knm_matvec, make_distributed_matvec,
+                     streaming_knm_apply, streaming_knm_matvec)
 from .nystrom import (NystromCenters, approximate_leverage_scores,
                       exact_leverage_scores, leverage_score_centers,
                       select_centers, uniform_centers)

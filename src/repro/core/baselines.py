@@ -12,7 +12,7 @@ Table 1/2/3 benchmarks and by tests as ground truth.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -26,6 +26,35 @@ class CGResult(NamedTuple):
     iterations: Array      # scalar int: iterations actually applied (tol-aware)
 
 
+def _col_dot(u, v):
+    return jnp.sum(u * v, axis=0)  # per-column inner products
+
+
+def _masked_cg_update(x, r, p, rs, Ap, tol_sq):
+    """One CG update with PER-COLUMN convergence masking.
+
+    Once a column's residual hits fp32 noise, rs/denom can overflow and
+    poison every later iterate of that column (observed on one-vs-all
+    systems with rare classes) — converged columns become masked no-ops.
+    Shared by the scanned (``conjugate_gradient``) and host-loop
+    (``conjugate_gradient_host``) drivers so the in-core and streaming
+    solves cannot numerically diverge. Returns the updated
+    (x, r, p, rs, active) with ``active`` the pre-update mask.
+    """
+    active = rs > jnp.maximum(tol_sq, 1e-30)
+    denom = _col_dot(p, Ap)
+    a = jnp.where(active & (denom > 1e-38),
+                  rs / jnp.maximum(denom, 1e-38), 0.0)
+    x_new = x + a * p
+    r_new = r - a * Ap
+    rs_new = _col_dot(r_new, r_new)
+    beta = jnp.where(active, rs_new / jnp.maximum(rs, 1e-38), 0.0)
+    p_new = r_new + beta * p
+    sel = lambda new, old: jnp.where(active, new, old)
+    return (sel(x_new, x), sel(r_new, r), sel(p_new, p), sel(rs_new, rs),
+            active)
+
+
 def conjugate_gradient(
     matvec: Callable[[Array], Array],
     b: Array,
@@ -47,39 +76,72 @@ def conjugate_gradient(
         r = b - matvec(x0)
     p = r
 
-    def col_dot(u, v):
-        return jnp.sum(u * v, axis=0)  # per-column inner products
-
-    rs = col_dot(r, r)
-    b_norm_sq = jnp.maximum(col_dot(b, b), 1e-38)
+    rs = _col_dot(r, r)
+    b_norm_sq = jnp.maximum(_col_dot(b, b), 1e-38)
     tol_sq = (tol * tol) * b_norm_sq
 
     def step(carry, _):
         x, r, p, rs, it = carry
-        # PER-COLUMN convergence mask: once a column's residual hits fp32
-        # noise, rs/denom can overflow and poison every later iterate of
-        # that column (observed on one-vs-all systems with rare classes).
-        active = rs > jnp.maximum(tol_sq, 1e-30)
         Ap = matvec(p)
-        denom = col_dot(p, Ap)
-        a = jnp.where(active & (denom > 1e-38),
-                      rs / jnp.maximum(denom, 1e-38), 0.0)
-        x_new = x + a * p
-        r_new = r - a * Ap
-        rs_new = col_dot(r_new, r_new)
-        beta = jnp.where(active, rs_new / jnp.maximum(rs, 1e-38), 0.0)
-        p_new = r_new + beta * p
         # masked no-op once converged (keeps shapes static — the dry-run
         # wants the full-t program)
-        sel = lambda new, old: jnp.where(active, new, old)
-        carry = (sel(x_new, x), sel(r_new, r), sel(p_new, p),
-                 sel(rs_new, rs), it + jnp.any(active).astype(jnp.int32))
-        return carry, jnp.sqrt(jnp.maximum(sel(rs_new, rs), 0.0))
+        x, r, p, rs, active = _masked_cg_update(x, r, p, rs, Ap, tol_sq)
+        carry = (x, r, p, rs, it + jnp.any(active).astype(jnp.int32))
+        return carry, jnp.sqrt(jnp.maximum(rs, 0.0))
 
     (x, r, p, rs, it), res_hist = jax.lax.scan(
         step, (x, r, p, rs, jnp.asarray(0, jnp.int32)), None, length=t
     )
-    res0 = jnp.sqrt(jnp.maximum(col_dot(b, b), 0.0))[None] if b.ndim > 1 else \
-        jnp.sqrt(jnp.maximum(col_dot(b, b), 0.0))[None]
+    res0 = jnp.sqrt(jnp.maximum(_col_dot(b, b), 0.0))[None] if b.ndim > 1 else \
+        jnp.sqrt(jnp.maximum(_col_dot(b, b), 0.0))[None]
     residuals = jnp.concatenate([res0, res_hist], axis=0)
     return CGResult(x=x, residual_norms=residuals, iterations=it)
+
+
+def conjugate_gradient_host(
+    matvec: Callable[[Array], Array],
+    b: Array,
+    t: int,
+    *,
+    tol: float = 0.0,
+    x0: Array | None = None,
+) -> CGResult:
+    """Python-loop twin of ``conjugate_gradient`` for host-streaming matvecs.
+
+    The streaming sweep is a host loop over data chunks (one full pass per
+    CG iteration), which cannot be traced inside ``lax.scan`` — so the CG
+    recurrence itself runs at the Python level, with the same per-column
+    masking math as the scanned version. Unlike the scanned version it may
+    stop early once every column has converged (there is no static-shape
+    program to preserve out-of-core).
+    """
+    if x0 is None:
+        x = jnp.zeros_like(b)
+        r = b
+    else:
+        x = x0
+        r = b - matvec(x0)
+    p = r
+
+    rs = _col_dot(r, r)
+    b_norm_sq = jnp.maximum(_col_dot(b, b), 1e-38)
+    tol_sq = (tol * tol) * b_norm_sq
+    residuals = [jnp.sqrt(jnp.maximum(b_norm_sq, 0.0))[None]
+                 if b.ndim > 1 else jnp.sqrt(jnp.maximum(b_norm_sq, 0.0))]
+    it = 0
+
+    for _ in range(t):
+        if not bool(jnp.any(rs > jnp.maximum(tol_sq, 1e-30))):
+            break  # every column converged — skip the remaining data passes
+        Ap = matvec(p)
+        x, r, p, rs, _ = _masked_cg_update(x, r, p, rs, Ap, tol_sq)
+        res = jnp.sqrt(jnp.maximum(rs, 0.0))
+        residuals.append(res[None] if b.ndim > 1 else res)
+        it += 1
+
+    if b.ndim > 1:
+        res_hist = jnp.concatenate(residuals, axis=0)
+    else:
+        res_hist = jnp.stack(residuals, axis=0)
+    return CGResult(x=x, residual_norms=res_hist,
+                    iterations=jnp.asarray(it, jnp.int32))

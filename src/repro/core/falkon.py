@@ -18,6 +18,7 @@ like any train_step.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, NamedTuple
 
 import jax
@@ -26,7 +27,7 @@ from jax.sharding import Mesh
 
 from repro.ops import KernelOps, get_ops
 
-from .cg import conjugate_gradient
+from .cg import conjugate_gradient, conjugate_gradient_host
 from .kernels import KernelFn, make_kernel
 from .matvec import make_distributed_matvec
 from .nystrom import select_centers
@@ -93,6 +94,22 @@ class FalkonEstimator:
 
     def predict(self, X: Array) -> Array:
         return self._ops().apply(X, self.centers, self.alpha)
+
+    @functools.cached_property
+    def _jitted_ops(self):
+        # cached on the instance (writes __dict__ directly, so frozen is
+        # fine): repeat predict_stream calls reuse the same jit wrappers
+        # and therefore the same XLA compile cache per chunk shape.
+        from repro.data.streaming import JittedOps
+        return JittedOps(self._ops())
+
+    def predict_stream(self, loader) -> Array:
+        """Predict over a ``StreamingLoader``/iterable of (X_chunk, _) pairs
+        — X need never be device-resident at once (see repro.data.streaming).
+        """
+        from repro.data.streaming import streaming_apply
+        return streaming_apply(self._jitted_ops, loader, self.centers,
+                               self.alpha)
 
     def __call__(self, X: Array) -> Array:
         return self.predict(X)
@@ -247,6 +264,117 @@ def falkon_fit(
         ops=ops,
     )
     est = FalkonEstimator(centers=sel.centers, alpha=state.alpha, kernel=kernel,
+                          block_size=config.block_size, ops_impl=config.impl,
+                          precision=config.precision)
+    return est, state
+
+
+# ----------------------------------------------------------------------------
+# Out-of-core fit: X streamed from the host, never device-resident at once
+# ----------------------------------------------------------------------------
+def falkon_solve_streaming(
+    loader,
+    centers: Array,
+    precond: Preconditioner,
+    lam: float,
+    t: int,
+    *,
+    ops: KernelOps,
+    out_dim: tuple = (),
+    tol: float = 0.0,
+) -> FalkonState:
+    """``falkon_solve`` with every data sweep streamed through ``loader``.
+
+    ``loader`` is a re-iterable of (X_chunk, y_chunk) device pairs (see
+    ``repro.data.StreamingLoader``); one CG iteration = one full pass over
+    the stream, chunk sweeps accumulated on the device — O(chunk + M^2)
+    device memory for any n. The CG recurrence runs at the Python level
+    (``conjugate_gradient_host``): a host loop cannot live inside lax.scan,
+    which also means per-chunk sweeps still jit/cache by chunk shape while
+    the solve itself is not one fused XLA program. ``out_dim`` is y's
+    trailing shape: () for single-output, (p,) for multi-rhs.
+    """
+    from repro.data.streaming import JittedOps, streaming_sweep
+
+    n = loader.n_rows
+    M = centers.shape[0]
+    jops = JittedOps(ops)  # chunks of one shape compile once, not per call
+
+    def matvec(g):
+        return streaming_sweep(jops, loader, centers, g, use_targets=False)
+
+    def rhs_sweep():
+        zeros = jnp.zeros((M,) + tuple(out_dim), centers.dtype)
+        return streaming_sweep(jops, loader, centers, zeros, use_targets=True)
+
+    W = _falkon_operator(matvec, precond, lam, n)
+    b = precond.left(rhs_sweep() / n)
+    cg = conjugate_gradient_host(W, b, t, tol=tol)
+    alpha = precond.coeffs(cg.x)
+    return FalkonState(centers=centers, precond=precond, beta=cg.x,
+                       alpha=alpha, residual_norms=cg.residual_norms,
+                       cond_estimate=jnp.zeros((), b.dtype))
+
+
+def falkon_fit_streaming(
+    key: Array,
+    source,
+    config: FalkonConfig,
+    *,
+    prefetch: int | None = None,
+    centers: Array | None = None,
+) -> tuple[FalkonEstimator, FalkonState]:
+    """Fit FALKON from a ``ChunkSource`` without materializing X on device.
+
+    Centers are sampled uniformly in one host-side pass (exact, not
+    reservoir-approximate — n_rows is known), the M x M preconditioner is
+    built in-core (the paper's memory budget), then every CG sweep streams
+    the chunks through a double-buffered host->device loader. Only
+    ``center_selection="uniform"`` is supported out-of-core: leverage-score
+    sampling needs a pilot Gram pass that is not chunk-additive.
+    ``centers`` overrides sampling (used by parity tests). ``prefetch``
+    defaults to 2 chunks in flight on real accelerators and to synchronous
+    transfers on CPU, where an overlap thread only contends with compute.
+    """
+    from repro.data.streaming import StreamingLoader, streaming_uniform_centers
+
+    if prefetch is None:
+        prefetch = 0 if jax.default_backend() == "cpu" else 2
+
+    if config.center_selection != "uniform" and centers is None:
+        raise ValueError(
+            "streaming fit supports center_selection='uniform' only "
+            f"(got {config.center_selection!r})")
+
+    kernel = config.make_kernel()
+    ops = config.make_ops(kernel)
+    dt = jnp.dtype(config.dtype)
+    n = source.n_rows
+    M = min(config.num_centers, n)
+
+    if centers is None:
+        centers, _ = streaming_uniform_centers(key, source, M)
+    centers = jnp.asarray(centers, dt)
+    KMM = ops.gram(centers, centers)
+    precond = make_preconditioner(
+        KMM, config.lam, n, D=None, jitter=config.jitter,
+        rank_deficient=config.rank_deficient,
+    )
+
+    loader = StreamingLoader(source, prefetch=prefetch, dtype=dt)
+    # y's trailing shape from one peeked chunk (hosts only, no transfer)
+    out_dim: tuple = ()
+    for _, yc in source.chunks():
+        if yc is None:
+            raise ValueError("streaming fit needs targets in the source")
+        out_dim = tuple(yc.shape[1:])
+        break
+
+    state = falkon_solve_streaming(
+        loader, centers, precond, config.lam, config.iterations,
+        ops=ops, out_dim=out_dim, tol=config.tol,
+    )
+    est = FalkonEstimator(centers=centers, alpha=state.alpha, kernel=kernel,
                           block_size=config.block_size, ops_impl=config.impl,
                           precision=config.precision)
     return est, state

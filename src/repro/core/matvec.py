@@ -69,6 +69,47 @@ def knm_apply(
     return ops.apply(X, C, u)
 
 
+def streaming_knm_matvec(
+    loader,
+    C: Array,
+    u: Array,
+    kernel: KernelFn,
+    *,
+    use_targets: bool = False,
+    block_size: int = 2048,
+    impl: str = "jnp",
+    precision: str = "fp32",
+) -> Array:
+    """``K_nM^T (K_nM u + v)`` with X streamed chunk-by-chunk from the host.
+
+    ``loader`` re-iterates (X_chunk, y_chunk) pairs (repro.data.streaming);
+    with ``use_targets=True`` the chunk targets play the role of v. Runs on
+    whichever KernelOps backend ``impl`` names — the jnp backend is the
+    reference semantics for the chunked == in-core identity.
+    """
+    from repro.data.streaming import streaming_sweep
+
+    ops = get_ops(impl, kernel, block_size=block_size, precision=precision)
+    return streaming_sweep(ops, loader, C, u, use_targets=use_targets)
+
+
+def streaming_knm_apply(
+    loader,
+    C: Array,
+    u: Array,
+    kernel: KernelFn,
+    *,
+    block_size: int = 2048,
+    impl: str = "jnp",
+    precision: str = "fp32",
+) -> Array:
+    """``K_nM u`` over streamed chunks of X, concatenated in order."""
+    from repro.data.streaming import streaming_apply
+
+    ops = get_ops(impl, kernel, block_size=block_size, precision=precision)
+    return streaming_apply(ops, loader, C, u)
+
+
 def make_distributed_matvec(
     mesh: Mesh,
     data_axes: tuple[str, ...],

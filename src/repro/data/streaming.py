@@ -1,0 +1,276 @@
+"""Host-streaming X loader: FALKON on n that exceeds device HBM.
+
+The FALKON sweep ``w = K(X,C)^T (K(X,C) u + v)`` is additive over row chunks
+of X, so the CG data pass never needs all of X resident on the device: chunks
+live on the host (or disk, or a generator) and stream through a
+double-buffered host-to-device transfer while the device sweeps the previous
+chunk. Per-chunk device state is O(chunk_rows * d + M * p) — the paper's O(M)
+working set plus one chunk — independent of n.
+
+Layers:
+
+* ``ChunkSource``      — a *re-iterable* source of (X_chunk, y_chunk | None)
+                         host arrays. ``ArrayChunkSource`` wraps in-memory
+                         arrays (or anything numpy-viewable, e.g. memmaps);
+                         custom sources subclass and implement ``chunks()``.
+* ``StreamingLoader``  — background-thread host->device feed, ``prefetch``
+                         chunks ahead (double-buffered at the default 2), so
+                         ``jax.device_put`` of chunk k+1 overlaps the sweep
+                         of chunk k. Re-iterable: each ``iter()`` replays the
+                         source, which is what the CG loop needs (one full
+                         data pass per iteration).
+* ``streaming_sweep`` / ``streaming_apply`` — chunked KernelOps primitives.
+  They work with ANY registered backend: the jnp backend gives the reference
+  semantics (chunked == in-core is a tested identity), the pallas backend
+  runs its planner per chunk (fused / two-pass / j-sharded in M).
+* ``streaming_uniform_centers`` — exact uniform Nystrom sampling without
+  materializing X: draw M global row indices up front, gather while
+  streaming.
+
+These are the pieces ``repro.core.falkon.falkon_fit_streaming`` composes
+into the out-of-core fit; ``repro.launch.serve --falkon --stream-chunk``
+drives the same path from the CLI.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+_END = object()
+
+
+class ChunkSource:
+    """Re-iterable source of ``(X_chunk, y_chunk | None)`` host arrays.
+
+    Subclasses set ``n_rows``/``dim`` and implement ``chunks()``; every call
+    to ``chunks()`` must start a fresh pass over the data (the CG solve
+    replays the source once per iteration).
+    """
+
+    n_rows: int
+    dim: int
+    chunk_rows: int
+
+    def chunks(self) -> Iterator[tuple[np.ndarray, np.ndarray | None]]:
+        raise NotImplementedError
+
+    @property
+    def num_chunks(self) -> int:
+        return -(-self.n_rows // self.chunk_rows)
+
+
+class ArrayChunkSource(ChunkSource):
+    """Chunk view over in-memory (or memory-mapped) host arrays.
+
+    ``X``: (n, d); ``y``: (n,) or (n, p) or None. Slices are views — no copy
+    until the loader's host->device transfer.
+    """
+
+    def __init__(self, X, y=None, *, chunk_rows: int = 8192):
+        if chunk_rows <= 0:
+            raise ValueError(f"chunk_rows must be positive, got {chunk_rows}")
+        self.X = np.asarray(X)
+        self.y = None if y is None else np.asarray(y)
+        if self.y is not None and self.y.shape[0] != self.X.shape[0]:
+            raise ValueError(
+                f"X has {self.X.shape[0]} rows but y has {self.y.shape[0]}"
+            )
+        self.n_rows, self.dim = self.X.shape
+        self.chunk_rows = int(chunk_rows)
+
+    def chunks(self) -> Iterator[tuple[np.ndarray, np.ndarray | None]]:
+        for i0 in range(0, self.n_rows, self.chunk_rows):
+            i1 = min(i0 + self.chunk_rows, self.n_rows)
+            yc = None if self.y is None else self.y[i0:i1]
+            yield self.X[i0:i1], yc
+
+
+class StreamingLoader:
+    """Double-buffered host->device chunk feed over a ``ChunkSource``.
+
+    A background thread walks ``source.chunks()``, converts each chunk with
+    ``jax.device_put`` and parks up to ``prefetch`` device-resident chunks in
+    a bounded queue — so the transfer of the next chunk overlaps compute on
+    the current one, and at most ``prefetch + 1`` chunks exist on the device.
+    Iterating yields ``(X_dev, y_dev | None)`` in source order. The loader is
+    re-iterable; each ``iter()`` is an independent pass with its own thread.
+    Generator errors propagate to the consumer.
+
+    ``prefetch=0`` disables the thread and transfers chunks inline — the
+    right mode when "host" and "device" share one memory arena (CPU backend:
+    an overlap thread only contends with compute for the same cores).
+    """
+
+    def __init__(self, source: ChunkSource, *, prefetch: int = 2, dtype=None):
+        if prefetch < 0:
+            raise ValueError(f"prefetch must be >= 0, got {prefetch}")
+        self.source = source
+        self.prefetch = prefetch
+        self.dtype = None if dtype is None else jnp.dtype(dtype)
+
+    @property
+    def n_rows(self) -> int:
+        return self.source.n_rows
+
+    @property
+    def dim(self) -> int:
+        return self.source.dim
+
+    def _put(self, a):
+        a = jnp.asarray(a)
+        if self.dtype is not None and jnp.issubdtype(a.dtype, jnp.floating):
+            a = a.astype(self.dtype)
+        return jax.device_put(a)
+
+    def __iter__(self):
+        return self.iter_chunks()
+
+    def iter_chunks(self, *, with_targets: bool = True):
+        """Iterate (X_dev, y_dev | None) pairs; ``with_targets=False`` skips
+        the host->device transfer of y entirely — the CG matvec passes (all
+        but the one RHS pass per fit) never read the targets, and at large n
+        re-shipping them every iteration is pure wasted transfer bandwidth.
+        """
+        if self.prefetch == 0:
+            for xc, yc in self.source.chunks():
+                keep = with_targets and yc is not None
+                yield self._put(xc), self._put(yc) if keep else None
+            return
+        q: queue.Queue = queue.Queue(maxsize=self.prefetch)
+        stop = threading.Event()
+
+        def push_final(item):
+            # The consumer may already be gone (early break sets ``stop``
+            # then drains once); never block forever handing off the final
+            # END/exception marker — retry with a timeout until delivered
+            # or the consumer is known dead.
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.1)
+                    return
+                except queue.Full:
+                    continue
+
+        def work():
+            try:
+                for xc, yc in self.source.chunks():
+                    if stop.is_set():
+                        return
+                    keep = with_targets and yc is not None
+                    yd = self._put(yc) if keep else None
+                    q.put((self._put(xc), yd))
+                push_final(_END)
+            except Exception as e:  # surface source errors to the consumer
+                push_final(e)
+
+        thread = threading.Thread(target=work, daemon=True)
+        thread.start()
+        try:
+            while True:
+                item = q.get()
+                if item is _END:
+                    return
+                if isinstance(item, Exception):
+                    raise item
+                yield item
+        finally:
+            stop.set()
+            try:  # unblock a producer parked on a full queue
+                while True:
+                    q.get_nowait()
+            except queue.Empty:
+                pass
+
+
+class JittedOps:
+    """Facade jitting a backend's ``sweep``/``apply`` once per fit.
+
+    The streaming solve calls the per-chunk primitives thousands of times
+    (chunks x CG iterations); eager dispatch of the backend's scan/pallas
+    body per call is pure overhead. Jitting the bound methods once means
+    every chunk of the same shape hits the XLA compile cache — this is the
+    path both ``falkon_solve_streaming`` and the streaming benchmark run,
+    so benchmark numbers measure the real fit path.
+    """
+
+    def __init__(self, ops):
+        self.ops = ops
+        self.sweep = jax.jit(ops.sweep)
+        self.apply = jax.jit(ops.apply)
+
+
+def streaming_sweep(ops, loader, C: Array, u: Array, *, use_targets=True):
+    """``K(X,C)^T (K(X,C) u + v)`` accumulated over streamed chunks of X.
+
+    The sweep is additive over row chunks, so the chunked sum equals the
+    in-core result exactly (up to fp32 summation order). ``use_targets=True``
+    feeds each chunk's y as the sweep's v term (the RHS pass of Alg. 1);
+    ``False`` runs the pure normal-equation matvec (v = 0) — and, when the
+    loader supports it, skips transferring the targets at all.
+    """
+    if use_targets or not hasattr(loader, "iter_chunks"):
+        it = iter(loader)
+    else:
+        it = loader.iter_chunks(with_targets=False)
+    w = None
+    for xc, yc in it:
+        if use_targets and yc is None:
+            raise ValueError(
+                "streaming_sweep(use_targets=True): source yielded a chunk "
+                "without targets — v would silently become 0 and the RHS "
+                "pass would produce a zero (garbage) solution"
+            )
+        vc = yc if use_targets else None
+        wc = ops.sweep(xc, C, u, vc)
+        w = wc if w is None else w + wc
+    if w is None:
+        raise ValueError("streaming_sweep: loader yielded no chunks")
+    return w
+
+
+def streaming_apply(ops, loader, C: Array, u: Array) -> Array:
+    """``K(X,C) u`` over streamed chunks of X, concatenated in order.
+
+    Predictions never read targets, so target transfer is skipped when the
+    loader supports it.
+    """
+    if hasattr(loader, "iter_chunks"):
+        it = loader.iter_chunks(with_targets=False)
+    else:
+        it = iter(loader)
+    outs = [ops.apply(xc, C, u) for xc, _ in it]
+    if not outs:
+        raise ValueError("streaming_apply: loader yielded no chunks")
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+
+
+def streaming_uniform_centers(key: Array, source: ChunkSource, M: int):
+    """Uniform (without replacement) Nystrom centers from a chunk source.
+
+    ``source.n_rows`` is known up front, so this is exact uniform sampling —
+    not reservoir-approximate: draw M sorted global indices, then gather the
+    matching rows from each chunk as it streams past (host-side, one pass,
+    no device transfer). Returns (centers, indices) as host arrays.
+    """
+    n = source.n_rows
+    if not 0 < M <= n:
+        raise ValueError(f"need 0 < M <= n rows, got M={M}, n={n}")
+    seed = int(jax.random.randint(key, (), 0, np.iinfo(np.int32).max))
+    idx = np.sort(np.random.default_rng(seed).choice(n, size=M, replace=False))
+    rows = []
+    offset = 0
+    for xc, _ in source.chunks():
+        lo = np.searchsorted(idx, offset)
+        hi = np.searchsorted(idx, offset + xc.shape[0])
+        if hi > lo:
+            rows.append(np.asarray(xc)[idx[lo:hi] - offset])
+        offset += xc.shape[0]
+    centers = np.concatenate(rows, axis=0)
+    return centers, idx

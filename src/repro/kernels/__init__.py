@@ -1,7 +1,8 @@
 """Pallas TPU kernels for the paper's compute hot-spot (the K_nM sweeps).
 
 kernel_matvec.py — pl.pallas_call kernels (BlockSpec VMEM tiling), including
-                   the single-pass fused sweep ``fused_sweep_pallas``
+                   the single-pass fused sweep ``fused_sweep_pallas`` and the
+                   out-of-core j-sharded sweep ``sharded_sweep_pallas``
 ops.py           — jit'd wrappers (interpret=True off-TPU), KernelSpec-keyed
 ref.py           — pure-jnp oracles
 
@@ -9,4 +10,4 @@ The user-facing entry point is the ``repro.ops`` backend layer (KernelOps),
 which selects between these kernels and the jnp reference path by name.
 """
 from .ops import (fused_knm_matvec, kernel_matmul, pairwise_kernel,
-                  two_pass_knm_matvec)
+                  sharded_knm_matvec, two_pass_knm_matvec)

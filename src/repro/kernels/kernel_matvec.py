@@ -103,14 +103,22 @@ def _tile(a, b, spec: KernelSpec) -> Array:
 # ---------------------------------------------------------------------------
 # kernel matmul: out = K(A, B) @ V
 # ---------------------------------------------------------------------------
-def _kernel_matmul_kernel(a_ref, b_ref, v_ref, o_ref, acc_ref, *,
-                          spec: KernelSpec, n_valid: int, bn: int, nbj: int):
-    """One (i, j) grid step: acc_i += K(A_i, B_j) @ V_j."""
+def _kernel_matmul_kernel(a_ref, b_ref, v_ref, *rest,
+                          spec: KernelSpec, n_valid: int, bn: int, nbj: int,
+                          has_add: bool):
+    """One (i, j) grid step: acc_i += K(A_i, B_j) @ V_j (+ add_i at init)."""
+    if has_add:
+        add_ref, o_ref, acc_ref = rest
+    else:
+        o_ref, acc_ref = rest
     j = pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        if has_add:
+            acc_ref[...] = add_ref[...].astype(jnp.float32)
+        else:
+            acc_ref[...] = jnp.zeros_like(acc_ref)
 
     # mask padded B rows: global column index >= n_valid has no data
     col = j * bn + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
@@ -129,15 +137,19 @@ def kernel_matmul_pallas(
     A: Array, B: Array, V: Array, *,
     kind: str = "gaussian", scale: float = 1.0,
     spec: KernelSpec | None = None,
+    add: Array | None = None,
     block_m: int = 256, block_n: int = 512,
     interpret: bool = True,
 ) -> Array:
-    """out = K(A, B) @ V with on-the-fly Gram tiles.
+    """out = K(A, B) @ V (+ add) with on-the-fly Gram tiles.
 
     A: (m, d), B: (n, d), V: (n, p) -> (m, p). All shapes may be ragged; the
-    wrapper pads to tile multiples and masks padded B rows. Pass either a
-    ``spec`` (preferred) or legacy ``kind``/``scale``. ``interpret=True``
-    runs the kernel body in Python (CPU validation); on TPU pass False.
+    wrapper pads to tile multiples and masks padded B rows. ``add`` is an
+    optional (m, p) additive term folded into the accumulator at init — the
+    j-sharded sweep uses it to fuse ``t = K u + v`` into one pass instead of
+    spilling ``K u`` and re-reading it for the add. Pass either a ``spec``
+    (preferred) or legacy ``kind``/``scale``. ``interpret=True`` runs the
+    kernel body in Python (CPU validation); on TPU pass False.
     """
     spec = _as_spec(kind, scale, spec)
     m, d = A.shape
@@ -158,20 +170,27 @@ def kernel_matmul_pallas(
 
     nbi, nbj = mp // bm, np_ // bn
 
+    has_add = add is not None
+    in_specs = [
+        pl.BlockSpec((bm, dp), lambda i, j: (i, 0)),          # A_i
+        pl.BlockSpec((bn, dp), lambda i, j: (j, 0)),          # B_j
+        pl.BlockSpec((bn, pp), lambda i, j: (j, 0)),          # V_j
+    ]
+    operands = [Ap, Bp, Vp]
+    if has_add:
+        in_specs.append(pl.BlockSpec((bm, pp), lambda i, j: (i, 0)))  # add_i
+        operands.append(jnp.pad(add, ((0, mp - m), (0, pp - p))))
+
     out = pl.pallas_call(
         functools.partial(_kernel_matmul_kernel, spec=spec, n_valid=n,
-                          bn=bn, nbj=nbj),
+                          bn=bn, nbj=nbj, has_add=has_add),
         grid=(nbi, nbj),
-        in_specs=[
-            pl.BlockSpec((bm, dp), lambda i, j: (i, 0)),      # A_i
-            pl.BlockSpec((bn, dp), lambda i, j: (j, 0)),      # B_j
-            pl.BlockSpec((bn, pp), lambda i, j: (j, 0)),      # V_j
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, pp), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((mp, pp), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, pp), jnp.float32)],   # fp32 accum
         interpret=interpret,
-    )(Ap, Bp, Vp)
+    )(*operands)
     return out[:m, :p]
 
 
@@ -316,6 +335,60 @@ def fused_sweep_pallas(
     if return_tile_count:
         return w, cnt[0, 0]
     return w
+
+
+# ---------------------------------------------------------------------------
+# j-sharded sweep: out-of-core M — Gram never resident, t spilled to HBM
+# ---------------------------------------------------------------------------
+def sharded_sweep_pallas(
+    X: Array, C: Array, u: Array, v: Array | None, *,
+    spec: KernelSpec,
+    shard_m: int = 8192,
+    block_m: int = 256, block_n: int = 512,
+    interpret: bool = True,
+) -> Array:
+    """w = K(X,C)^T (K(X,C) u + v) for M far beyond the fused kernel's reach.
+
+    The fused single-pass sweep holds a (bm, Mpad) Gram row strip plus the
+    (Mpad, p) accumulator in VMEM, which caps M near ~8k at default tiles.
+    Past that a tile cannot wait in VMEM for the final ``t_i`` it needs for
+    the transposed product, so each Gram entry must be evaluated twice — the
+    out-of-core schedule of Meanti et al. (2020). This variant does exactly
+    that, in two Pallas phases with only O(tile) VMEM state:
+
+    1. **forward** — ``t = K(X, C) u + v`` in one pass streaming C through
+       (bn, d) tiles, the v-add fused into the accumulator init (no extra
+       HBM round-trip for ``K u``); ``t`` (n, p) spills to HBM.
+    2. **transpose, j-major** — the center axis is partitioned into
+       ``shard_m``-row shards; each shard runs its own Pallas pass computing
+       ``w_j = K(C_j, X) t`` with partial ``w_j`` accumulated per (bm, p)
+       C-tile in VMEM and flushed to HBM when the tile's row sweep ends.
+       The final reduction is the concatenation of the shard outputs.
+
+    Per-phase VMEM is O(bm*d + bn*d + bm*p + bn*p) — independent of M and n —
+    so M scales to 10^5+; ``shard_m`` only bounds the per-``pallas_call`` HBM
+    workspace (each shard pads its C rows to lane multiples) and is picked by
+    the planner in ``repro.ops.base``. Cost: 2 Gram evaluations per tile vs
+    the fused kernel's 1 — the price of not holding the strip.
+    """
+    M = C.shape[0]
+    squeeze = u.ndim == 1
+    u2 = u[:, None] if squeeze else u
+    v2 = None if v is None else (v[:, None] if squeeze else v)
+
+    t = kernel_matmul_pallas(X, C, u2, spec=spec, add=v2,
+                             block_m=block_m, block_n=block_n,
+                             interpret=interpret)
+
+    shard = max(int(shard_m), 1)
+    ws = [
+        kernel_matmul_pallas(C[j0:min(j0 + shard, M)], X, t, spec=spec,
+                             block_m=block_m, block_n=block_n,
+                             interpret=interpret)
+        for j0 in range(0, M, shard)
+    ]
+    w = ws[0] if len(ws) == 1 else jnp.concatenate(ws, axis=0)
+    return w[:, 0] if squeeze else w
 
 
 # ---------------------------------------------------------------------------

@@ -22,7 +22,7 @@ import jax
 
 from repro.core.kernels import spec_of
 from .kernel_matvec import (fused_sweep_pallas, kernel_matmul_pallas,
-                            pairwise_kernel_pallas)
+                            pairwise_kernel_pallas, sharded_sweep_pallas)
 
 Array = jax.Array
 
@@ -39,6 +39,18 @@ def fused_knm_matvec(
     only and evaluated exactly once each."""
     return fused_sweep_pallas(
         X, C, u, v, spec=spec_of(kernel),
+        block_m=min(block_size, 256), interpret=_interpret())
+
+
+def sharded_knm_matvec(
+    X: Array, C: Array, u: Array, v: Array | None, kernel, *,
+    shard_m: int = 8192, block_size: int = 2048,
+) -> Array:
+    """Out-of-core sweep for M past the fused kernel's VMEM reach: forward
+    product spilled to HBM, then per-C-shard transposed passes (2 Gram
+    evaluations per tile, O(tile) VMEM — see ``sharded_sweep_pallas``)."""
+    return sharded_sweep_pallas(
+        X, C, u, v, spec=spec_of(kernel), shard_m=shard_m,
         block_m=min(block_size, 256), interpret=_interpret())
 
 

@@ -7,7 +7,6 @@ tiling/masking bug, never a formula drift.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.kernels import KernelSpec, tile_eval
 

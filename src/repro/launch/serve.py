@@ -11,6 +11,25 @@ so the fused Pallas apply path serves traffic with no extra glue):
 
     PYTHONPATH=src python -m repro.launch.serve --falkon --ops-impl pallas \
         --batch 256 --requests 20
+
+With ``--stream-chunk N`` the fit streams X through the out-of-core path
+(``falkon_fit_streaming``): host chunks of N rows double-buffered onto the
+device, so n is bounded by host memory, not HBM.
+
+Scaling limits — which (n, M) regime maps to which sweep path:
+
+* ``fused`` (one Gram evaluation per tile): needs the (bm, M) Gram row strip
+  and the (M, p) accumulator in VMEM — M up to ~8k at default tiles. n bound
+  only by device HBM holding X.
+* ``two_pass`` / ``j_sharded`` (two Gram evaluations per tile, chosen
+  automatically by the VMEM planner — see ``KernelOps.plan()`` and the
+  ``SweepPlanWarning`` it emits on fallback): O(tile) VMEM, M to 10^5+;
+  ``t = K u + v`` spills to HBM and the center axis is swept in
+  planner-sized C-shards.
+* ``--stream-chunk`` (host streaming): n beyond HBM — each CG iteration
+  streams X in chunks with O(chunk_rows * d + M * p) device state. Composes
+  with either M regime above; the CG loop moves to the host, so the solve is
+  no longer one fused XLA program.
 """
 from __future__ import annotations
 
@@ -61,7 +80,8 @@ def serve_lm(args) -> None:
 
 def serve_falkon(args) -> None:
     """Fit once, then serve batched predict requests via KernelOps.apply."""
-    from repro.core import FalkonConfig, falkon_fit
+    from repro.core import FalkonConfig, falkon_fit, falkon_fit_streaming
+    from repro.data import ArrayChunkSource
 
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
     n, d = args.n, args.d
@@ -73,8 +93,17 @@ def serve_falkon(args) -> None:
                        lam=1e-5, num_centers=args.centers, iterations=15,
                        block_size=max(args.batch, 128),
                        ops_impl=args.ops_impl, precision=args.precision)
+    plan = cfg.make_ops().plan(n, min(args.centers, n), d)
+    print(f"sweep plan: {plan.path} ({plan.reason})")
     t0 = time.perf_counter()
-    est, state = falkon_fit(jax.random.PRNGKey(1), X, y, cfg)
+    if args.stream_chunk > 0:
+        # out-of-core: X/y live on the host, chunks stream through a
+        # double-buffered transfer (see repro.data.streaming)
+        src = ArrayChunkSource(jax.device_get(X), jax.device_get(y),
+                               chunk_rows=args.stream_chunk)
+        est, state = falkon_fit_streaming(jax.random.PRNGKey(1), src, cfg)
+    else:
+        est, state = falkon_fit(jax.random.PRNGKey(1), X, y, cfg)
     jax.block_until_ready(est.alpha)
     t_fit = time.perf_counter() - t0
 
@@ -89,9 +118,13 @@ def serve_falkon(args) -> None:
         xb = jax.random.normal(jax.random.PRNGKey(3 + i), (args.batch, d))
         jax.block_until_ready(step(xb))
     t_req = (time.perf_counter() - t0) / max(args.requests, 1)
+    # the streaming solve skips the power-iteration cond estimate (each
+    # probe would cost a full data pass) — don't print a fabricated 0.0
+    cond = ("n/a" if args.stream_chunk > 0
+            else f"{float(state.cond_estimate):.1f}")
     print(f"falkon[{cfg.impl}/{cfg.precision}]: fit n={n} M={est.centers.shape[0]} "
           f"in {t_fit:.2f}s; predict batch={args.batch} in {t_req*1e3:.2f}ms "
-          f"({args.batch/t_req:.0f} rows/s); cond(W)={float(state.cond_estimate):.1f}")
+          f"({args.batch/t_req:.0f} rows/s); cond(W)={cond}")
 
 
 def main():
@@ -111,6 +144,9 @@ def main():
     ap.add_argument("--d", type=int, default=16)
     ap.add_argument("--centers", type=int, default=256)
     ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--stream-chunk", type=int, default=0,
+                    help="fit via the host-streaming loader with this many "
+                         "rows per chunk (0 = in-core fit)")
     args = ap.parse_args()
 
     if args.falkon:

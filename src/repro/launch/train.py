@@ -16,7 +16,7 @@ import jax
 
 from repro.configs import ARCH_IDS, get_config, reduced_config
 from repro.data import ShardedLoader, TokenStreamConfig, token_stream
-from repro.distributed.mesh import AxisRules, use_rules
+from repro.distributed.mesh import AxisRules
 from repro.train import TrainConfig, Trainer, TrainerConfig
 
 

@@ -6,8 +6,6 @@ with logical-axis annotations (``lshard``) resolved by the AxisRules engine.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

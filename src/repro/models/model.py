@@ -9,8 +9,6 @@ last 2 layers) is applied unrolled.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any
 
 import jax

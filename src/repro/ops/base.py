@@ -39,14 +39,125 @@ cycle; backends duck-type the kernel via its ``spec`` attribute / call.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any, Protocol, runtime_checkable
 
 PRECISIONS = ("fp32", "bf16")
 
+SWEEP_PATHS = ("fused", "two_pass", "j_sharded", "jnp")
+
+#: Default VMEM budget for the fused sweep's scratch + pipelined IO tiles.
+#: Real TPUs fail to compile somewhere past ~16MB of requested VMEM; 12MB
+#: leaves headroom for the compiler's own allocations. Override per-process
+#: with ``REPRO_VMEM_BUDGET_MB`` or per-call via ``plan_sweep(vmem_budget=)``.
+DEFAULT_VMEM_BUDGET = 12 * 2**20
+
+_LANE = 128  # MXU lane width — mirrors repro.kernels.kernel_matvec.LANE
+
+
+def _vmem_budget() -> int:
+    mb = os.environ.get("REPRO_VMEM_BUDGET_MB")
+    return int(float(mb) * 2**20) if mb else DEFAULT_VMEM_BUDGET
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPlan:
+    """The sweep-path decision for one (n, M, d, p) problem, with the budget
+    numbers that produced it — exposed via ``KernelOps.plan()`` so tests and
+    benchmarks can assert on routing instead of reverse-engineering it."""
+
+    path: str                  # one of SWEEP_PATHS
+    n: int
+    M: int
+    d: int
+    p: int
+    block_m: int               # (bm, bn) tile dims the sweep runs with
+    block_n: int
+    shard_m: int | None        # C-shard rows for the j_sharded path
+    scratch_bytes: int         # fused-path VMEM scratch estimate
+    io_bytes: int              # double-buffered operand/output tiles
+    vmem_budget_bytes: int
+    reason: str
+
+    @property
+    def total_bytes(self) -> int:
+        return self.scratch_bytes + self.io_bytes
+
+
+def plan_sweep(
+    n: int, M: int, d: int, p: int = 1, *,
+    bm: int, bn: int,
+    itemsize: int = 4,
+    vmem_budget: int | None = None,
+    shard_m: int | None = None,
+) -> SweepPlan:
+    """Pick fused / two-pass / j-sharded from a VMEM budget model.
+
+    The fused single-pass sweep needs, in VMEM: the (bm, Mpad) fp32 Gram row
+    strip, the (Mpad, pp) fp32 accumulator twice over (strip-major layout),
+    the (bm, pp) fp32 forward block, plus double-buffered input/output tiles
+    (``itemsize`` bytes for X/C — 2 under bf16). When that exceeds the budget
+    the sweep must evaluate each Gram tile twice, and the only question left
+    is the C-shard granularity: ``shard_m`` is sized so one shard's padded
+    fp32 copy stays within the budget-scaled HBM workspace. A single shard
+    covering all of M degenerates to the classic two-pass composition.
+
+    Pure arithmetic on static shapes — safe to call at trace time, no jax
+    imports (this module must stay import-cycle-free).
+    """
+    if vmem_budget is None:
+        vmem_budget = _vmem_budget()
+    p = max(p, 1)
+    Mpad = -(-M // _LANE) * _LANE
+    dp = -(-d // _LANE) * _LANE
+    pp = -(-p // _LANE) * _LANE
+    scratch = 4 * (bm * Mpad + 2 * Mpad * pp + bm * pp)
+    io = 2 * (itemsize * (bm + bn) * dp + 4 * (bn + bm) * pp)
+    base = dict(n=n, M=M, d=d, p=p, block_m=bm, block_n=bn,
+                scratch_bytes=scratch, io_bytes=io,
+                vmem_budget_bytes=vmem_budget)
+
+    if scratch + io <= vmem_budget:
+        return SweepPlan(
+            path="fused", shard_m=None,
+            reason=(f"fused scratch {scratch}B + io {io}B fits the "
+                    f"{vmem_budget}B VMEM budget"),
+            **base)
+
+    if shard_m is None:
+        # one shard's padded fp32 C copy ~ one budget of HBM workspace
+        shard_m = max(bn, vmem_budget // (4 * dp))
+    shard_m = max(bn, (int(shard_m) // bn) * bn)
+    over = (f"fused scratch {scratch}B + io {io}B exceeds the "
+            f"{vmem_budget}B VMEM budget")
+    if shard_m >= M:
+        return SweepPlan(
+            path="two_pass", shard_m=None,
+            reason=f"{over}; single C-shard covers M={M} — two-pass sweep",
+            **base)
+    return SweepPlan(
+        path="j_sharded", shard_m=shard_m,
+        reason=(f"{over}; j-sharded sweep over "
+                f"{-(-M // shard_m)} C-shards of {shard_m} rows"),
+        **base)
+
+
+class SweepPlanWarning(UserWarning):
+    """Structured fallback notice: the fused single-pass sweep did not fit
+    the VMEM budget and a 2-evaluations-per-tile path was chosen. Carries the
+    full ``SweepPlan`` as ``.plan`` for programmatic inspection."""
+
+    def __init__(self, plan: SweepPlan):
+        self.plan = plan
+        super().__init__(
+            f"falkon sweep (n={plan.n}, M={plan.M}, d={plan.d}, p={plan.p}): "
+            f"taking the {plan.path!r} path — {plan.reason}")
+
 
 @runtime_checkable
 class KernelOps(Protocol):
-    """The three primitives the whole codebase needs — and nothing else."""
+    """The three primitives the whole codebase needs — and nothing else
+    (plus ``plan``, the introspectable routing decision behind ``sweep``)."""
 
     kernel: Any
     block_size: int
@@ -62,6 +173,10 @@ class KernelOps(Protocol):
 
     def gram(self, A, B):
         """K(A, B) materialized — the preconditioner path."""
+        ...
+
+    def plan(self, n: int, M: int, d: int, p: int = 1) -> SweepPlan:
+        """The sweep path this backend would take for these shapes."""
         ...
 
 

@@ -14,7 +14,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from .base import OpsBase, register_ops
+from .base import OpsBase, SweepPlan, register_ops
 
 Array = jax.Array
 
@@ -99,3 +99,16 @@ class JnpKernelOps(OpsBase):
         downstream is the numerically fragile step, and the bf16 policy's
         bandwidth win does not apply to this one-shot block."""
         return self.kernel(A, B)
+
+    def plan(self, n: int, M: int, d: int, p: int = 1) -> SweepPlan:
+        """Reference backend has one path: the lax.scan row sweep. Reported
+        through the same ``SweepPlan`` shape so callers can introspect any
+        backend uniformly."""
+        p = max(p, 1)
+        return SweepPlan(
+            path="jnp", n=n, M=M, d=d, p=p,
+            block_m=self.block_size, block_n=M, shard_m=None,
+            scratch_bytes=4 * self.block_size * M, io_bytes=0,
+            vmem_budget_bytes=0,
+            reason=(f"jnp reference: lax.scan over {self.block_size}-row "
+                    f"blocks, O(block * M) live memory"))

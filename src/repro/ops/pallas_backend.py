@@ -1,10 +1,21 @@
 """Fused Pallas ``KernelOps`` backend (TPU target; interpret mode elsewhere).
 
-* ``sweep`` — the headline kernel: ONE Pallas pass per CG iteration. Each
-  (block_m x block_n) Gram tile is computed once in VMEM, used for the forward
-  product ``t = K u (+ v)`` and re-read from the VMEM row strip for the
-  transposed accumulation ``w += K^T t`` into an fp32 scratch — half the
-  kernel-tile evaluations and HBM round-trips of the two-matmul composition.
+* ``sweep`` — routed by the VMEM planner (``repro.ops.base.plan_sweep``):
+
+  - ``fused``     — ONE Pallas pass per CG iteration. Each (block_m x
+    block_n) Gram tile is computed once in VMEM, used for the forward
+    product ``t = K u (+ v)`` and re-read from the VMEM row strip for the
+    transposed accumulation ``w += K^T t`` into an fp32 scratch — half the
+    kernel-tile evaluations and HBM round-trips of the two-matmul
+    composition. Requires the (bm, Mpad) strip + (Mpad, p) accumulator to
+    fit the VMEM budget, which caps M near ~8k at default tiles.
+  - ``two_pass`` / ``j_sharded`` — the out-of-core schedule
+    (``sharded_sweep_pallas``): forward pass spills ``t = K u + v`` to HBM,
+    then per-C-shard transposed passes accumulate ``w_j`` with O(tile) VMEM,
+    scaling M to 10^5+ at the cost of 2 Gram evaluations per tile. Falling
+    off the fused path emits a structured ``SweepPlanWarning`` naming the
+    chosen path and the budget numbers; ``plan()`` exposes the decision.
+
 * ``apply`` / ``gram`` — thin wrappers over the kernel-matmul and pairwise
   Pallas kernels.
 
@@ -18,11 +29,12 @@ precision.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
 
-from .base import OpsBase, register_ops
+from .base import OpsBase, SweepPlan, SweepPlanWarning, plan_sweep, register_ops
 
 Array = jax.Array
 
@@ -50,37 +62,35 @@ class PallasKernelOps(OpsBase):
             return X.astype(jnp.bfloat16), C.astype(jnp.bfloat16)
         return X, C
 
-    def _fused_fits_vmem(self, n: int, M: int, d: int, p: int) -> bool:
-        """The fused sweep keeps the Gram row strip and the (M, p) accumulator
-        VMEM-resident: scratch ~ (bm * Mpad + Mpad * pp * 2) fp32, on top of
-        the double-buffered (bm, dp)/(bn, dp) input tiles. Past ~16MB of VMEM
-        that fails to compile on real TPUs, so fall back to the two-pass
-        composition there (interpret mode has no such limit)."""
-        if _interpret():
-            return True
+    def plan(self, n: int, M: int, d: int, p: int = 1) -> SweepPlan:
+        """The routing decision ``sweep`` will take for these shapes.
+
+        The same VMEM budget model applies in interpret mode: Python
+        emulation has no hard VMEM ceiling, but letting the fused kernel
+        allocate a (bm, Mpad) strip at M ~ 10^5 is exactly the
+        out-of-memory blowup the j-sharded path exists to avoid, and CPU
+        tests should exercise the routing real TPUs will use.
+        """
         from repro.kernels.kernel_matvec import sweep_block_dims
-        lane = 128
-        Mpad = -(-M // lane) * lane
-        dp = -(-d // lane) * lane
-        pp = -(-max(p, 1) // lane) * lane
         bm, bn = sweep_block_dims(n, M, self._block_m, 512)
-        itemsize = 2 if self.precision == "bf16" else 4
-        scratch_bytes = 4 * (bm * Mpad + 2 * Mpad * pp + bm * pp)
-        # inputs/outputs are pipelined double-buffered: X_i, C_j, u_j, v_i
-        io_bytes = 2 * (itemsize * (bm + bn) * dp + 4 * (bn + bm) * pp)
-        return scratch_bytes + io_bytes <= 12 * 2**20
+        return plan_sweep(n, M, d, p, bm=bm, bn=bn,
+                          itemsize=2 if self.precision == "bf16" else 4)
 
     def sweep(self, X: Array, C: Array, u: Array, v: Array | None = None) -> Array:
-        from repro.kernels.kernel_matvec import fused_sweep_pallas
-        from repro.kernels.ops import two_pass_knm_matvec
+        from repro.kernels.kernel_matvec import (fused_sweep_pallas,
+                                                 sharded_sweep_pallas)
         X, C = self._inputs(X, C)
         p = u.shape[1] if u.ndim > 1 else 1
-        if not self._fused_fits_vmem(X.shape[0], C.shape[0], X.shape[1], p):
-            return two_pass_knm_matvec(X, C, u, v, self.kernel,
-                                       block_size=self.block_size)
-        return fused_sweep_pallas(X, C, u, v, spec=self._spec,
-                                  block_m=self._block_m,
-                                  interpret=_interpret())
+        plan = self.plan(X.shape[0], C.shape[0], X.shape[1], p)
+        if plan.path == "fused":
+            return fused_sweep_pallas(X, C, u, v, spec=self._spec,
+                                      block_m=self._block_m,
+                                      interpret=_interpret())
+        warnings.warn(SweepPlanWarning(plan), stacklevel=2)
+        return sharded_sweep_pallas(
+            X, C, u, v, spec=self._spec,
+            shard_m=plan.shard_m if plan.shard_m is not None else plan.M,
+            block_m=self._block_m, interpret=_interpret())
 
     def sweep_with_stats(self, X: Array, C: Array, u: Array,
                          v: Array | None = None) -> tuple[Array, Array]:
@@ -88,19 +98,20 @@ class PallasKernelOps(OpsBase):
 
         The counter is the fusion proof: it equals
         ceil(n/block_m) * ceil(M/block_n) — one evaluation per tile per call.
-        Diagnostic path: it is always the fused kernel, so shapes the VMEM
-        guard would route to the two-pass fallback are rejected here rather
-        than silently measuring a different implementation.
+        Diagnostic path: it is always the fused kernel, so shapes the planner
+        would route to an out-of-core path are rejected here rather than
+        silently measuring a different implementation.
         """
         from repro.kernels.kernel_matvec import fused_sweep_pallas
         X, C = self._inputs(X, C)
         p = u.shape[1] if u.ndim > 1 else 1
-        if not self._fused_fits_vmem(X.shape[0], C.shape[0], X.shape[1], p):
+        plan = self.plan(X.shape[0], C.shape[0], X.shape[1], p)
+        if plan.path != "fused":
             raise ValueError(
                 f"fused sweep scratch for n={X.shape[0]}, M={C.shape[0]}, "
                 f"d={X.shape[1]}, p={p} exceeds the VMEM budget on this "
-                "backend; sweep() would fall back to the two-pass path, "
-                "which has no tile counter")
+                f"backend ({plan.reason}); sweep() would take the "
+                f"{plan.path!r} path, which has no tile counter")
         return fused_sweep_pallas(X, C, u, v, spec=self._spec,
                                   block_m=self._block_m,
                                   interpret=_interpret(),

@@ -7,8 +7,6 @@ assigned archs.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any, Callable, NamedTuple
 
 import jax

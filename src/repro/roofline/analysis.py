@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any
 
 # --- v5e hardware constants (per chip) --------------------------------------
 PEAK_FLOPS = 197e12        # bf16

@@ -8,7 +8,6 @@ Both lower/compile against ShapeDtypeStructs — the dry-run objects.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, NamedTuple
 
 import jax

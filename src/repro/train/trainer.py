@@ -14,7 +14,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
-from typing import Any, Callable, Iterator
+from typing import Callable, Iterator
 
 import jax
 import numpy as np
@@ -49,7 +49,6 @@ class Trainer:
 
         step_fn = make_train_step(cfg, tcfg)
         if mesh is not None:
-            import contextlib
             from repro.distributed.mesh import use_rules
             def wrapped(state, batch):
                 with use_rules(self.rules):

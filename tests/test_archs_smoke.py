@@ -14,7 +14,7 @@ import pytest
 
 from repro.configs import ARCH_IDS, get_config, reduced_config
 from repro.configs.base import SHAPES, input_specs
-from repro.models import (decode_step, forward, init_cache, loss_fn,
+from repro.models import (decode_step, forward, loss_fn,
                           model_params, prefill, split_periods)
 
 jax.config.update("jax_default_matmul_precision", "highest")

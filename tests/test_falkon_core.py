@@ -20,9 +20,8 @@ from repro.compat import enable_x64
 from repro.core import (FalkonConfig, GaussianKernel, conjugate_gradient,
                         exact_leverage_scores, approximate_leverage_scores,
                         falkon_fit, falkon_solve, knm_apply, knm_matvec,
-                        krr_direct, krr_gradient, make_kernel,
-                        make_preconditioner, nystrom_direct, nystrom_gradient,
-                        select_centers, uniform_centers)
+                        krr_direct, make_preconditioner, nystrom_direct,
+                        nystrom_gradient, uniform_centers)
 
 
 def _fit(X, y, **kw):

@@ -7,9 +7,8 @@ import pytest
 pytest.importorskip("hypothesis")   # optional dep: skip, never collect-error
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import (GaussianKernel, LaplacianKernel, Matern32Kernel,
-                        conjugate_gradient, knm_matvec, make_kernel,
-                        make_preconditioner)
+from repro.core import (GaussianKernel, conjugate_gradient, knm_matvec,
+                        make_kernel, make_preconditioner)
 
 SET = settings(max_examples=15, deadline=None)
 

@@ -8,10 +8,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import FalkonConfig, GaussianKernel, LaplacianKernel, falkon_fit
+from repro.core import FalkonConfig, GaussianKernel, falkon_fit
 from repro.kernels.kernel_matvec import (kernel_matmul_pallas,
                                          pairwise_kernel_pallas)
-from repro.kernels.ops import fused_knm_matvec, pairwise_kernel
+from repro.kernels.ops import fused_knm_matvec
 from repro.kernels.ref import (fused_knm_matvec_ref, kernel_matmul_ref,
                                pairwise_kernel_ref)
 

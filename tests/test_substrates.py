@@ -1,6 +1,5 @@
 """Substrate tests: optimizers, schedules, checkpointing, compression,
 data pipeline, trainer fault tolerance, sharding rules, HLO cost analyzer."""
-import os
 import tempfile
 
 import jax
