@@ -1,8 +1,20 @@
-"""Bench-regression gate for the fused sweep (CI: the bench-regression job).
+"""Bench-regression gate (CI: the bench-regression job).
 
-Compares a fresh ``sweep_fusion`` run against the checked-in
-``BENCH_sweep.json`` baseline and exits non-zero on regression. Two gates
-per matching (n, M, d, block_m, block_n) record:
+Dispatches on the candidate's ``benchmark`` field:
+
+* ``sweep_fusion`` — fused-sweep gate against the checked-in
+  ``BENCH_sweep.json`` baseline (details below).
+* ``precision_sweep`` — bf16-policy gate against ``BENCH_precision.json``:
+  the achieved error vs the fp64 oracle must stay under the documented
+  ceiling (baseline ``summary.error_bound``, default 1e-2), and the policy
+  must keep its win — EITHER bf16 sweep-throughput geomean >= 1.3x fp32 OR
+  planner-model HBM-footprint headroom geomean >= 1.8x (interpret-mode CPU
+  hosts cannot see the MXU/HBM throughput win, the footprint model can) —
+  with neither geomean regressing more than ``--max-regression-pct`` below
+  its baseline value.
+
+For ``sweep_fusion``, two gates per matching (n, M, d, block_m, block_n)
+record:
 
 * ``tile_evals_fused`` must equal the baseline exactly — more Gram-tile
   evaluations per sweep means the single-pass fusion property broke, the
@@ -46,6 +58,58 @@ def _geomean(values):
     for v in values:
         prod *= v
     return prod ** (1.0 / len(values))
+
+
+#: Absolute acceptance floors for the precision gate (either arm passes).
+PRECISION_SPEEDUP_FLOOR = 1.3
+PRECISION_HEADROOM_FLOOR = 1.8
+
+
+def compare_precision(baseline: dict, candidate: dict,
+                      max_pct: float) -> list[str]:
+    """Gate BENCH_precision.json: error ceiling + (throughput | footprint)."""
+    failures = []
+    cs = candidate.get("summary", {})
+    bs = baseline.get("summary", {})
+    bound = float(bs.get("error_bound", 0.01))
+
+    err = cs.get("max_rel_err")
+    if err is None:
+        return ["candidate has no summary.max_rel_err"]
+    print(f"bf16 max error vs fp64 oracle over {cs.get('kernels')} kernels: "
+          f"{err:.2e} (ceiling {bound:.0e})")
+    if err > bound:
+        failures.append(
+            f"max_rel_err {err:.3e} > ceiling {bound:.0e} — bf16 numerics "
+            "regressed past the documented error model")
+
+    speed = float(cs.get("speedup_geomean", 0.0))
+    head = float(cs.get("hbm_headroom_geomean", 0.0))
+    print(f"bf16 speedup geomean {speed:.3f} (floor "
+          f"{PRECISION_SPEEDUP_FLOOR}), hbm headroom geomean {head:.3f} "
+          f"(floor {PRECISION_HEADROOM_FLOOR})")
+    if speed < PRECISION_SPEEDUP_FLOOR and head < PRECISION_HEADROOM_FLOOR:
+        failures.append(
+            f"neither acceptance arm holds: speedup geomean {speed:.3f} < "
+            f"{PRECISION_SPEEDUP_FLOOR} AND hbm headroom geomean {head:.3f} "
+            f"< {PRECISION_HEADROOM_FLOOR}")
+
+    # Relative regression mirrors the either/or acceptance: the throughput
+    # arm is wall-clock noise on shared runners, the footprint arm is pure
+    # arithmetic — only failing BOTH below baseline-minus-pct is a real
+    # regression of the policy's win.
+    scale = 1.0 - max_pct / 100.0
+    regressed = []
+    for key, got in (("speedup_geomean", speed),
+                     ("hbm_headroom_geomean", head)):
+        base = bs.get(key)
+        if base is not None and got < float(base) * scale:
+            regressed.append(
+                f"{key} {got:.3f} < baseline {float(base):.3f} - "
+                f"{max_pct:.0f}%")
+    if len(regressed) == 2:
+        failures.extend(regressed)
+    return failures
 
 
 def compare(baseline: dict, candidate: dict, max_pct: float) -> list[str]:
@@ -109,9 +173,17 @@ def main(argv=None) -> int:
     with open(args.candidate) as f:
         candidate = json.load(f)
 
-    failures = compare(baseline, candidate, args.max_regression_pct)
+    kind = candidate.get("benchmark", "sweep_fusion")
+    if baseline.get("benchmark", kind) != kind:
+        print(
+            f"bench-regression gate FAILED: baseline benchmark "
+            f"{baseline.get('benchmark')!r} != candidate {kind!r}"
+        )
+        return 1
+    gate = compare_precision if kind == "precision_sweep" else compare
+    failures = gate(baseline, candidate, args.max_regression_pct)
     if failures:
-        print("bench-regression gate FAILED:")
+        print(f"bench-regression gate FAILED ({kind}):")
         for line in failures:
             print(f"  {line}")
         print(
@@ -120,8 +192,9 @@ def main(argv=None) -> int:
         )
         return 1
     print(
-        f"bench-regression gate passed: {len(baseline['records'])} points "
-        f"within {args.max_regression_pct:.0f}% of baseline"
+        f"bench-regression gate passed ({kind}): "
+        f"{len(baseline['records'])} baseline points within "
+        f"{args.max_regression_pct:.0f}% tolerance"
     )
     return 0
 

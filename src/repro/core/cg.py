@@ -9,6 +9,14 @@ need for pjit/shard_map and for the dry-run).
 Supports multiple right-hand sides (b of shape (q,) or (q, p)) — multiclass
 problems (TIMIT / IMAGENET in the paper) solve all one-vs-all systems in one CG
 run; the per-column scalars are kept separate.
+
+``storage_dtype`` (the bf16 end-to-end policy's knob, threaded from
+``PrecisionPolicy.storage`` by ``falkon_solve``) stores the CG iterates
+x/r/p at reduced width — they are the (q, p) vectors every sweep reads and
+writes — while ALL scalars (alpha, beta, rs, residual norms) and the update
+arithmetic stay float32: the recurrence is computed full-precision and only
+the iterates are rounded back to storage. ``storage_dtype=None`` (default)
+is byte-for-byte the pre-policy fp32 path.
 """
 from __future__ import annotations
 
@@ -30,7 +38,7 @@ def _col_dot(u, v):
     return jnp.sum(u * v, axis=0)  # per-column inner products
 
 
-def _masked_cg_update(x, r, p, rs, Ap, tol_sq):
+def _masked_cg_update(x, r, p, rs, Ap, tol_sq, storage=None):
     """One CG update with PER-COLUMN convergence masking.
 
     Once a column's residual hits fp32 noise, rs/denom can overflow and
@@ -40,7 +48,15 @@ def _masked_cg_update(x, r, p, rs, Ap, tol_sq):
     (``conjugate_gradient_host``) drivers so the in-core and streaming
     solves cannot numerically diverge. Returns the updated
     (x, r, p, rs, active) with ``active`` the pre-update mask.
+
+    With ``storage`` set the incoming iterates are promoted to float32, the
+    whole update (alpha/beta/norm scalars included) is computed in float32,
+    and only the outgoing x/r/p are rounded back to ``storage``.
     """
+    if storage is not None:
+        f32 = jnp.float32
+        x, r, p, Ap = (a.astype(f32) for a in (x, r, p, Ap))
+        rs = rs.astype(f32)
     active = rs > jnp.maximum(tol_sq, 1e-30)
     denom = _col_dot(p, Ap)
     a = jnp.where(active & (denom > 1e-38),
@@ -51,8 +67,11 @@ def _masked_cg_update(x, r, p, rs, Ap, tol_sq):
     beta = jnp.where(active, rs_new / jnp.maximum(rs, 1e-38), 0.0)
     p_new = r_new + beta * p
     sel = lambda new, old: jnp.where(active, new, old)
-    return (sel(x_new, x), sel(r_new, r), sel(p_new, p), sel(rs_new, rs),
-            active)
+    x, r, p, rs = (sel(x_new, x), sel(r_new, r), sel(p_new, p),
+                   sel(rs_new, rs))
+    if storage is not None:
+        x, r, p = (a.astype(storage) for a in (x, r, p))
+    return x, r, p, rs, active
 
 
 def conjugate_gradient(
@@ -62,12 +81,17 @@ def conjugate_gradient(
     *,
     tol: float = 0.0,
     x0: Array | None = None,
+    storage_dtype=None,
 ) -> CGResult:
     """Run ``t`` CG iterations on ``matvec(x) = b``.
 
     When ``tol > 0`` iterations whose residual norm has already dropped below
     ``tol * ||b||`` become masked no-ops (identical output, static shape).
+    ``storage_dtype`` stores the iterates x/r/p at reduced width (bf16
+    policy) while scalars and update arithmetic stay float32; None is the
+    unchanged full-precision path.
     """
+    storage = None if storage_dtype is None else jnp.dtype(storage_dtype)
     if x0 is None:
         x = jnp.zeros_like(b)
         r = b
@@ -75,8 +99,11 @@ def conjugate_gradient(
         x = x0
         r = b - matvec(x0)
     p = r
+    if storage is not None:
+        x, r, p = (a.astype(storage) for a in (x, r, p))
 
-    rs = _col_dot(r, r)
+    rs = _col_dot(r.astype(b.dtype), r.astype(b.dtype)) if storage is not None \
+        else _col_dot(r, r)
     b_norm_sq = jnp.maximum(_col_dot(b, b), 1e-38)
     tol_sq = (tol * tol) * b_norm_sq
 
@@ -85,7 +112,8 @@ def conjugate_gradient(
         Ap = matvec(p)
         # masked no-op once converged (keeps shapes static — the dry-run
         # wants the full-t program)
-        x, r, p, rs, active = _masked_cg_update(x, r, p, rs, Ap, tol_sq)
+        x, r, p, rs, active = _masked_cg_update(x, r, p, rs, Ap, tol_sq,
+                                                storage=storage)
         carry = (x, r, p, rs, it + jnp.any(active).astype(jnp.int32))
         return carry, jnp.sqrt(jnp.maximum(rs, 0.0))
 
@@ -105,16 +133,19 @@ def conjugate_gradient_host(
     *,
     tol: float = 0.0,
     x0: Array | None = None,
+    storage_dtype=None,
 ) -> CGResult:
     """Python-loop twin of ``conjugate_gradient`` for host-streaming matvecs.
 
     The streaming sweep is a host loop over data chunks (one full pass per
     CG iteration), which cannot be traced inside ``lax.scan`` — so the CG
     recurrence itself runs at the Python level, with the same per-column
-    masking math as the scanned version. Unlike the scanned version it may
-    stop early once every column has converged (there is no static-shape
-    program to preserve out-of-core).
+    masking math (and the same ``storage_dtype`` contract) as the scanned
+    version. Unlike the scanned version it may stop early once every column
+    has converged (there is no static-shape program to preserve
+    out-of-core).
     """
+    storage = None if storage_dtype is None else jnp.dtype(storage_dtype)
     if x0 is None:
         x = jnp.zeros_like(b)
         r = b
@@ -122,8 +153,11 @@ def conjugate_gradient_host(
         x = x0
         r = b - matvec(x0)
     p = r
+    if storage is not None:
+        x, r, p = (a.astype(storage) for a in (x, r, p))
 
-    rs = _col_dot(r, r)
+    rs = _col_dot(r.astype(b.dtype), r.astype(b.dtype)) if storage is not None \
+        else _col_dot(r, r)
     b_norm_sq = jnp.maximum(_col_dot(b, b), 1e-38)
     tol_sq = (tol * tol) * b_norm_sq
     residuals = [jnp.sqrt(jnp.maximum(b_norm_sq, 0.0))[None]
@@ -134,7 +168,8 @@ def conjugate_gradient_host(
         if not bool(jnp.any(rs > jnp.maximum(tol_sq, 1e-30))):
             break  # every column converged — skip the remaining data passes
         Ap = matvec(p)
-        x, r, p, rs, _ = _masked_cg_update(x, r, p, rs, Ap, tol_sq)
+        x, r, p, rs, _ = _masked_cg_update(x, r, p, rs, Ap, tol_sq,
+                                           storage=storage)
         res = jnp.sqrt(jnp.maximum(rs, 0.0))
         residuals.append(res[None] if b.ndim > 1 else res)
         it += 1

@@ -7,9 +7,12 @@ budget).
 
 All kernel work flows through a pluggable ``KernelOps`` backend
 (``repro.ops``): ``FalkonConfig.ops_impl`` selects it ("jnp" reference or
-"pallas" fused single-pass sweep) and ``FalkonConfig.precision`` sets the
-input/accumulate policy ("fp32" or "bf16" inputs with fp32 accumulation).
-``matvec_impl`` is kept as a deprecated alias of ``ops_impl``.
+"pallas" fused single-pass sweep) and ``FalkonConfig.precision`` names the
+``PrecisionPolicy`` — "fp32", or "bf16" for END-TO-END bfloat16 storage
+(X/C/u/v/t, the CG iterates, the streamed chunks) with compensated fp32
+accumulation; the Gram block and preconditioner Cholesky stay fp32 by
+per-buffer override. ``matvec_impl`` is kept as a deprecated alias of
+``ops_impl``.
 
 The solve is fully jittable: ``falkon_solve`` is a pure function of
 (X, y, centers, preconditioner) so it can be lowered/compiled for the dry-run
@@ -49,7 +52,9 @@ class FalkonConfig:
     jitter: float | None = None
     rank_deficient: bool = False
     ops_impl: str = "jnp"                  # KernelOps backend: "jnp" | "pallas"
-    precision: str = "fp32"                # "fp32" | "bf16" (fp32 accumulate)
+    precision: str = "fp32"                # PrecisionPolicy name: "fp32" |
+                                           # "bf16" (end-to-end bf16 storage,
+                                           # compensated fp32 accumulation)
     matvec_impl: str | None = None         # deprecated alias of ops_impl
     tol: float = 0.0
     dtype: str = "float32"
@@ -118,6 +123,20 @@ class FalkonEstimator:
 # ----------------------------------------------------------------------------
 # Pure solve (jittable)
 # ----------------------------------------------------------------------------
+def _cg_storage(ops: KernelOps | None):
+    """The CG iterate storage dtype the backend's precision policy implies.
+
+    Under the bf16 end-to-end policy the CG vectors x/r/p — the (q, p)
+    buffers every sweep reads — are stored bfloat16 with all scalars fp32
+    (see repro.core.cg); the fp32 policy returns None, i.e. the unchanged
+    full-precision recurrence.
+    """
+    pol = getattr(ops, "policy", None)
+    if pol is None or pol.storage == "float32":
+        return None
+    return pol.storage
+
+
 def _falkon_operator(
     matvec: Callable,
     precond: Preconditioner,
@@ -187,7 +206,8 @@ def falkon_solve(
     W = _falkon_operator(matvec, precond, lam, n)
     b = precond.left(rhs_sweep() / n)             # r = B^T z / n (Alg. 1)
 
-    cg = conjugate_gradient(W, b, t, tol=tol)
+    cg = conjugate_gradient(W, b, t, tol=tol,
+                            storage_dtype=_cg_storage(ops))
     alpha = precond.coeffs(cg.x)
 
     if not estimate_cond:
@@ -309,7 +329,8 @@ def falkon_solve_streaming(
 
     W = _falkon_operator(matvec, precond, lam, n)
     b = precond.left(rhs_sweep() / n)
-    cg = conjugate_gradient_host(W, b, t, tol=tol)
+    cg = conjugate_gradient_host(W, b, t, tol=tol,
+                                 storage_dtype=_cg_storage(ops))
     alpha = precond.coeffs(cg.x)
     return FalkonState(centers=centers, precond=precond, beta=cg.x,
                        alpha=alpha, residual_norms=cg.residual_norms,
@@ -361,7 +382,13 @@ def falkon_fit_streaming(
         rank_deficient=config.rank_deficient,
     )
 
-    loader = StreamingLoader(source, prefetch=prefetch, dtype=dt)
+    # Under the bf16 policy the host->device chunk transfer itself runs at
+    # storage width — half the PCIe/DMA traffic of an fp32 stream; the
+    # backend would only re-quantize an fp32 chunk on arrival anyway.
+    pol = getattr(ops, "policy", None)
+    loader_dt = (jnp.dtype(pol.storage)
+                 if pol is not None and pol.storage != "float32" else dt)
+    loader = StreamingLoader(source, prefetch=prefetch, dtype=loader_dt)
     # y's trailing shape from one peeked chunk (hosts only, no transfer)
     out_dim: tuple = ()
     for _, yc in source.chunks():

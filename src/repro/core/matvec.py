@@ -28,7 +28,7 @@ from typing import Callable
 import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.ops import get_ops
+from repro.ops import PrecisionPolicy, get_ops  # noqa: F401  (annotation)
 
 from .kernels import KernelFn
 
@@ -44,7 +44,7 @@ def knm_matvec(
     *,
     block_size: int = 2048,
     impl: str = "jnp",
-    precision: str = "fp32",
+    precision: "str | PrecisionPolicy" = "fp32",
 ) -> Array:
     """Return ``K_nM^T (K_nM u + v)`` with blocked O(M * block) memory.
 
@@ -62,7 +62,7 @@ def knm_apply(
     *,
     block_size: int = 2048,
     impl: str = "jnp",
-    precision: str = "fp32",
+    precision: "str | PrecisionPolicy" = "fp32",
 ) -> Array:
     """Return ``K_nM u`` (prediction path), blocked over rows of X."""
     ops = get_ops(impl, kernel, block_size=block_size, precision=precision)
@@ -78,7 +78,7 @@ def streaming_knm_matvec(
     use_targets: bool = False,
     block_size: int = 2048,
     impl: str = "jnp",
-    precision: str = "fp32",
+    precision: "str | PrecisionPolicy" = "fp32",
 ) -> Array:
     """``K_nM^T (K_nM u + v)`` with X streamed chunk-by-chunk from the host.
 
@@ -101,7 +101,7 @@ def streaming_knm_apply(
     *,
     block_size: int = 2048,
     impl: str = "jnp",
-    precision: str = "fp32",
+    precision: "str | PrecisionPolicy" = "fp32",
 ) -> Array:
     """``K_nM u`` over streamed chunks of X, concatenated in order."""
     from repro.data.streaming import streaming_apply
@@ -117,7 +117,7 @@ def make_distributed_matvec(
     *,
     block_size: int = 2048,
     impl: str = "jnp",
-    precision: str = "fp32",
+    precision: "str | PrecisionPolicy" = "fp32",
 ) -> Callable:
     """shard_map-wrapped ``K_nM^T (K_nM u + v)`` over the mesh data axes.
 

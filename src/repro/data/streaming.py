@@ -106,6 +106,10 @@ class StreamingLoader:
     ``prefetch=0`` disables the thread and transfers chunks inline — the
     right mode when "host" and "device" share one memory arena (CPU backend:
     an overlap thread only contends with compute for the same cores).
+
+    ``dtype`` is the width chunks CROSS THE BUS in: under the bf16 precision
+    policy ``falkon_fit_streaming`` sets it to the policy's storage dtype,
+    halving host->device traffic relative to an fp32 stream.
     """
 
     def __init__(self, source: ChunkSource, *, prefetch: int = 2, dtype=None):
@@ -220,6 +224,7 @@ def streaming_sweep(ops, loader, C: Array, u: Array, *, use_targets=True):
     else:
         it = loader.iter_chunks(with_targets=False)
     w = None
+    out_dtype = None
     for xc, yc in it:
         if use_targets and yc is None:
             raise ValueError(
@@ -229,10 +234,18 @@ def streaming_sweep(ops, loader, C: Array, u: Array, *, use_targets=True):
             )
         vc = yc if use_targets else None
         wc = ops.sweep(xc, C, u, vc)
+        if out_dtype is None:
+            out_dtype = wc.dtype
+        # Reduced-storage chunk results (bf16 policy) accumulate in fp32
+        # across chunks — the same accumulate-dtype contract as the
+        # in-kernel tile loops; on the fp32 path the astype is a no-op, so
+        # the chunked == in-core identity stays bit-for-bit.
+        if jnp.dtype(out_dtype).itemsize < 4:
+            wc = wc.astype(jnp.float32)
         w = wc if w is None else w + wc
     if w is None:
         raise ValueError("streaming_sweep: loader yielded no chunks")
-    return w
+    return w.astype(out_dtype)
 
 
 def streaming_apply(ops, loader, C: Array, u: Array) -> Array:

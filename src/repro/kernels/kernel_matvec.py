@@ -26,12 +26,17 @@ per-backend kernel lists.
 
 Grid conventions: (i over A/X row tiles, j over B/C tiles), j minor.
 Accumulators are fp32 VMEM scratch initialised on the first visit and flushed
-on the last — the standard Pallas reduction pattern. Inputs may be bf16
-(``precision='bf16'`` upstream): the distance/dot matmuls feed the MXU in the
-input dtype with ``preferred_element_type=float32``, i.e. bf16-in/fp32-
-accumulate. Tile sizes default to multiples of the 128-wide MXU systolic
-dimensions; wrappers pad every operand to tile multiples and mask padded rows
-with in-kernel iota masks (no mask operands in HBM).
+on the last — the standard Pallas reduction pattern. Operands may be bf16
+(``precision='bf16'`` upstream — under the end-to-end policy X, C, u, v AND
+the outputs/HBM spills are all bfloat16): the distance/dot matmuls feed the
+MXU in the input dtype with ``preferred_element_type=float32``, i.e.
+bf16-in/fp32-accumulate. With ``compensated=True`` each accumulator carries a
+same-shape Kahan/two-sum compensation buffer (``_two_sum``), so the tile-loop
+reduction error stays O(eps_fp32) independent of the grid size — the
+guarantee that makes bf16 storage safe at large n/M. Tile sizes default to
+multiples of the 128-wide MXU systolic dimensions; wrappers pad every operand
+to tile multiples and mask padded rows with in-kernel iota masks (no mask
+operands in HBM).
 """
 from __future__ import annotations
 
@@ -89,6 +94,19 @@ def sweep_tile_grid(n: int, M: int, block_m: int, block_n: int
     return -(-n // bm), -(-M // bn)
 
 
+def _two_sum(acc: Array, comp: Array, delta: Array) -> tuple[Array, Array]:
+    """Kahan/two-sum compensated ``acc += delta``; returns (acc', comp').
+
+    ``comp`` carries the low-order bits lost by each fp32 add; folding it
+    into the next delta bounds the whole reduction's error at O(eps_fp32)
+    instead of O(steps * eps_fp32). Pure arithmetic — safe inside Pallas
+    bodies and lax.scan carries alike.
+    """
+    y = delta - comp
+    t = acc + y
+    return t, (t - acc) - y
+
+
 def _tile(a, b, spec: KernelSpec) -> Array:
     """K(a, b) tile: one MXU matmul + VPU elementwise, fp32 accumulate."""
     af = a.astype(jnp.float32)
@@ -105,8 +123,15 @@ def _tile(a, b, spec: KernelSpec) -> Array:
 # ---------------------------------------------------------------------------
 def _kernel_matmul_kernel(a_ref, b_ref, v_ref, *rest,
                           spec: KernelSpec, n_valid: int, bn: int, nbj: int,
-                          has_add: bool):
-    """One (i, j) grid step: acc_i += K(A_i, B_j) @ V_j (+ add_i at init)."""
+                          has_add: bool, compensated: bool):
+    """One (i, j) grid step: acc_i += K(A_i, B_j) @ V_j (+ add_i at init).
+
+    With ``compensated`` the j-loop reduction runs through a Kahan carry
+    buffer (``_two_sum``) so bf16-policy sweeps keep O(eps_fp32) summation
+    error regardless of the tile count.
+    """
+    if compensated:
+        *rest, comp_ref = rest
     if has_add:
         add_ref, o_ref, acc_ref = rest
     else:
@@ -119,14 +144,21 @@ def _kernel_matmul_kernel(a_ref, b_ref, v_ref, *rest,
             acc_ref[...] = add_ref[...].astype(jnp.float32)
         else:
             acc_ref[...] = jnp.zeros_like(acc_ref)
+        if compensated:
+            comp_ref[...] = jnp.zeros_like(comp_ref)
 
     # mask padded B rows: global column index >= n_valid has no data
     col = j * bn + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
     bmask = (col < n_valid).astype(jnp.float32)
     k = _tile(a_ref[...], b_ref[...], spec) * bmask
     v = v_ref[...].astype(jnp.float32)
-    acc_ref[...] += jax.lax.dot_general(                       # (bm, p) MXU
+    delta = jax.lax.dot_general(                               # (bm, p) MXU
         k, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    if compensated:
+        acc_ref[...], comp_ref[...] = _two_sum(acc_ref[...], comp_ref[...],
+                                               delta)
+    else:
+        acc_ref[...] += delta
 
     @pl.when(j == nbj - 1)
     def _flush():
@@ -139,6 +171,8 @@ def kernel_matmul_pallas(
     spec: KernelSpec | None = None,
     add: Array | None = None,
     block_m: int = 256, block_n: int = 512,
+    compensated: bool = False,
+    out_dtype=None,
     interpret: bool = True,
 ) -> Array:
     """out = K(A, B) @ V (+ add) with on-the-fly Gram tiles.
@@ -147,15 +181,23 @@ def kernel_matmul_pallas(
     wrapper pads to tile multiples and masks padded B rows. ``add`` is an
     optional (m, p) additive term folded into the accumulator at init — the
     j-sharded sweep uses it to fuse ``t = K u + v`` into one pass instead of
-    spilling ``K u`` and re-reading it for the add. Pass either a ``spec``
-    (preferred) or legacy ``kind``/``scale``. ``interpret=True`` runs the
-    kernel body in Python (CPU validation); on TPU pass False.
+    spilling ``K u`` and re-reading it for the add. ``compensated`` switches
+    the j-loop reduction to Kahan/two-sum fp32 (the bf16 policy's
+    accumulation contract). ``out_dtype`` overrides the output dtype (the
+    flush cast out of the fp32 accumulator); by default it follows the
+    operands' promotion — the j-sharded sweep passes the policy's storage
+    dtype so ``t`` spills to HBM at half width, and the coefficient dtype
+    for the final w. The accumulator itself is always fp32 VMEM scratch.
+    Pass either a ``spec`` (preferred) or legacy ``kind``/``scale``.
+    ``interpret=True`` runs the kernel body in Python (CPU validation); on
+    TPU pass False.
     """
     spec = _as_spec(kind, scale, spec)
     m, d = A.shape
     n, _ = B.shape
     p = V.shape[1]
-    out_dtype = jnp.promote_types(A.dtype, V.dtype)
+    if out_dtype is None:
+        out_dtype = jnp.promote_types(A.dtype, V.dtype)
 
     bm = min(_round_up(block_m, SUBLANE), _round_up(m, SUBLANE))
     bn = min(_round_up(block_n, LANE), _round_up(n, LANE))
@@ -181,14 +223,18 @@ def kernel_matmul_pallas(
         in_specs.append(pl.BlockSpec((bm, pp), lambda i, j: (i, 0)))  # add_i
         operands.append(jnp.pad(add, ((0, mp - m), (0, pp - p))))
 
+    scratch = [pltpu.VMEM((bm, pp), jnp.float32)]             # fp32 accum
+    if compensated:
+        scratch.append(pltpu.VMEM((bm, pp), jnp.float32))     # Kahan carry
     out = pl.pallas_call(
         functools.partial(_kernel_matmul_kernel, spec=spec, n_valid=n,
-                          bn=bn, nbj=nbj, has_add=has_add),
+                          bn=bn, nbj=nbj, has_add=has_add,
+                          compensated=compensated),
         grid=(nbi, nbj),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, pp), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((mp, pp), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, pp), jnp.float32)],   # fp32 accum
+        scratch_shapes=scratch,
         interpret=interpret,
     )(*operands)
     return out[:m, :p]
@@ -198,7 +244,7 @@ def kernel_matmul_pallas(
 # fused sweep: w = K(X, C)^T (K(X, C) u + v) in ONE pass over X
 # ---------------------------------------------------------------------------
 def _fused_sweep_kernel(x_ref, c_ref, u_ref, *rest,
-                        spec: KernelSpec, has_v: bool,
+                        spec: KernelSpec, has_v: bool, compensated: bool,
                         n_valid: int, m_valid: int,
                         bm: int, bn: int, nbi: int, nbj: int):
     """One (i, j) grid step of the single-pass sweep.
@@ -208,7 +254,14 @@ def _fused_sweep_kernel(x_ref, c_ref, u_ref, *rest,
     for row block i is complete (j == nbj-1), ``t_i`` gains ``v_i``, padded X
     rows are masked, and the strip is swept a second time FROM VMEM for
     ``w_j += K_ij^T t_i`` — no kernel re-evaluation, no HBM round-trip.
+
+    With ``compensated`` both reductions (t over the j tiles, w over the i
+    row blocks) run through Kahan carry buffers, keeping the summation error
+    at O(eps_fp32) independent of the grid — the bf16 policy's accumulation
+    contract.
     """
+    if compensated:
+        *rest, tc_ref, wc_ref = rest
     if has_v:
         v_ref, o_ref, cnt_ref, strip_ref, t_ref, w_ref = rest
     else:
@@ -220,10 +273,14 @@ def _fused_sweep_kernel(x_ref, c_ref, u_ref, *rest,
     def _init_w():
         w_ref[...] = jnp.zeros_like(w_ref)
         cnt_ref[0, 0] = 0
+        if compensated:
+            wc_ref[...] = jnp.zeros_like(wc_ref)
 
     @pl.when(j == 0)
     def _init_t():
         t_ref[...] = jnp.zeros_like(t_ref)
+        if compensated:
+            tc_ref[...] = jnp.zeros_like(tc_ref)
 
     # K_ij evaluated exactly once per (i, j): count it.
     col = j * bn + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
@@ -231,8 +288,12 @@ def _fused_sweep_kernel(x_ref, c_ref, u_ref, *rest,
     k = _tile(x_ref[...], c_ref[...], spec) * cmask            # (bm, bn)
     strip_ref[j] = k
     u = u_ref[...].astype(jnp.float32)                         # (bn, p)
-    t_ref[...] += jax.lax.dot_general(                         # (bm, p) MXU
+    t_delta = jax.lax.dot_general(                             # (bm, p) MXU
         k, u, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    if compensated:
+        t_ref[...], tc_ref[...] = _two_sum(t_ref[...], tc_ref[...], t_delta)
+    else:
+        t_ref[...] += t_delta
     cnt_ref[0, 0] += 1
 
     @pl.when(j == nbj - 1)
@@ -244,9 +305,14 @@ def _fused_sweep_kernel(x_ref, c_ref, u_ref, *rest,
         t = t * (row < n_valid).astype(jnp.float32)            # pad rows of X
 
         def body(jj, _):
-            w_ref[jj] += jax.lax.dot_general(                  # (bn, p) MXU
+            delta = jax.lax.dot_general(                       # (bn, p) MXU
                 strip_ref[jj], t, (((0,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32)
+            if compensated:
+                w_ref[jj], wc_ref[jj] = _two_sum(w_ref[jj], wc_ref[jj],
+                                                 delta)
+            else:
+                w_ref[jj] += delta
             return 0
 
         jax.lax.fori_loop(0, nbj, body, 0)
@@ -260,6 +326,7 @@ def fused_sweep_pallas(
     X: Array, C: Array, u: Array, v: Array | None, *,
     spec: KernelSpec,
     block_m: int = 256, block_n: int = 512,
+    compensated: bool = False,
     interpret: bool = True,
     return_tile_count: bool = False,
 ) -> Array | tuple[Array, Array]:
@@ -270,8 +337,12 @@ def fused_sweep_pallas(
     VMEM residency per step: one (bm, d) X tile, one (bn, d) C tile, the
     row-strip scratch (nbj, bm, bn) and the fp32 accumulator (nbj, bn, p) —
     i.e. O(bm * M + M * p) scratch, the paper's O(M) working-set budget times
-    the block height. With ``return_tile_count=True`` also returns the number
-    of Gram-tile evaluations the kernel performed (an int32 scalar; equals
+    the block height. ``compensated`` adds Kahan carry buffers beside the t/w
+    accumulators (two-sum fp32 — the bf16 policy's accumulation contract; the
+    planner's budget model counts them). Output dtype follows the operands
+    (bf16 in -> bf16 out under the end-to-end policy). With
+    ``return_tile_count=True`` also returns the number of Gram-tile
+    evaluations the kernel performed (an int32 scalar; equals
     ceil(n/bm) * ceil(M/bn) — exactly one evaluation per tile, which is the
     fusion claim and is asserted by tests/test_kernel_ops.py).
     """
@@ -306,9 +377,20 @@ def fused_sweep_pallas(
         in_specs.append(pl.BlockSpec((bm, pp), lambda i, j: (i, 0)))  # v_i
         operands.append(vp)
 
+    scratch = [
+        pltpu.VMEM((nbj, bm, bn), jnp.float32),   # Gram row strip
+        pltpu.VMEM((bm, pp), jnp.float32),        # t_i = K_i u + v_i
+        pltpu.VMEM((nbj, bn, pp), jnp.float32),   # fp32 w accumulator
+    ]
+    if compensated:
+        scratch += [
+            pltpu.VMEM((bm, pp), jnp.float32),        # t Kahan carry
+            pltpu.VMEM((nbj, bn, pp), jnp.float32),   # w Kahan carry
+        ]
     out, cnt = pl.pallas_call(
         functools.partial(
             _fused_sweep_kernel, spec=spec, has_v=has_v,
+            compensated=compensated,
             n_valid=n, m_valid=M, bm=bm, bn=bn, nbi=nbi, nbj=nbj),
         grid=(nbi, nbj),
         in_specs=in_specs,
@@ -321,11 +403,7 @@ def fused_sweep_pallas(
             jax.ShapeDtypeStruct((nbj, bn, pp), out_dtype),
             jax.ShapeDtypeStruct((1, 1), jnp.int32),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((nbj, bm, bn), jnp.float32),   # Gram row strip
-            pltpu.VMEM((bm, pp), jnp.float32),        # t_i = K_i u + v_i
-            pltpu.VMEM((nbj, bn, pp), jnp.float32),   # fp32 w accumulator
-        ],
+        scratch_shapes=scratch,
         interpret=interpret,
     )(*operands)
 
@@ -345,6 +423,9 @@ def sharded_sweep_pallas(
     spec: KernelSpec,
     shard_m: int = 8192,
     block_m: int = 256, block_n: int = 512,
+    compensated: bool = False,
+    t_dtype=None,
+    out_dtype=None,
     interpret: bool = True,
 ) -> Array:
     """w = K(X,C)^T (K(X,C) u + v) for M far beyond the fused kernel's reach.
@@ -369,7 +450,11 @@ def sharded_sweep_pallas(
     so M scales to 10^5+; ``shard_m`` only bounds the per-``pallas_call`` HBM
     workspace (each shard pads its C rows to lane multiples) and is picked by
     the planner in ``repro.ops.base``. Cost: 2 Gram evaluations per tile vs
-    the fused kernel's 1 — the price of not holding the strip.
+    the fused kernel's 1 — the price of not holding the strip. Under the bf16
+    policy ``t_dtype`` (the policy's storage dtype) makes the HBM-spilled
+    ``t`` — the dominant O(n*p) HBM round-trip of this path — move at half
+    width, while ``out_dtype`` (the policy's coefficient dtype) keeps the
+    final M-sized w full precision.
     """
     M = C.shape[0]
     squeeze = u.ndim == 1
@@ -378,12 +463,14 @@ def sharded_sweep_pallas(
 
     t = kernel_matmul_pallas(X, C, u2, spec=spec, add=v2,
                              block_m=block_m, block_n=block_n,
+                             compensated=compensated, out_dtype=t_dtype,
                              interpret=interpret)
 
     shard = max(int(shard_m), 1)
     ws = [
         kernel_matmul_pallas(C[j0:min(j0 + shard, M)], X, t, spec=spec,
                              block_m=block_m, block_n=block_n,
+                             compensated=compensated, out_dtype=out_dtype,
                              interpret=interpret)
         for j0 in range(0, M, shard)
     ]

@@ -27,14 +27,34 @@ concrete kernel implementation. This module deliberately has no imports from
 ``repro.core`` or ``repro.kernels`` so it can never participate in an import
 cycle; backends duck-type the kernel via its ``spec`` attribute / call.
 
-``precision`` is the input/accumulate policy of the hot loop:
+``precision`` is the storage/accumulate policy of the hot loop, resolved to a
+:class:`PrecisionPolicy` (a name is just a registry key):
 
-* ``"fp32"`` (default) — inputs and accumulation in float32 (or float64
-  under x64).
-* ``"bf16"`` — X and C are quantized to bfloat16 before entering the
-  bandwidth-bound ``sweep``/``apply`` (halving HBM traffic and feeding the
-  MXU bf16 inputs); all contractions still accumulate in float32, and
-  ``gram`` (the preconditioner's Cholesky input) stays full precision.
+* ``"fp32"`` (default) — every buffer float32 (or float64 under x64), plain
+  accumulation. Numerically identical to the pre-policy code path.
+* ``"bf16"`` — END-TO-END bfloat16 storage for every DATA-SPACE (n-sized)
+  buffer: X, C, the v term, the forward buffer ``t`` (including its HBM
+  spill in the j-sharded sweep), the CG iterates, and the streamed
+  host->device chunks — the full 2x HBM-footprint/bandwidth win, since the
+  sweep's traffic is dominated by n-sized objects — while every contraction
+  accumulates in float32 with Kahan/two-sum COMPENSATION inside the tile
+  loops, so the reduction error stays O(eps_fp32) instead of growing with
+  the tile count. Per-buffer overrides keep three things float32: ``gram``
+  (the preconditioner's Cholesky input), ``cholesky`` (the factors), and
+  ``coeffs`` — the M-sized coefficient vectors crossing the sweep boundary
+  (u in, w out). The last one is measured, not taste: quantizing u/w makes
+  the PRECONDITIONED operator nonlinear at the quantization scale, the
+  triangular solves amplify that noise, and CG stalls near 1e-1 relative
+  residual (vs 5e-4 with fp32 coeffs); u/w are O(M*p) so keeping them wide
+  costs no meaningful bandwidth. The bf16 CG iterates are safe precisely
+  because the operator stays exact-at-the-point (see repro.core.cg).
+
+Error model (tested against an fp64 oracle in tests/test_precision.py and
+measured by benchmarks/precision_sweep.py): with bf16 storage the dominant
+term is input/vector quantization, |w - w_fp64| / |w_fp64| <= c * eps_bf16
+with eps_bf16 = 2^-8 ~= 3.9e-3; compensated fp32 accumulation keeps the
+summation term at O(eps_fp32) independent of n/M, so the documented
+end-to-end ceiling is 1e-2 relative across all registered kernels.
 """
 from __future__ import annotations
 
@@ -43,6 +63,82 @@ import os
 from typing import Any, Protocol, runtime_checkable
 
 PRECISIONS = ("fp32", "bf16")
+
+#: dtype-name -> bytes, kept local so this module stays jax-import-free.
+_ITEMSIZE = {"float64": 8, "float32": 4, "bfloat16": 2, "float16": 2,
+             "float8_e4m3fn": 1, "float8_e5m2": 1}
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """The full precision contract of the FALKON hot loop.
+
+    ``storage`` is the dtype the DATA-SPACE (n-sized) buffers live in (HBM
+    footprint and host->device transfer width): X, C, v, the forward buffer
+    ``t`` and its j-sharded HBM spill, the streamed chunks, and the CG
+    iterates. ``accumulate`` is the dtype every contraction reduces in (the
+    MXU runs storage-in/accumulate-out via ``preferred_element_type``).
+    With ``compensated=True`` the Pallas tile loops (and the jnp reference
+    scan) carry a Kahan/two-sum compensation buffer next to each
+    accumulator, so the summation error is O(eps_accumulate), independent
+    of the number of tiles reduced. ``overrides`` pins individual buffers
+    to a different storage dtype — by default three stay float32:
+
+    * ``gram`` / ``cholesky`` — the preconditioner's K_MM is one-shot
+      O(M^2) work with no bandwidth win to harvest, and quantizing it can
+      push a borderline-PSD matrix indefinite.
+    * ``coeffs`` — the M-sized coefficient vectors at the sweep boundary
+      (u in, w out). Quantizing them makes the preconditioned CG operator
+      nonlinear at eps_storage scale, which the triangular solves amplify
+      into a ~1e-1 residual stall (measured in tests/test_precision.py);
+      they are O(M*p), so float32 costs nothing against the n-sized
+      buffers the policy shrinks.
+
+    CG scalars (alpha, beta, residual norms) are ALWAYS computed in
+    ``accumulate`` precision regardless of ``storage`` — see repro.core.cg.
+    """
+
+    name: str
+    storage: str = "float32"
+    accumulate: str = "float32"
+    compensated: bool = False
+    overrides: tuple[tuple[str, str], ...] = (
+        ("gram", "float32"), ("cholesky", "float32"), ("coeffs", "float32"))
+
+    def buffer_dtype(self, buffer: str) -> str:
+        """Storage dtype for a named buffer, honoring per-buffer overrides."""
+        return dict(self.overrides).get(buffer, self.storage)
+
+    @property
+    def storage_itemsize(self) -> int:
+        return _ITEMSIZE[self.storage]
+
+    @property
+    def accumulate_itemsize(self) -> int:
+        return _ITEMSIZE[self.accumulate]
+
+    @property
+    def coeffs_itemsize(self) -> int:
+        return _ITEMSIZE[self.buffer_dtype("coeffs")]
+
+
+#: Named policies ``get_ops(precision=...)`` accepts as strings.
+POLICIES: dict[str, PrecisionPolicy] = {
+    "fp32": PrecisionPolicy(name="fp32"),
+    "bf16": PrecisionPolicy(name="bf16", storage="bfloat16",
+                            accumulate="float32", compensated=True),
+}
+
+
+def resolve_precision(precision) -> PrecisionPolicy:
+    """Resolve a policy name (or pass through a ``PrecisionPolicy``)."""
+    if isinstance(precision, PrecisionPolicy):
+        return precision
+    if precision in POLICIES:
+        return POLICIES[precision]
+    raise ValueError(
+        f"unknown precision {precision!r}; supported: {PRECISIONS} "
+        f"(or a PrecisionPolicy instance)")
 
 SWEEP_PATHS = ("fused", "two_pass", "j_sharded", "jnp")
 
@@ -78,44 +174,108 @@ class SweepPlan:
     io_bytes: int              # double-buffered operand/output tiles
     vmem_budget_bytes: int
     reason: str
+    input_dtype: str = "float32"    # X/C storage dtype
+    vector_dtype: str = "float32"   # v/t data-space storage dtype
+    accum_dtype: str = "float32"    # contraction accumulate dtype
+    coeffs_dtype: str = "float32"   # u-in / w-out coefficient dtype
+    compensated: bool = False       # Kahan carry buffers counted in scratch
 
     @property
     def total_bytes(self) -> int:
         return self.scratch_bytes + self.io_bytes
+
+    @property
+    def hbm_bytes(self) -> int:
+        """Storage-dtype HBM working set of one sweep: X, C, v and the
+        forward buffer t (spilled on the out-of-core paths) at storage
+        width, plus the M-sized u/w at coefficient width. This is the
+        footprint the bf16 policy halves (the n-sized terms dominate) —
+        the planner-model number the precision benchmark reports as
+        headroom."""
+        in_item = _ITEMSIZE[self.input_dtype]
+        vec_item = _ITEMSIZE[self.vector_dtype]
+        co_item = _ITEMSIZE[self.coeffs_dtype]
+        return (in_item * (self.n + self.M) * self.d
+                + vec_item * 2 * self.n * self.p
+                + co_item * 2 * self.M * self.p)
 
 
 def plan_sweep(
     n: int, M: int, d: int, p: int = 1, *,
     bm: int, bn: int,
     itemsize: int = 4,
+    vec_itemsize: int | None = None,
+    coeffs_itemsize: int | None = None,
+    acc_itemsize: int = 4,
+    compensated: bool = False,
+    policy: "PrecisionPolicy | None" = None,
     vmem_budget: int | None = None,
     shard_m: int | None = None,
 ) -> SweepPlan:
     """Pick fused / two-pass / j-sharded from a VMEM budget model.
 
-    The fused single-pass sweep needs, in VMEM: the (bm, Mpad) fp32 Gram row
-    strip, the (Mpad, pp) fp32 accumulator twice over (strip-major layout),
-    the (bm, pp) fp32 forward block, plus double-buffered input/output tiles
-    (``itemsize`` bytes for X/C — 2 under bf16). When that exceeds the budget
-    the sweep must evaluate each Gram tile twice, and the only question left
-    is the C-shard granularity: ``shard_m`` is sized so one shard's padded
-    fp32 copy stays within the budget-scaled HBM workspace. A single shard
-    covering all of M degenerates to the classic two-pass composition.
+    The fused single-pass sweep needs, in VMEM: the (bm, Mpad) accumulate-
+    dtype Gram row strip; the (Mpad, pp) w accumulator and (bm, pp) forward
+    block in the accumulate dtype (doubled when ``compensated`` — each
+    accumulator carries a same-shape Kahan compensation buffer); the
+    (Mpad, pp) w OUTPUT buffer at ``coeffs_itemsize``; plus double-buffered
+    input/output tiles — ``itemsize`` bytes for the X/C tiles,
+    ``vec_itemsize`` for the data-space v tile and ``coeffs_itemsize`` for
+    the u tile (the pre-policy model wrongly charged every vector at 4
+    bytes regardless of its storage dtype). When the total exceeds the
+    budget the sweep must evaluate each Gram tile twice, and the only
+    question left is the C-shard granularity: ``shard_m`` is sized so one
+    shard's padded storage-dtype copy stays within the budget-scaled HBM
+    workspace. A single shard covering all of M degenerates to the classic
+    two-pass composition.
 
-    Pure arithmetic on static shapes — safe to call at trace time, no jax
-    imports (this module must stay import-cycle-free).
+    ``policy`` (a :class:`PrecisionPolicy`) is the preferred way to set the
+    dtype knobs; explicit ``itemsize``/``vec_itemsize``/``compensated``
+    remain for direct calls. Pure arithmetic on static shapes — safe to call
+    at trace time, no jax imports (this module must stay import-cycle-free).
     """
+    _names = {8: "float64", 4: "float32", 2: "bfloat16"}
+    if policy is not None:
+        itemsize = policy.storage_itemsize
+        vec_itemsize = policy.storage_itemsize
+        coeffs_itemsize = policy.coeffs_itemsize
+        acc_itemsize = policy.accumulate_itemsize
+        compensated = policy.compensated
+        # dtype NAMES come straight from the policy (the itemsize map below
+        # cannot tell float16 from bfloat16)
+        names = dict(input_dtype=policy.storage, vector_dtype=policy.storage,
+                     accum_dtype=policy.accumulate,
+                     coeffs_dtype=policy.buffer_dtype("coeffs"))
+    else:
+        names = None
+    if vec_itemsize is None:
+        vec_itemsize = itemsize if itemsize >= 4 else 4
+    if coeffs_itemsize is None:
+        coeffs_itemsize = vec_itemsize
+    if names is None:
+        names = dict(input_dtype=_names.get(itemsize, "float32"),
+                     vector_dtype=_names.get(vec_itemsize, "float32"),
+                     accum_dtype=_names.get(acc_itemsize, "float32"),
+                     coeffs_dtype=_names.get(coeffs_itemsize, "float32"))
     if vmem_budget is None:
         vmem_budget = _vmem_budget()
     p = max(p, 1)
     Mpad = -(-M // _LANE) * _LANE
     dp = -(-d // _LANE) * _LANE
     pp = -(-p // _LANE) * _LANE
-    scratch = 4 * (bm * Mpad + 2 * Mpad * pp + bm * pp)
-    io = 2 * (itemsize * (bm + bn) * dp + 4 * (bn + bm) * pp)
+    acc = acc_itemsize * (Mpad * pp + bm * pp)      # w + t accumulators
+    if compensated:
+        acc *= 2                                    # Kahan carry buffers
+    scratch = (acc_itemsize * bm * Mpad             # Gram row strip
+               + acc
+               + coeffs_itemsize * Mpad * pp)       # w output buffer
+    io = 2 * (itemsize * (bm + bn) * dp            # X_i / C_j tiles
+              + coeffs_itemsize * bn * pp          # u_j tile
+              + vec_itemsize * bm * pp)            # v_i tile
     base = dict(n=n, M=M, d=d, p=p, block_m=bm, block_n=bn,
                 scratch_bytes=scratch, io_bytes=io,
-                vmem_budget_bytes=vmem_budget)
+                vmem_budget_bytes=vmem_budget,
+                compensated=compensated, **names)
 
     if scratch + io <= vmem_budget:
         return SweepPlan(
@@ -125,8 +285,9 @@ def plan_sweep(
             **base)
 
     if shard_m is None:
-        # one shard's padded fp32 C copy ~ one budget of HBM workspace
-        shard_m = max(bn, vmem_budget // (4 * dp))
+        # one shard's padded storage-dtype C copy ~ one budget of HBM
+        # workspace
+        shard_m = max(bn, vmem_budget // (itemsize * dp))
     shard_m = max(bn, (int(shard_m) // bn) * bn)
     over = (f"fused scratch {scratch}B + io {io}B exceeds the "
             f"{vmem_budget}B VMEM budget")
@@ -161,7 +322,7 @@ class KernelOps(Protocol):
 
     kernel: Any
     block_size: int
-    precision: str
+    precision: "str | PrecisionPolicy"
 
     def sweep(self, X, C, u, v=None):
         """K(X,C)^T (K(X,C) u + v); ``v=None`` means v == 0."""
@@ -197,18 +358,18 @@ def available_ops() -> tuple[str, ...]:
 
 
 def get_ops(impl: str, kernel, *, block_size: int = 2048,
-            precision: str = "fp32") -> KernelOps:
+            precision: "str | PrecisionPolicy" = "fp32") -> KernelOps:
     """Construct the named backend for ``kernel``.
 
     ``kernel`` must carry a ``KernelSpec`` (anything built by
     ``repro.core.kernels.make_kernel`` / ``@register_kernel`` does).
+    ``precision`` is a policy name ("fp32"/"bf16") or a full
+    :class:`PrecisionPolicy`.
     """
     if impl not in _REGISTRY:
         raise ValueError(
             f"unknown KernelOps impl {impl!r}; registered: {available_ops()}")
-    if precision not in PRECISIONS:
-        raise ValueError(
-            f"unknown precision {precision!r}; supported: {PRECISIONS}")
+    resolve_precision(precision)  # validate early; backends resolve lazily
     return _REGISTRY[impl](kernel=kernel, block_size=block_size,
                            precision=precision)
 
@@ -219,4 +380,9 @@ class OpsBase:
 
     kernel: Any
     block_size: int = 2048
-    precision: str = "fp32"
+    precision: "str | PrecisionPolicy" = "fp32"
+
+    @property
+    def policy(self) -> PrecisionPolicy:
+        """The resolved :class:`PrecisionPolicy` this backend runs under."""
+        return resolve_precision(self.precision)

@@ -38,22 +38,45 @@ def _pad_blocks(X: Array, v: Array | None, block_size: int):
 class JnpKernelOps(OpsBase):
     """Blocked lax.scan reference implementation of the three primitives."""
 
+    def _quant(self, a: Array | None) -> Array | None:
+        """Storage-dtype quantization, fp32 compute — mirrors the Pallas
+        backend's storage-in/fp32-accumulate policy bit-for-policy (not
+        bit-for-bit: MXU bf16 matmuls round differently). float32 storage
+        means full precision: pass through untouched (x64 callers keep
+        their float64)."""
+        if a is None or self.policy.storage == "float32":
+            return a
+        return a.astype(jnp.dtype(self.policy.storage)).astype(jnp.float32)
+
+    def _quant_coeffs(self, u: Array) -> Array:
+        """u at the coefficient dtype (float32 by override; any reduced-
+        storage u — bf16/fp16/fp8 CG iterates — is widened for compute;
+        an fp64 u under float32 coeffs is never narrowed)."""
+        co_name = self.policy.buffer_dtype("coeffs")
+        co = jnp.dtype(co_name)
+        if co_name != "float32":
+            return u.astype(co).astype(jnp.float32)
+        if jnp.dtype(u.dtype).itemsize < co.itemsize:
+            return u.astype(jnp.float32)
+        return u
+
     def _inputs(self, X: Array, C: Array) -> tuple[Array, Array]:
-        if self.precision == "bf16":
-            # bf16 input quantization, fp32 compute — mirrors the Pallas
-            # backend's bf16-in/fp32-accumulate policy bit-for-policy (not
-            # bit-for-bit: MXU bf16 matmuls round differently).
-            f32 = jnp.float32
-            return (X.astype(jnp.bfloat16).astype(f32),
-                    C.astype(jnp.bfloat16).astype(f32))
-        return X, C
+        return self._quant(X), self._quant(C)
 
     def sweep(self, X: Array, C: Array, u: Array, v: Array | None = None) -> Array:
         """K_nM^T (K_nM u + v) with blocked O(M * block) memory.
 
         ``u``: (M,) or (M, p); ``v``: (n,) or (n, p) or None (treated as 0).
+        Under a non-fp32 policy the data-space v is quantized through the
+        storage dtype, u through the policy's coefficient dtype (float32 by
+        override — quantized coefficients destabilize preconditioned CG),
+        and the block reduction is Kahan-compensated when the policy says
+        so — mirroring the Pallas backend's end-to-end contract, w included
+        (returned at the coefficient dtype).
         """
+        pol = self.policy
         X, C = self._inputs(X, C)
+        u, v = self._quant_coeffs(u), self._quant(v)
         block_size = self.block_size
         kernel = self.kernel
         Xb, mask, vp, nb = _pad_blocks(X, v, block_size)
@@ -61,7 +84,7 @@ class JnpKernelOps(OpsBase):
         if vp is not None:
             vb = vp.reshape((nb, block_size) + v.shape[1:])
 
-        def body(carry, inp):
+        def delta(inp):
             if v is None:
                 xb, mb = inp
                 Kb = kernel(xb, C) * mb[:, None]          # mask padded rows
@@ -72,16 +95,34 @@ class JnpKernelOps(OpsBase):
                 # Kb's zeroed rows already null padded contributions in
                 # Kb.T @ t; masking v too keeps t finite for arbitrary pads.
                 t = Kb @ u + vblk * (mb[:, None] if vblk.ndim > 1 else mb)
-            return carry + Kb.T @ t, None
+            return Kb.T @ t
 
-        init = jnp.zeros(out_shape, X.dtype)
         xs = (Xb, mask) if v is None else (Xb, mask, vb)
-        w, _ = jax.lax.scan(body, init, xs)
-        return w
+        if pol.compensated:
+            # Kahan/two-sum across row blocks — literally the same _two_sum
+            # the Pallas tile loops run (lazy import: kernels -> core is the
+            # allowed direction, ops must not import kernels at module load)
+            from repro.kernels.kernel_matvec import _two_sum
+
+            def body(carry, inp):
+                acc, comp = carry
+                return _two_sum(acc, comp, delta(inp)), None
+
+            init = (jnp.zeros(out_shape, X.dtype),
+                    jnp.zeros(out_shape, X.dtype))
+            (w, _), _ = jax.lax.scan(body, init, xs)
+        else:
+            def body(carry, inp):
+                return carry + delta(inp), None
+
+            w, _ = jax.lax.scan(body, jnp.zeros(out_shape, X.dtype), xs)
+        co = pol.buffer_dtype("coeffs")
+        return w.astype(jnp.dtype(co)) if co != "float32" else w
 
     def apply(self, X: Array, C: Array, u: Array) -> Array:
         """K_nM u (prediction path), blocked over rows of X."""
         X, C = self._inputs(X, C)
+        u = self._quant_coeffs(u)
         n = X.shape[0]
         Xb, mask, _, nb = _pad_blocks(X, None, self.block_size)
         kernel = self.kernel
@@ -95,9 +136,15 @@ class JnpKernelOps(OpsBase):
 
     def gram(self, A: Array, B: Array) -> Array:
         """K(A, B) dense (M x M for the preconditioner — paper's memory
-        budget, no blocking needed). Always full precision: the Cholesky
+        budget, no blocking needed). Full precision by per-buffer override
+        (policy ``gram`` buffer, float32 by default): the Cholesky
         downstream is the numerically fragile step, and the bf16 policy's
         bandwidth win does not apply to this one-shot block."""
+        gt = jnp.dtype(self.policy.buffer_dtype("gram"))
+        if jnp.dtype(A.dtype).itemsize < gt.itemsize:   # never downcast fp64
+            A = A.astype(gt)
+        if jnp.dtype(B.dtype).itemsize < gt.itemsize:
+            B = B.astype(gt)
         return self.kernel(A, B)
 
     def plan(self, n: int, M: int, d: int, p: int = 1) -> SweepPlan:
@@ -105,10 +152,13 @@ class JnpKernelOps(OpsBase):
         through the same ``SweepPlan`` shape so callers can introspect any
         backend uniformly."""
         p = max(p, 1)
+        pol = self.policy
         return SweepPlan(
             path="jnp", n=n, M=M, d=d, p=p,
             block_m=self.block_size, block_n=M, shard_m=None,
             scratch_bytes=4 * self.block_size * M, io_bytes=0,
             vmem_budget_bytes=0,
+            input_dtype=pol.storage, vector_dtype=pol.storage,
+            accum_dtype=pol.accumulate, compensated=pol.compensated,
             reason=(f"jnp reference: lax.scan over {self.block_size}-row "
                     f"blocks, O(block * M) live memory"))

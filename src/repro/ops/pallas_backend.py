@@ -19,12 +19,18 @@
 * ``apply`` / ``gram`` — thin wrappers over the kernel-matmul and pairwise
   Pallas kernels.
 
-With ``precision="bf16"`` the data operands (X, C) are cast to bfloat16 before
-entering the bandwidth-bound kernels (``sweep``/``apply``); the
-distance/contraction matmuls then feed the MXU bf16 inputs with
-``preferred_element_type=float32`` (bf16-in/fp32-accumulate). Coefficients,
-v, outputs — and the one-shot ``gram`` feeding the Cholesky — stay full
-precision.
+With ``precision="bf16"`` (or any custom :class:`PrecisionPolicy`) the policy
+is END-TO-END over the data-space buffers: X, C and the v term are cast to
+the storage dtype before entering the bandwidth-bound kernels, and the
+j-sharded path's HBM-spilled ``t`` moves at storage width — the full 2x
+HBM-footprint/bandwidth win (the sweep's traffic is dominated by these
+n-sized objects). The distance/contraction matmuls feed the MXU
+storage-dtype inputs with ``preferred_element_type=float32`` and, when the
+policy says ``compensated``, every tile-loop reduction runs through
+Kahan/two-sum carry buffers (see ``repro.kernels.kernel_matvec``).
+Per-buffer overrides keep the M-sized coefficient vectors at the sweep
+boundary (u in, w out) and the one-shot ``gram`` feeding the Cholesky in
+float32 — see ``PrecisionPolicy`` for why quantizing those is not safe.
 """
 from __future__ import annotations
 
@@ -58,9 +64,29 @@ class PallasKernelOps(OpsBase):
         return min(self.block_size, 256)
 
     def _inputs(self, X: Array, C: Array) -> tuple[Array, Array]:
-        if self.precision == "bf16":
-            return X.astype(jnp.bfloat16), C.astype(jnp.bfloat16)
-        return X, C
+        # storage == float32 means "full precision": leave inputs untouched
+        # (x64 callers keep their float64), exactly the pre-policy behavior.
+        if self.policy.storage == "float32":
+            return X, C
+        st = jnp.dtype(self.policy.storage)
+        return X.astype(st), C.astype(st)
+
+    def _vectors(self, u: Array, v: Array | None) -> tuple[Array, Array | None]:
+        """u at the policy's coefficient dtype (float32 by override — see
+        PrecisionPolicy: quantized coefficients destabilize preconditioned
+        CG), v at data-space storage width (n-sized, the HBM win)."""
+        pol = self.policy
+        if pol.storage != "float32" and v is not None:
+            v = v.astype(jnp.dtype(pol.storage))
+        co_name = pol.buffer_dtype("coeffs")
+        co = jnp.dtype(co_name)
+        if u.dtype != co and (co_name != "float32"
+                              or jnp.dtype(u.dtype).itemsize < co.itemsize):
+            # the override WIDENS any reduced-storage u (bf16/fp16/fp8 CG
+            # iterates crossing back into the sweep) — never narrows an
+            # fp64 u under the default float32 coeffs (x64 callers)
+            u = u.astype(co)
+        return u, v
 
     def plan(self, n: int, M: int, d: int, p: int = 1) -> SweepPlan:
         """The routing decision ``sweep`` will take for these shapes.
@@ -73,24 +99,35 @@ class PallasKernelOps(OpsBase):
         """
         from repro.kernels.kernel_matvec import sweep_block_dims
         bm, bn = sweep_block_dims(n, M, self._block_m, 512)
-        return plan_sweep(n, M, d, p, bm=bm, bn=bn,
-                          itemsize=2 if self.precision == "bf16" else 4)
+        return plan_sweep(n, M, d, p, bm=bm, bn=bn, policy=self.policy)
 
     def sweep(self, X: Array, C: Array, u: Array, v: Array | None = None) -> Array:
         from repro.kernels.kernel_matvec import (fused_sweep_pallas,
                                                  sharded_sweep_pallas)
+        pol = self.policy
         X, C = self._inputs(X, C)
+        u, v = self._vectors(u, v)
         p = u.shape[1] if u.ndim > 1 else 1
         plan = self.plan(X.shape[0], C.shape[0], X.shape[1], p)
         if plan.path == "fused":
             return fused_sweep_pallas(X, C, u, v, spec=self._spec,
                                       block_m=self._block_m,
+                                      compensated=pol.compensated,
                                       interpret=_interpret())
         warnings.warn(SweepPlanWarning(plan), stacklevel=2)
+        # reduced-storage policies pin the HBM t spill to storage width and
+        # the final M-sized w to the coefficient dtype; the fp32 policy
+        # keeps the legacy promotion (None) so x64 callers stay fp64
+        t_dt = out_dt = None
+        if pol.storage != "float32":
+            t_dt = jnp.dtype(pol.storage)
+            out_dt = jnp.dtype(pol.buffer_dtype("coeffs"))
         return sharded_sweep_pallas(
             X, C, u, v, spec=self._spec,
             shard_m=plan.shard_m if plan.shard_m is not None else plan.M,
-            block_m=self._block_m, interpret=_interpret())
+            block_m=self._block_m, compensated=pol.compensated,
+            t_dtype=t_dt, out_dtype=out_dt,
+            interpret=_interpret())
 
     def sweep_with_stats(self, X: Array, C: Array, u: Array,
                          v: Array | None = None) -> tuple[Array, Array]:
@@ -103,7 +140,9 @@ class PallasKernelOps(OpsBase):
         silently measuring a different implementation.
         """
         from repro.kernels.kernel_matvec import fused_sweep_pallas
+        pol = self.policy
         X, C = self._inputs(X, C)
+        u, v = self._vectors(u, v)
         p = u.shape[1] if u.ndim > 1 else 1
         plan = self.plan(X.shape[0], C.shape[0], X.shape[1], p)
         if plan.path != "fused":
@@ -114,24 +153,33 @@ class PallasKernelOps(OpsBase):
                 f"{plan.path!r} path, which has no tile counter")
         return fused_sweep_pallas(X, C, u, v, spec=self._spec,
                                   block_m=self._block_m,
+                                  compensated=pol.compensated,
                                   interpret=_interpret(),
                                   return_tile_count=True)
 
     def apply(self, X: Array, C: Array, u: Array) -> Array:
         from repro.kernels.kernel_matvec import kernel_matmul_pallas
+        pol = self.policy
         X, C = self._inputs(X, C)
+        u, _ = self._vectors(u, None)
         squeeze = u.ndim == 1
         u2 = u[:, None] if squeeze else u
         out = kernel_matmul_pallas(X, C, u2, spec=self._spec,
                                    block_m=self._block_m,
+                                   compensated=pol.compensated,
                                    interpret=_interpret())
         return out[:, 0] if squeeze else out
 
     def gram(self, A: Array, B: Array) -> Array:
-        # Full precision regardless of the bf16 policy: gram feeds the
-        # preconditioner's Cholesky (one-shot O(M^2) work with no bandwidth
-        # win to harvest), and bf16 quantization can push a borderline-PSD
-        # K_MM indefinite.
+        # Per-buffer override (default float32 regardless of the bf16
+        # policy): gram feeds the preconditioner's Cholesky (one-shot O(M^2)
+        # work with no bandwidth win to harvest), and bf16 quantization can
+        # push a borderline-PSD K_MM indefinite.
         from repro.kernels.kernel_matvec import pairwise_kernel_pallas
+        gt = jnp.dtype(self.policy.buffer_dtype("gram"))
+        if jnp.dtype(A.dtype).itemsize < gt.itemsize:   # never downcast fp64
+            A = A.astype(gt)
+        if jnp.dtype(B.dtype).itemsize < gt.itemsize:
+            B = B.astype(gt)
         return pairwise_kernel_pallas(A, B, spec=self._spec,
                                       interpret=_interpret())

@@ -11,6 +11,20 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import pytest  # noqa: E402
 
+# The CI precision matrix runs the tier-1 suite once per axis with
+# REPRO_TEST_PRECISION in {fp32, bf16}. Cheap precision-policy unit tests
+# always parametrize over both policies; the expensive cases (the M=32768
+# acceptance sweep, CG-parity fits, streaming fits in tests/test_precision.py)
+# follow this value so each CI axis exercises its own policy end-to-end.
+TEST_PRECISION = os.environ.get("REPRO_TEST_PRECISION", "fp32")
+assert TEST_PRECISION in ("fp32", "bf16"), TEST_PRECISION
+
+
+@pytest.fixture(scope="session")
+def test_precision() -> str:
+    """The precision axis this test process runs under (env-selected)."""
+    return TEST_PRECISION
+
 
 @pytest.fixture(scope="session")
 def rng():
