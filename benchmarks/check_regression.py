@@ -12,6 +12,13 @@ Dispatches on the candidate's ``benchmark`` field:
   hosts cannot see the MXU/HBM throughput win, the footprint model can) —
   with neither geomean regressing more than ``--max-regression-pct`` below
   its baseline value.
+* ``lambda_path`` — shared-sweep path-solver gate against
+  ``BENCH_path.json``: path-fit throughput must stay >= 2x the L-sequential
+  baseline at L=8 (same-run ratio, machine-neutral; geomean across points,
+  noise-robust) and must not regress more than ``--max-regression-pct``
+  below the checked-in geomean; per record the CountingOps sweep counts
+  must satisfy ``sweeps_seq == L * sweeps_path`` EXACTLY — the
+  deterministic signal that the path solve still shares every data pass.
 
 For ``sweep_fusion``, two gates per matching (n, M, d, block_m, block_n)
 record:
@@ -63,6 +70,44 @@ def _geomean(values):
 #: Absolute acceptance floors for the precision gate (either arm passes).
 PRECISION_SPEEDUP_FLOOR = 1.3
 PRECISION_HEADROOM_FLOOR = 1.8
+
+#: Absolute acceptance floor for the lambda-path gate (at L=8).
+PATH_SPEEDUP_FLOOR = 2.0
+
+
+def compare_lambda_path(baseline: dict, candidate: dict,
+                        max_pct: float) -> list[str]:
+    """Gate BENCH_path.json: exact sweep sharing + the 2x throughput floor."""
+    failures = []
+    for r in candidate.get("records", []):
+        key = (r.get("n"), r.get("M"), r.get("d"))
+        if r["sweeps_seq"] != r["L"] * r["sweeps_path"]:
+            failures.append(
+                f"{key}: sweeps_seq {r['sweeps_seq']} != L={r['L']} * "
+                f"sweeps_path {r['sweeps_path']} — the path solve stopped "
+                "sharing the data sweep")
+
+    speedups = [r["speedup_vs_sequential"]
+                for r in candidate.get("records", [])]
+    if not speedups:
+        return failures + ["candidate has no lambda_path records"]
+    got = _geomean(speedups)
+    L = candidate.get("summary", {}).get("L", "?")
+    print(f"path-fit speedup vs {L}-sequential geomean over "
+          f"{len(speedups)} points: {got:.3f} (floor {PATH_SPEEDUP_FLOOR})")
+    if got < PATH_SPEEDUP_FLOOR:
+        failures.append(
+            f"speedup_vs_sequential geomean {got:.3f} < absolute floor "
+            f"{PATH_SPEEDUP_FLOOR} — the one-sweep-serves-all-lams win "
+            "is gone")
+    base = baseline.get("summary", {}).get("speedup_geomean")
+    if base is not None:
+        floor = float(base) * (1.0 - max_pct / 100.0)
+        if got < floor:
+            failures.append(
+                f"speedup_vs_sequential geomean {got:.3f} < baseline "
+                f"{float(base):.3f} - {max_pct:.0f}%")
+    return failures
 
 
 def compare_precision(baseline: dict, candidate: dict,
@@ -180,7 +225,8 @@ def main(argv=None) -> int:
             f"{baseline.get('benchmark')!r} != candidate {kind!r}"
         )
         return 1
-    gate = compare_precision if kind == "precision_sweep" else compare
+    gate = {"precision_sweep": compare_precision,
+            "lambda_path": compare_lambda_path}.get(kind, compare)
     failures = gate(baseline, candidate, args.max_regression_pct)
     if failures:
         print(f"bench-regression gate FAILED ({kind}):")

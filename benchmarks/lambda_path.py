@@ -1,0 +1,148 @@
+"""lam-path solver benchmark: one shared-sweep path fit vs L sequential fits.
+
+Measures the tentpole claim end to end — model selection over an L-point
+regularization grid should cost ~one fit, not L — and writes
+``BENCH_path.json`` (path override: env ``BENCH_PATH_JSON``), gated in CI by
+``benchmarks/check_regression.py``:
+
+* ``speedup_vs_sequential`` — wall-clock of L sequential ``falkon_fit``
+  calls over one ``falkon_fit_path`` call, measured in the same run on the
+  same machine (machine-neutral ratio, like the fused-sweep gate). The gate
+  floor is 2x at L=8; the data-sweep model predicts ~L minus the shared
+  O(M^3)/selection overheads.
+* ``sweeps_seq`` / ``sweeps_path`` — ``CountingOps`` sweep counts for both
+  arms. Their ratio must equal L EXACTLY (the deterministic, machine-
+  independent regression signal: if it drops, the path solver stopped
+  sharing the data pass).
+
+Runs on the jnp reference backend: the sharing win is backend-agnostic
+(the sweep is the dominant cost on every backend) and interpret-mode Pallas
+wall-clock on CPU CI runners would measure the emulator, not the algorithm.
+
+    PYTHONPATH=src python -m benchmarks.lambda_path [--quick | --full]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.core import FalkonConfig, falkon_fit, falkon_fit_path
+from repro.ops import CountingOps, get_ops
+
+from .check_regression import _geomean
+from .common import emit, timed_best
+
+#: L, the grid size the acceptance criterion names.
+L = 8
+LAMS = tuple(float(10.0 ** e) for e in np.linspace(-4.0, -1.0, L))
+
+#: (n, M, d, t) benchmark points — in-core, planner keeps the jnp row sweep.
+FAST_POINTS = [(4096, 256, 16, 10)]
+FULL_POINTS = FAST_POINTS + [(8192, 512, 32, 10)]
+
+SPEEDUP_FLOOR = 2.0   # the CI gate's absolute acceptance at L=8
+
+
+def _problem(n, d, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    X = jax.random.normal(ks[0], (n, d))
+    w = jax.random.normal(ks[1], (d,))
+    y = jax.numpy.sin(X @ w) + 0.05 * jax.random.normal(ks[2], (n,))
+    return X, y
+
+
+def _config(M, t):
+    return FalkonConfig(kernel_params=(("sigma", 1.0),), num_centers=M,
+                        iterations=t, block_size=1024, jitter=1e-5,
+                        ops_impl="jnp", estimate_cond=False)
+
+
+def _count_sweeps(key, X, y, cfg):
+    """CountingOps sweep counts for the path fit and the L sequential fits
+    (counted once, untimed — the counts are deterministic)."""
+    kern = cfg.make_kernel()
+    path_ops = CountingOps(get_ops("jnp", kern, block_size=cfg.block_size))
+    falkon_fit_path(key, X, y, cfg, LAMS, ops=path_ops)
+    seq_ops = CountingOps(get_ops("jnp", kern, block_size=cfg.block_size))
+    for lam in LAMS:
+        falkon_fit(key, X, y, dataclasses.replace(cfg, lam=lam), ops=seq_ops)
+    return path_ops.sweeps, seq_ops.sweeps
+
+
+def run(points, repeat=3):
+    records = []
+    key = jax.random.PRNGKey(1)
+    for n, M, d, t in points:
+        X, y = _problem(n, d)
+        cfg = _config(M, t)
+
+        def fit_path():
+            return falkon_fit_path(key, X, y, cfg, LAMS).state.alphas
+
+        def fit_sequential():
+            return [falkon_fit(key, X, y,
+                               dataclasses.replace(cfg, lam=lam))[0].alpha
+                    for lam in LAMS]
+
+        _, sec_path = timed_best(fit_path, repeat=repeat)
+        _, sec_seq = timed_best(fit_sequential, repeat=repeat)
+        sweeps_path, sweeps_seq = _count_sweeps(key, X, y, cfg)
+        rec = dict(
+            n=n, M=M, d=d, iterations=t, L=L, impl=cfg.ops_impl,
+            time_path_s=sec_path, time_seq_s=sec_seq,
+            speedup_vs_sequential=sec_seq / sec_path,
+            sweeps_path=sweeps_path, sweeps_seq=sweeps_seq,
+        )
+        records.append(rec)
+        print(f"n={n} M={M} d={d} t={t}: path {sec_path * 1e3:.1f}ms, "
+              f"{L}-sequential {sec_seq * 1e3:.1f}ms -> "
+              f"{rec['speedup_vs_sequential']:.2f}x "
+              f"(sweeps {sweeps_path} vs {sweeps_seq})")
+    return records
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI points, fewer repeats")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    points = FULL_POINTS if args.full else FAST_POINTS
+    repeat = 2 if args.quick else 3
+
+    records = run(points, repeat=repeat)
+    summary = dict(
+        L=L,
+        lams=list(LAMS),
+        speedup_geomean=_geomean([r["speedup_vs_sequential"]
+                                  for r in records]),
+        sweep_ratio=records[0]["sweeps_seq"] / records[0]["sweeps_path"],
+        speedup_floor=SPEEDUP_FLOOR,
+    )
+    payload = {
+        "benchmark": "lambda_path",
+        "records": records,
+        "summary": summary,
+    }
+    out = os.environ.get("BENCH_PATH_JSON", "BENCH_path.json")
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out}: speedup geomean "
+          f"{summary['speedup_geomean']:.2f}x over {len(records)} points, "
+          f"sweep ratio {summary['sweep_ratio']:.0f} (= L)")
+
+    rows = [dict(name=f"path_fit_n{r['n']}_M{r['M']}",
+                 us_per_call=f"{r['time_path_s'] * 1e6:.0f}",
+                 speedup=f"{r['speedup_vs_sequential']:.2f}",
+                 sweeps=f"{r['sweeps_path']}v{r['sweeps_seq']}")
+            for r in records]
+    emit(rows)
+
+
+if __name__ == "__main__":
+    main()

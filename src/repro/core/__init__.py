@@ -3,10 +3,16 @@
 Public API:
     FalkonConfig, falkon_fit, falkon_solve, FalkonEstimator
     falkon_fit_streaming, falkon_solve_streaming   (out-of-core n)
+    falkon_fit_path, falkon_solve_path, FalkonPathResult,
+    falkon_fit_path_streaming, falkon_solve_path_streaming
+        (lam-path: one data sweep serves every regularizer)
     make_preconditioner, Preconditioner
+    make_preconditioner_path, PreconditionerPath   (batched (L,q,q) A stack)
     conjugate_gradient, conjugate_gradient_host
     select_centers, uniform_centers, leverage_score_centers,
-    approximate_leverage_scores, exact_leverage_scores
+    approximate_leverage_scores, exact_leverage_scores,
+    build_leverage_pilot, leverage_scores_from_pilot,
+    approximate_leverage_scores_path               (shared pilot-Gram build)
     make_kernel, KernelSpec, spec_of, GaussianKernel, LaplacianKernel,
     Matern32Kernel, LinearKernel, PolynomialKernel
     knm_matvec, knm_apply, make_distributed_matvec,
@@ -19,15 +25,21 @@ reference / "pallas" fused) backs every sweep, apply and gram above.
 from .baselines import (krr_direct, krr_gradient, nystrom_direct,
                         nystrom_gradient)
 from .cg import CGResult, conjugate_gradient, conjugate_gradient_host
-from .falkon import (FalkonConfig, FalkonEstimator, FalkonState, falkon_fit,
-                     falkon_fit_streaming, falkon_solve,
-                     falkon_solve_streaming)
+from .falkon import (FalkonConfig, FalkonEstimator, FalkonPathResult,
+                     FalkonPathState, FalkonState, falkon_fit,
+                     falkon_fit_path, falkon_fit_path_streaming,
+                     falkon_fit_streaming, falkon_solve, falkon_solve_path,
+                     falkon_solve_path_streaming, falkon_solve_streaming)
 from .kernels import (GaussianKernel, KernelFn, KernelSpec, LaplacianKernel,
                       LinearKernel, Matern32Kernel, PolynomialKernel,
                       available_kernels, make_kernel, spec_of)
 from .matvec import (knm_apply, knm_matvec, make_distributed_matvec,
                      streaming_knm_apply, streaming_knm_matvec)
-from .nystrom import (NystromCenters, approximate_leverage_scores,
+from .nystrom import (LeveragePilot, NystromCenters,
+                      approximate_leverage_scores,
+                      approximate_leverage_scores_path, build_leverage_pilot,
                       exact_leverage_scores, leverage_score_centers,
-                      select_centers, uniform_centers)
-from .preconditioner import Preconditioner, make_preconditioner
+                      leverage_scores_from_pilot, select_centers,
+                      uniform_centers)
+from .preconditioner import (Preconditioner, PreconditionerPath,
+                             make_preconditioner, make_preconditioner_path)

@@ -8,7 +8,23 @@ need for pjit/shard_map and for the dry-run).
 
 Supports multiple right-hand sides (b of shape (q,) or (q, p)) — multiclass
 problems (TIMIT / IMAGENET in the paper) solve all one-vs-all systems in one CG
-run; the per-column scalars are kept separate.
+run; the per-column scalars are kept separate. The lam-path solver stacks L
+INDEPENDENT regularization systems along the same column axis (see
+``falkon_solve_path``): because every scalar of the recurrence is per-column,
+a (q, L*p) block is exactly L*p independent CG runs that share each matvec —
+per-system convergence masking falls out of the per-column masking for free.
+
+Both drivers — the in-core ``lax.scan`` one (``conjugate_gradient``) and the
+host-loop one for streaming matvecs (``conjugate_gradient_host``) — are thin
+shells over one shared core (``_cg_solve``): same initialization, same masked
+update (``_masked_cg_update``), same residual bookkeeping, so the in-core and
+out-of-core solves cannot numerically diverge and any capability added to the
+update (multi-rhs, lam-path stacking, reduced-storage iterates) reaches both
+for free. They differ ONLY in the loop: the scanned driver keeps the program
+shape static (converged columns become masked no-ops), the host driver may
+``break`` early once every column has converged — each skipped iteration is
+a full data pass saved — which truncates ``residual_norms`` to
+``iterations + 1`` entries (a pinned contract, see tests/test_cg_drivers.py).
 
 ``storage_dtype`` (the bf16 end-to-end policy's knob, threaded from
 ``PrecisionPolicy.storage`` by ``falkon_solve``) stores the CG iterates
@@ -74,6 +90,76 @@ def _masked_cg_update(x, r, p, rs, Ap, tol_sq, storage=None):
     return x, r, p, rs, active
 
 
+def _cg_init(matvec, b, x0, storage):
+    """Shared iterate/residual initialization for both drivers."""
+    if x0 is None:
+        x = jnp.zeros_like(b)
+        r = b
+    else:
+        x = x0
+        r = b - matvec(x0)
+    p = r
+    if storage is not None:
+        x, r, p = (a.astype(storage) for a in (x, r, p))
+        rs = _col_dot(r.astype(b.dtype), r.astype(b.dtype))
+    else:
+        rs = _col_dot(r, r)
+    return x, r, p, rs
+
+
+def _scan_driver(matvec, state, t, tol_sq, storage, res0):
+    """Fixed-length ``lax.scan`` loop — one static XLA program; converged
+    columns become masked no-ops (the dry-run wants the full-t shape)."""
+    def step(carry, _):
+        x, r, p, rs, it = carry
+        Ap = matvec(p)
+        x, r, p, rs, active = _masked_cg_update(x, r, p, rs, Ap, tol_sq,
+                                                storage=storage)
+        carry = (x, r, p, rs, it + jnp.any(active).astype(jnp.int32))
+        return carry, jnp.sqrt(jnp.maximum(rs, 0.0))
+
+    (x, r, p, rs, it), res_hist = jax.lax.scan(
+        step, state + (jnp.asarray(0, jnp.int32),), None, length=t
+    )
+    return CGResult(x=x,
+                    residual_norms=jnp.concatenate([res0, res_hist], axis=0),
+                    iterations=it)
+
+
+def _host_driver(matvec, state, t, tol_sq, storage, res0):
+    """Python-level loop for host-streaming matvecs; stops early once every
+    column has converged (each skipped iteration is a full data pass), so
+    ``residual_norms`` is truncated to ``iterations + 1`` entries."""
+    x, r, p, rs = state
+    residuals = [res0]
+    it = 0
+    for _ in range(t):
+        if not bool(jnp.any(rs > jnp.maximum(tol_sq, 1e-30))):
+            break  # every column converged — skip the remaining data passes
+        Ap = matvec(p)
+        x, r, p, rs, _ = _masked_cg_update(x, r, p, rs, Ap, tol_sq,
+                                           storage=storage)
+        residuals.append(jnp.sqrt(jnp.maximum(rs, 0.0))[None])
+        it += 1
+    return CGResult(x=x,
+                    residual_norms=jnp.concatenate(residuals, axis=0),
+                    iterations=jnp.asarray(it, jnp.int32))
+
+
+def _cg_solve(matvec, b, t, tol, x0, storage_dtype, driver):
+    """The one CG core both public drivers share: initialization, tolerance
+    scaling and the ||b|| history head are computed identically, then the
+    ``driver`` runs the shared masked update in its loop style."""
+    storage = None if storage_dtype is None else jnp.dtype(storage_dtype)
+    state = _cg_init(matvec, b, x0, storage)
+    b_norm_sq = jnp.maximum(_col_dot(b, b), 1e-38)
+    tol_sq = (tol * tol) * b_norm_sq
+    # ||b|| leads the history; [None] gives the (1,)/(1, p) leading entry
+    # for single- and multi-rhs alike.
+    res0 = jnp.sqrt(jnp.maximum(_col_dot(b, b), 0.0))[None]
+    return driver(matvec, state, t, tol_sq, storage, res0)
+
+
 def conjugate_gradient(
     matvec: Callable[[Array], Array],
     b: Array,
@@ -91,39 +177,7 @@ def conjugate_gradient(
     policy) while scalars and update arithmetic stay float32; None is the
     unchanged full-precision path.
     """
-    storage = None if storage_dtype is None else jnp.dtype(storage_dtype)
-    if x0 is None:
-        x = jnp.zeros_like(b)
-        r = b
-    else:
-        x = x0
-        r = b - matvec(x0)
-    p = r
-    if storage is not None:
-        x, r, p = (a.astype(storage) for a in (x, r, p))
-
-    rs = _col_dot(r.astype(b.dtype), r.astype(b.dtype)) if storage is not None \
-        else _col_dot(r, r)
-    b_norm_sq = jnp.maximum(_col_dot(b, b), 1e-38)
-    tol_sq = (tol * tol) * b_norm_sq
-
-    def step(carry, _):
-        x, r, p, rs, it = carry
-        Ap = matvec(p)
-        # masked no-op once converged (keeps shapes static — the dry-run
-        # wants the full-t program)
-        x, r, p, rs, active = _masked_cg_update(x, r, p, rs, Ap, tol_sq,
-                                                storage=storage)
-        carry = (x, r, p, rs, it + jnp.any(active).astype(jnp.int32))
-        return carry, jnp.sqrt(jnp.maximum(rs, 0.0))
-
-    (x, r, p, rs, it), res_hist = jax.lax.scan(
-        step, (x, r, p, rs, jnp.asarray(0, jnp.int32)), None, length=t
-    )
-    res0 = jnp.sqrt(jnp.maximum(_col_dot(b, b), 0.0))[None] if b.ndim > 1 else \
-        jnp.sqrt(jnp.maximum(_col_dot(b, b), 0.0))[None]
-    residuals = jnp.concatenate([res0, res_hist], axis=0)
-    return CGResult(x=x, residual_norms=residuals, iterations=it)
+    return _cg_solve(matvec, b, t, tol, x0, storage_dtype, _scan_driver)
 
 
 def conjugate_gradient_host(
@@ -139,44 +193,11 @@ def conjugate_gradient_host(
 
     The streaming sweep is a host loop over data chunks (one full pass per
     CG iteration), which cannot be traced inside ``lax.scan`` — so the CG
-    recurrence itself runs at the Python level, with the same per-column
+    recurrence itself runs at the Python level via the same shared core and
     masking math (and the same ``storage_dtype`` contract) as the scanned
     version. Unlike the scanned version it may stop early once every column
     has converged (there is no static-shape program to preserve
-    out-of-core).
+    out-of-core); ``residual_norms`` then has ``iterations + 1`` entries
+    instead of ``t + 1``.
     """
-    storage = None if storage_dtype is None else jnp.dtype(storage_dtype)
-    if x0 is None:
-        x = jnp.zeros_like(b)
-        r = b
-    else:
-        x = x0
-        r = b - matvec(x0)
-    p = r
-    if storage is not None:
-        x, r, p = (a.astype(storage) for a in (x, r, p))
-
-    rs = _col_dot(r.astype(b.dtype), r.astype(b.dtype)) if storage is not None \
-        else _col_dot(r, r)
-    b_norm_sq = jnp.maximum(_col_dot(b, b), 1e-38)
-    tol_sq = (tol * tol) * b_norm_sq
-    residuals = [jnp.sqrt(jnp.maximum(b_norm_sq, 0.0))[None]
-                 if b.ndim > 1 else jnp.sqrt(jnp.maximum(b_norm_sq, 0.0))]
-    it = 0
-
-    for _ in range(t):
-        if not bool(jnp.any(rs > jnp.maximum(tol_sq, 1e-30))):
-            break  # every column converged — skip the remaining data passes
-        Ap = matvec(p)
-        x, r, p, rs, _ = _masked_cg_update(x, r, p, rs, Ap, tol_sq,
-                                           storage=storage)
-        res = jnp.sqrt(jnp.maximum(rs, 0.0))
-        residuals.append(res[None] if b.ndim > 1 else res)
-        it += 1
-
-    if b.ndim > 1:
-        res_hist = jnp.concatenate(residuals, axis=0)
-    else:
-        res_hist = jnp.stack(residuals, axis=0)
-    return CGResult(x=x, residual_norms=res_hist,
-                    iterations=jnp.asarray(it, jnp.int32))
+    return _cg_solve(matvec, b, t, tol, x0, storage_dtype, _host_driver)

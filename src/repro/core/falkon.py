@@ -9,10 +9,26 @@ All kernel work flows through a pluggable ``KernelOps`` backend
 (``repro.ops``): ``FalkonConfig.ops_impl`` selects it ("jnp" reference or
 "pallas" fused single-pass sweep) and ``FalkonConfig.precision`` names the
 ``PrecisionPolicy`` — "fp32", or "bf16" for END-TO-END bfloat16 storage
-(X/C/u/v/t, the CG iterates, the streamed chunks) with compensated fp32
+(X/C/v, the CG iterates, the streamed chunks) with compensated fp32
 accumulation; the Gram block and preconditioner Cholesky stay fp32 by
 per-buffer override. ``matvec_impl`` is kept as a deprecated alias of
-``ops_impl``.
+``ops_impl`` (using it warns).
+
+The fit is an explicit five-stage pipeline — select -> gram -> precondition
+-> solve -> wrap — with each stage a named function, so variants compose
+from the same parts instead of re-inlining them: ``falkon_fit`` (in-core),
+``falkon_fit_streaming`` (host-streamed X) and ``falkon_fit_path`` (the
+lam-path solver) differ only in which solve stage they run.
+
+**The lam path.** FALKON's entire per-iteration cost is the O(nM) data sweep
+``K_nM^T (K_nM gamma)``, which never reads lam — only the preconditioner's
+cheap A factor and the lam-ridge term do. ``falkon_fit_path`` exploits this:
+L regularization systems are stacked along the CG column axis ((q, L*p)
+iterates), the shared sweep runs ONCE per iteration at width L*p, and the
+per-system A-solves/ridge are vmapped over a batched (L, q, q) A stack
+(``make_preconditioner_path``). Model selection over L lams therefore costs
+~1 fit of data passes instead of L — the workflow the Falkon library paper
+(Meanti et al. 2020) identifies as dominating practice.
 
 The solve is fully jittable: ``falkon_solve`` is a pure function of
 (X, y, centers, preconditioner) so it can be lowered/compiled for the dry-run
@@ -22,21 +38,30 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from repro.ops import KernelOps, get_ops
+from repro.ops import KernelOps, available_ops, get_ops, resolve_precision
 
 from .cg import conjugate_gradient, conjugate_gradient_host
 from .kernels import KernelFn, make_kernel
 from .matvec import make_distributed_matvec
-from .nystrom import select_centers
-from .preconditioner import Preconditioner, make_preconditioner
+from .nystrom import NystromCenters, select_centers
+from .preconditioner import (Preconditioner, PreconditionerPath,
+                             make_preconditioner, make_preconditioner_path)
 
 Array = jax.Array
+
+CENTER_SELECTIONS = ("uniform", "leverage")
+
+_MATVEC_IMPL_DEPRECATION = (
+    "matvec_impl is a deprecated alias of ops_impl (renamed in the KernelOps "
+    "refactor); pass ops_impl instead"
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +83,23 @@ class FalkonConfig:
     matvec_impl: str | None = None         # deprecated alias of ops_impl
     tol: float = 0.0
     dtype: str = "float32"
+    estimate_cond: bool = True             # power-iteration cond(W) diagnostic
+
+    def __post_init__(self):
+        """Fail on an unknown backend/policy/scheme at CONFIG time, naming
+        the options — not deep inside ``get_ops`` at solve time."""
+        if self.matvec_impl is not None:
+            warnings.warn(_MATVEC_IMPL_DEPRECATION, DeprecationWarning,
+                          stacklevel=3)
+        if self.impl not in available_ops():
+            raise ValueError(
+                f"unknown ops_impl {self.impl!r}; registered KernelOps "
+                f"backends: {available_ops()}")
+        resolve_precision(self.precision)  # raises naming the known policies
+        if self.center_selection not in CENTER_SELECTIONS:
+            raise ValueError(
+                f"unknown center_selection {self.center_selection!r}; "
+                f"supported: {CENTER_SELECTIONS}")
 
     @property
     def impl(self) -> str:
@@ -81,6 +123,16 @@ class FalkonState(NamedTuple):
     alpha: Array
     residual_norms: Array
     cond_estimate: Array
+
+
+class FalkonPathState(NamedTuple):
+    """The lam-path twin of :class:`FalkonState`: one CG run, L systems."""
+    centers: Array
+    precond: PreconditionerPath
+    beta: Array            # (q, L*p) stacked CG solution
+    alphas: Array          # (L, M) or (L, M, p): per-lam coefficients
+    residual_norms: Array  # (t+1, L*p) per-column residual history
+    lams: Array            # (L,) the regularization grid
 
 
 @jax.tree_util.register_dataclass
@@ -120,6 +172,20 @@ class FalkonEstimator:
         return self.predict(X)
 
 
+class FalkonPathResult(NamedTuple):
+    """Per-lam estimators + the shared-solve state + validation selection."""
+    estimators: tuple[FalkonEstimator, ...]
+    state: FalkonPathState
+    lams: tuple[float, ...]
+    val_scores: Array | None   # (L,) validation MSE per lam (None: no val set)
+    best_index: int | None     # argmin of val_scores (None: no val set)
+
+    @property
+    def best(self) -> FalkonEstimator | None:
+        """The validation-selected estimator (None without a val set)."""
+        return None if self.best_index is None else self.estimators[self.best_index]
+
+
 # ----------------------------------------------------------------------------
 # Pure solve (jittable)
 # ----------------------------------------------------------------------------
@@ -139,25 +205,24 @@ def _cg_storage(ops: KernelOps | None):
 
 def _falkon_operator(
     matvec: Callable,
-    precond: Preconditioner,
-    lam: float,
+    precond: "Preconditioner | PreconditionerPath",
+    lam,
     n: int,
 ) -> Callable[[Array], Array]:
     """W(u) = B^T H B u via Alg. 1's nested-solve composition.
 
-    W u = left( KnM^T(KnM gamma)/n ) + lam * A^{-T} A^{-1} u,
-    gamma = right(u). The lam-term uses the T^{-T} Q^T D K_MM D Q T^{-1} = I
-    identity (Lemma 2 / Eq. 19), exactly as the MATLAB code does.
+    W u = left( KnM^T(KnM gamma)/n ) + lam-ridge(u), gamma = right(u), with
+    the lam-term delegated to the preconditioner's ``ridge`` (the
+    T^{-T} Q^T D K_MM D Q T^{-1} = I identity, Lemma 2 / Eq. 19, exactly as
+    the MATLAB code does). With a :class:`PreconditionerPath` the SAME
+    composition runs on the stacked (q, L*p) block: ``right``/``left`` apply
+    the per-system A-solves to each column group while the matvec — the
+    one O(nM) cost — is a single lam-independent sweep of width L*p.
     """
-    from jax.scipy.linalg import solve_triangular
-
     def W(u: Array) -> Array:
         gamma = precond.right(u)
         w = matvec(gamma) / n                     # K_nM^T K_nM gamma / n
-        out = precond.left(w)
-        Ainv_u = solve_triangular(precond.A, u, lower=False)
-        out = out + lam * solve_triangular(precond.A, Ainv_u, lower=False, trans=1)
-        return out
+        return precond.left(w) + precond.ridge(u, lam)
 
     return W
 
@@ -183,12 +248,15 @@ def falkon_solve(
     """Run t preconditioned-CG iterations; return coefficients + diagnostics.
 
     The per-iteration sweep runs on ``ops`` if given, else on the KernelOps
-    backend named by ``ops_impl`` (``matvec_impl`` is a deprecated alias) —
-    unless a ``dist_matvec`` (already backend-bound, see
+    backend named by ``ops_impl`` (``matvec_impl`` is a deprecated alias —
+    using it warns) — unless a ``dist_matvec`` (already backend-bound, see
     ``make_distributed_matvec``) is supplied.
     """
     n = X.shape[0]
     if ops is None:
+        if matvec_impl is not None:
+            warnings.warn(_MATVEC_IMPL_DEPRECATION, DeprecationWarning,
+                          stacklevel=2)
         impl = matvec_impl if matvec_impl is not None else ops_impl
         ops = get_ops(impl, kernel, block_size=block_size, precision=precision)
 
@@ -235,9 +303,123 @@ def falkon_solve(
                        residual_norms=cg.residual_norms, cond_estimate=cond)
 
 
+def _solve_path_core(
+    matvec: Callable,
+    rhs_sweep: Callable,
+    precond: PreconditionerPath,
+    n: int,
+    t: int,
+    *,
+    tol: float,
+    storage,
+    host: bool,
+):
+    """The shared lam-path solve: ONE RHS sweep + t stacked-matvec CG
+    iterations serve all L systems; returns (CGResult, (M, L*p) alphas)."""
+    w0 = rhs_sweep() / n                  # K_nM^T y / n — lam-independent
+    b = precond.expand_rhs(w0)            # (q, L*p): per-system A^{-T} only
+    W = _falkon_operator(matvec, precond, None, n)
+    driver = conjugate_gradient_host if host else conjugate_gradient
+    cg = driver(W, b, t, tol=tol, storage_dtype=storage)
+    return cg, precond.coeffs(cg.x)
+
+
+def falkon_solve_path(
+    X: Array,
+    y: Array,
+    centers: Array,
+    precond: PreconditionerPath,
+    t: int,
+    *,
+    ops: KernelOps,
+    tol: float = 0.0,
+) -> FalkonPathState:
+    """Solve the FALKON system for every lam in ``precond.lams`` at the data
+    cost of ONE solve.
+
+    Per CG iteration: a single ``ops.sweep`` of column width L*p (the
+    planner routes the widened block — see ``KernelOps.plan(systems=)``)
+    instead of L sweeps of width p; the per-system work is O(q^2 L p)
+    triangular solves, invisible next to the O(n M) sweep. Per-column
+    convergence masking in the CG core doubles as per-SYSTEM masking: a
+    small-lam system that needs all t iterations does not force extra
+    arithmetic on an already-converged large-lam one.
+    """
+    n = X.shape[0]
+    M = centers.shape[0]
+
+    def matvec(G):
+        return ops.sweep(X, centers, G, None)
+
+    def rhs_sweep():
+        zeros = jnp.zeros((M,) + y.shape[1:], X.dtype)
+        return ops.sweep(X, centers, zeros, y)
+
+    cg, alpha_flat = _solve_path_core(
+        matvec, rhs_sweep, precond, n, t, tol=tol,
+        storage=_cg_storage(ops), host=False)
+    alphas = precond.split(alpha_flat)            # (L, M, p)
+    if y.ndim == 1:
+        alphas = alphas[..., 0]
+    return FalkonPathState(centers=centers, precond=precond, beta=cg.x,
+                           alphas=alphas, residual_norms=cg.residual_norms,
+                           lams=precond.lams)
+
+
 # ----------------------------------------------------------------------------
-# User-facing fit
+# The fit pipeline: select -> gram -> precondition -> solve -> wrap
 # ----------------------------------------------------------------------------
+def _stage_select(
+    key: Array,
+    X: Array,
+    config: FalkonConfig,
+    kernel: KernelFn,
+    *,
+    lam: float | None = None,
+) -> NystromCenters:
+    """Stage 1 — Nystrom center selection. ``lam`` overrides ``config.lam``
+    for leverage scoring (the path fit scores at a grid-reference lam)."""
+    M = min(config.num_centers, X.shape[0])
+    return select_centers(key, X, M, kernel=kernel,
+                          lam=config.lam if lam is None else lam,
+                          scheme=config.center_selection,
+                          pilot_size=config.pilot_size)
+
+
+def _stage_gram(ops: KernelOps, centers: Array) -> Array:
+    """Stage 2 — the M x M Gram block (the paper's memory budget)."""
+    return ops.gram(centers, centers)
+
+
+def _stage_precondition(
+    KMM: Array,
+    lam,
+    n: int,
+    config: FalkonConfig,
+    *,
+    D: Array | None = None,
+) -> "Preconditioner | PreconditionerPath":
+    """Stage 3 — factorization. A scalar ``lam`` builds the single
+    :class:`Preconditioner`; a grid builds the batched
+    :class:`PreconditionerPath` (shared T/Q/D, (L, q, q) A stack)."""
+    build = make_preconditioner if jnp.ndim(lam) == 0 else \
+        make_preconditioner_path
+    return build(KMM, lam, n, D=D, jitter=config.jitter,
+                 rank_deficient=config.rank_deficient)
+
+
+def _stage_wrap(
+    centers: Array,
+    alpha: Array,
+    kernel: KernelFn,
+    config: FalkonConfig,
+) -> FalkonEstimator:
+    """Stage 5 — bind coefficients + backend knobs into the estimator."""
+    return FalkonEstimator(centers=centers, alpha=alpha, kernel=kernel,
+                           block_size=config.block_size, ops_impl=config.impl,
+                           precision=config.precision)
+
+
 def falkon_fit(
     key: Array,
     X: Array,
@@ -246,30 +428,27 @@ def falkon_fit(
     *,
     mesh: Mesh | None = None,
     data_axes: tuple[str, ...] = ("data",),
+    ops: KernelOps | None = None,
 ) -> tuple[FalkonEstimator, FalkonState]:
     """Select centers, build the preconditioner, run the solve.
 
     With ``mesh`` given, X/y are swept shard-locally over ``data_axes`` and
     reduced with one psum per CG iteration (see DESIGN.md §6). The K_MM Gram
     block, every CG sweep and the returned estimator's predict path all run
-    on the backend named by ``config.ops_impl``.
+    on the backend named by ``config.ops_impl`` — or on ``ops`` when given
+    (the instrumentation seam: e.g. ``repro.ops.CountingOps``).
     """
     kernel = config.make_kernel()
-    ops = config.make_ops(kernel)
+    if ops is None:
+        ops = config.make_ops(kernel)
     dt = jnp.dtype(config.dtype)
     X = X.astype(dt)
     y = y.astype(dt)
     n = X.shape[0]
-    M = min(config.num_centers, n)
 
-    sel = select_centers(key, X, M, kernel=kernel, lam=config.lam,
-                         scheme=config.center_selection,
-                         pilot_size=config.pilot_size)
-    KMM = ops.gram(sel.centers, sel.centers)
-    precond = make_preconditioner(
-        KMM, config.lam, n, D=sel.D, jitter=config.jitter,
-        rank_deficient=config.rank_deficient,
-    )
+    sel = _stage_select(key, X, config, kernel)
+    KMM = _stage_gram(ops, sel.centers)
+    precond = _stage_precondition(KMM, config.lam, n, config, D=sel.D)
 
     dist = None
     if mesh is not None:
@@ -281,12 +460,107 @@ def falkon_fit(
     state = falkon_solve(
         X, y, sel.centers, precond, kernel, config.lam, config.iterations,
         block_size=config.block_size, tol=config.tol, dist_matvec=dist,
-        ops=ops,
+        estimate_cond=config.estimate_cond, ops=ops,
     )
-    est = FalkonEstimator(centers=sel.centers, alpha=state.alpha, kernel=kernel,
-                          block_size=config.block_size, ops_impl=config.impl,
-                          precision=config.precision)
+    est = _stage_wrap(sel.centers, state.alpha, kernel, config)
     return est, state
+
+
+def _score_path(
+    ops: KernelOps,
+    centers: Array,
+    alphas: Array,
+    X_val: Array,
+    y_val: Array,
+) -> tuple[Array, int]:
+    """Validation MSE per lam with ONE stacked apply over the val set.
+
+    ``alphas`` is the (L, M[, p]) stack; the predictions for every lam come
+    from a single ``ops.apply`` of column width L*p — the same
+    one-data-pass-serves-all-lams trick as the training sweep.
+    """
+    L = alphas.shape[0]
+    M = alphas.shape[1]
+    p = alphas.shape[2] if alphas.ndim > 2 else 1
+    flat = alphas.reshape(L, M, p).transpose(1, 0, 2).reshape(M, L * p)
+    preds = ops.apply(X_val, centers, flat)            # (n_val, L*p)
+    preds = preds.reshape(X_val.shape[0], L, p)
+    yv = y_val.reshape(y_val.shape[0], 1, p).astype(preds.dtype)
+    scores = jnp.mean((preds - yv) ** 2, axis=(0, 2))  # (L,)
+    return scores, int(jnp.argmin(scores))
+
+
+def _check_lams(lams) -> tuple[float, ...]:
+    vals = tuple(float(l) for l in lams)
+    if not vals:
+        raise ValueError("lams must be a non-empty grid of regularizers")
+    if any(l <= 0.0 for l in vals):
+        raise ValueError(f"every lam in the path must be > 0, got {vals}")
+    return vals
+
+
+def falkon_fit_path(
+    key: Array,
+    X: Array,
+    y: Array,
+    config: FalkonConfig,
+    lams,
+    *,
+    X_val: Array | None = None,
+    y_val: Array | None = None,
+    ops: KernelOps | None = None,
+) -> FalkonPathResult:
+    """Fit the FULL regularization path in ~one fit's worth of data sweeps.
+
+    Runs the same select -> gram -> precondition -> solve -> wrap pipeline
+    as ``falkon_fit``, but stage 3 builds the batched
+    :class:`PreconditionerPath` (one chol(K_MM), L cheap A-Cholesky's) and
+    stage 4 runs ``falkon_solve_path``: every O(nM) data sweep carries all L
+    systems stacked along the column axis, so the whole path costs
+    ``iterations + 1`` sweeps — the same count as ONE ``falkon_fit`` —
+    instead of ``L * (iterations + 1)``. ``config.lam`` is ignored; the
+    grid ``lams`` replaces it.
+
+    Centers (and, under ``center_selection="leverage"``, the sampling
+    diagonal D) are SHARED across the path — a requirement, not a
+    shortcut: a common K_nM is what makes the sweep lam-independent.
+    Leverage scores are taken at the grid's geometric-mean lam; any fixed
+    sampling distribution yields a valid Nystrom model for every lam (the
+    lam enters only the ridge).
+
+    With ``X_val``/``y_val`` given, every estimator is scored (one stacked
+    apply over the val set) and ``result.best`` is the argmin-MSE model.
+    """
+    lam_vals = _check_lams(lams)
+    kernel = config.make_kernel()
+    if ops is None:
+        ops = config.make_ops(kernel)
+    dt = jnp.dtype(config.dtype)
+    X = X.astype(dt)
+    y = y.astype(dt)
+    n = X.shape[0]
+
+    # geometric-mean reference lam for (leverage) center selection
+    log_mean = sum(jnp.log(jnp.asarray(l)) for l in lam_vals) / len(lam_vals)
+    lam_ref = float(jnp.exp(log_mean))
+    sel = _stage_select(key, X, config, kernel, lam=lam_ref)
+    KMM = _stage_gram(ops, sel.centers)
+    precond = _stage_precondition(KMM, jnp.asarray(lam_vals, dt), n, config,
+                                  D=sel.D)
+
+    state = falkon_solve_path(X, y, sel.centers, precond, config.iterations,
+                              ops=ops, tol=config.tol)
+    ests = tuple(_stage_wrap(sel.centers, state.alphas[i], kernel, config)
+                 for i in range(len(lam_vals)))
+
+    val_scores = best = None
+    if (X_val is None) != (y_val is None):
+        raise ValueError("X_val and y_val must be given together")
+    if X_val is not None:
+        val_scores, best = _score_path(ops, sel.centers, state.alphas,
+                                       X_val.astype(dt), y_val.astype(dt))
+    return FalkonPathResult(estimators=ests, state=state, lams=lam_vals,
+                            val_scores=val_scores, best_index=best)
 
 
 # ----------------------------------------------------------------------------
@@ -337,25 +611,62 @@ def falkon_solve_streaming(
                        cond_estimate=jnp.zeros((), b.dtype))
 
 
-def falkon_fit_streaming(
+def falkon_solve_path_streaming(
+    loader,
+    centers: Array,
+    precond: PreconditionerPath,
+    t: int,
+    *,
+    ops: KernelOps,
+    out_dim: tuple = (),
+    tol: float = 0.0,
+) -> FalkonPathState:
+    """``falkon_solve_path`` with every stacked sweep streamed from the host.
+
+    One full pass over the stream per CG iteration serves all L systems —
+    out-of-core n and the lam path compose: the per-chunk sweep just
+    carries an (M, L*p) coefficient block instead of (M, p). The host CG
+    driver's early stop applies when EVERY system/column has converged (each
+    skipped iteration saves a whole pass over the data).
+    """
+    from repro.data.streaming import JittedOps, streaming_sweep
+
+    n = loader.n_rows
+    M = centers.shape[0]
+    jops = JittedOps(ops)
+
+    def matvec(G):
+        return streaming_sweep(jops, loader, centers, G, use_targets=False)
+
+    def rhs_sweep():
+        zeros = jnp.zeros((M,) + tuple(out_dim), centers.dtype)
+        return streaming_sweep(jops, loader, centers, zeros, use_targets=True)
+
+    cg, alpha_flat = _solve_path_core(
+        matvec, rhs_sweep, precond, n, t, tol=tol,
+        storage=_cg_storage(ops), host=True)
+    alphas = precond.split(alpha_flat)
+    if not tuple(out_dim):
+        alphas = alphas[..., 0]
+    return FalkonPathState(centers=centers, precond=precond, beta=cg.x,
+                           alphas=alphas, residual_norms=cg.residual_norms,
+                           lams=precond.lams)
+
+
+def _streaming_setup(
     key: Array,
     source,
     config: FalkonConfig,
     *,
-    prefetch: int | None = None,
-    centers: Array | None = None,
-) -> tuple[FalkonEstimator, FalkonState]:
-    """Fit FALKON from a ``ChunkSource`` without materializing X on device.
+    prefetch: int | None,
+    centers: Array | None,
+):
+    """Shared front half of the streaming fits: centers, loader, out_dim.
 
     Centers are sampled uniformly in one host-side pass (exact, not
-    reservoir-approximate — n_rows is known), the M x M preconditioner is
-    built in-core (the paper's memory budget), then every CG sweep streams
-    the chunks through a double-buffered host->device loader. Only
+    reservoir-approximate — n_rows is known). Only
     ``center_selection="uniform"`` is supported out-of-core: leverage-score
     sampling needs a pilot Gram pass that is not chunk-additive.
-    ``centers`` overrides sampling (used by parity tests). ``prefetch``
-    defaults to 2 chunks in flight on real accelerators and to synchronous
-    transfers on CPU, where an overlap thread only contends with compute.
     """
     from repro.data.streaming import StreamingLoader, streaming_uniform_centers
 
@@ -376,11 +687,6 @@ def falkon_fit_streaming(
     if centers is None:
         centers, _ = streaming_uniform_centers(key, source, M)
     centers = jnp.asarray(centers, dt)
-    KMM = ops.gram(centers, centers)
-    precond = make_preconditioner(
-        KMM, config.lam, n, D=None, jitter=config.jitter,
-        rank_deficient=config.rank_deficient,
-    )
 
     # Under the bf16 policy the host->device chunk transfer itself runs at
     # storage width — half the PCIe/DMA traffic of an fp32 stream; the
@@ -396,12 +702,70 @@ def falkon_fit_streaming(
             raise ValueError("streaming fit needs targets in the source")
         out_dim = tuple(yc.shape[1:])
         break
+    return kernel, ops, centers, loader, out_dim, n
+
+
+def falkon_fit_streaming(
+    key: Array,
+    source,
+    config: FalkonConfig,
+    *,
+    prefetch: int | None = None,
+    centers: Array | None = None,
+) -> tuple[FalkonEstimator, FalkonState]:
+    """Fit FALKON from a ``ChunkSource`` without materializing X on device.
+
+    Same pipeline as ``falkon_fit`` with the select and solve stages swapped
+    for their streaming variants: uniform centers from one host-side pass,
+    the M x M preconditioner built in-core (the paper's memory budget), then
+    every CG sweep streams the chunks through a double-buffered host->device
+    loader. ``centers`` overrides sampling (used by parity tests).
+    ``prefetch`` defaults to 2 chunks in flight on real accelerators and to
+    synchronous transfers on CPU, where an overlap thread only contends with
+    compute.
+    """
+    kernel, ops, centers, loader, out_dim, n = _streaming_setup(
+        key, source, config, prefetch=prefetch, centers=centers)
+    KMM = _stage_gram(ops, centers)
+    precond = _stage_precondition(KMM, config.lam, n, config)
 
     state = falkon_solve_streaming(
         loader, centers, precond, config.lam, config.iterations,
         ops=ops, out_dim=out_dim, tol=config.tol,
     )
-    est = FalkonEstimator(centers=centers, alpha=state.alpha, kernel=kernel,
-                          block_size=config.block_size, ops_impl=config.impl,
-                          precision=config.precision)
+    est = _stage_wrap(centers, state.alpha, kernel, config)
     return est, state
+
+
+def falkon_fit_path_streaming(
+    key: Array,
+    source,
+    config: FalkonConfig,
+    lams,
+    *,
+    prefetch: int | None = None,
+    centers: Array | None = None,
+) -> FalkonPathResult:
+    """``falkon_fit_path`` for a host-streamed ``ChunkSource``.
+
+    The whole L-lam path costs the stream passes of ONE fit: per CG
+    iteration one pass over the chunks, each chunk sweep carrying the
+    stacked (M, L*p) block. Validation scoring is not built in (the val set
+    would need its own stream); score the returned estimators with
+    ``FalkonEstimator.predict_stream``.
+    """
+    lam_vals = _check_lams(lams)
+    kernel, ops, centers, loader, out_dim, n = _streaming_setup(
+        key, source, config, prefetch=prefetch, centers=centers)
+    dt = jnp.dtype(config.dtype)
+    KMM = _stage_gram(ops, centers)
+    precond = _stage_precondition(KMM, jnp.asarray(lam_vals, dt), n, config)
+
+    state = falkon_solve_path_streaming(
+        loader, centers, precond, config.iterations,
+        ops=ops, out_dim=out_dim, tol=config.tol,
+    )
+    ests = tuple(_stage_wrap(centers, state.alphas[i], kernel, config)
+                 for i in range(len(lam_vals)))
+    return FalkonPathResult(estimators=ests, state=state, lams=lam_vals,
+                            val_scores=None, best_index=None)

@@ -21,6 +21,19 @@ Woodbury identity
 which is the q-approximate estimator family of [Rudi et al. 2015; Alaoui &
 Mahoney 2015] computable in O(n M0^2 + M0^3) time and O(M0^2) memory (blocked
 over rows of K_nS).
+
+The estimator factors into a lambda-INDEPENDENT pilot stage and a cheap
+per-lambda stage, mirroring the preconditioner split:
+
+* ``build_leverage_pilot``      — draw S, build K_SS and accumulate
+                                  K_Sn K_nS over row blocks (the O(n M0^2)
+                                  data pass; lambda never appears).
+* ``leverage_scores_from_pilot`` — form G = lam n K_SS + K_Sn K_nS, factor
+                                  it (O(M0^3)) and score the rows.
+
+A lambda grid therefore pays for the pilot-Gram build once
+(``approximate_leverage_scores_path``); ``approximate_leverage_scores`` is
+the single-lambda composition of the two stages.
 """
 from __future__ import annotations
 
@@ -54,6 +67,88 @@ def exact_leverage_scores(X: Array, kernel: KernelFn, lam: float) -> Array:
     return jnp.diagonal(S)
 
 
+class LeveragePilot(NamedTuple):
+    """The lambda-independent half of the leverage-score estimator."""
+    S: Array          # (M0, d) pilot subset
+    KSS: Array        # (M0, M0) pilot Gram
+    KSnKnS: Array     # (M0, M0) accumulated K_Sn K_nS (the O(n M0^2) pass)
+    indices: Array    # (M0,) pilot row indices into X
+    n: int            # rows the pilot was built over
+
+
+def _blocked_rows(X: Array, block_size: int) -> tuple[Array, Array]:
+    """(nb, block, d) row blocks of X plus the (nb, block) validity mask."""
+    n = X.shape[0]
+    nb = -(-n // block_size)
+    pad = nb * block_size - n
+    Xp = jnp.pad(X, ((0, pad), (0, 0)))
+    mask = jnp.pad(jnp.ones((n,), X.dtype), (0, pad)).reshape(nb, block_size)
+    return Xp.reshape(nb, block_size, -1), mask
+
+
+def build_leverage_pilot(
+    key: Array,
+    X: Array,
+    kernel: KernelFn,
+    *,
+    pilot_size: int = 256,
+    block_size: int = 4096,
+) -> LeveragePilot:
+    """Stage 1 — the pilot-Gram build: everything lambda never touches.
+
+    One O(n M0^2) pass over the data accumulates K_Sn K_nS; a lambda grid
+    reuses the result for every ridge value (see
+    ``leverage_scores_from_pilot``).
+    """
+    n, _ = X.shape
+    M0 = min(pilot_size, n)
+    pilot_idx = jax.random.choice(key, n, shape=(M0,), replace=False)
+    S = X[pilot_idx]
+    KSS = kernel(S, S)
+
+    # Accumulate K_Sn K_nS = sum over row-blocks of K_bS^T K_bS.
+    Xb, mask = _blocked_rows(X, block_size)
+
+    def acc(carry, inp):
+        xb, mb = inp
+        Kb = kernel(xb, S) * mb[:, None]
+        return carry + Kb.T @ Kb, None
+
+    KSnKnS, _ = jax.lax.scan(acc, jnp.zeros((M0, M0), X.dtype), (Xb, mask))
+    return LeveragePilot(S=S, KSS=KSS, KSnKnS=KSnKnS, indices=pilot_idx, n=n)
+
+
+def leverage_scores_from_pilot(
+    pilot: LeveragePilot,
+    X: Array,
+    kernel: KernelFn,
+    lam: float,
+    *,
+    block_size: int = 4096,
+) -> Array:
+    """Stage 2 — score the rows at one ridge value from a built pilot.
+
+    Cost per lambda: one O(M0^3) Cholesky of G = lam n K_SS + K_Sn K_nS
+    plus the blocked scoring pass — the pilot-Gram accumulation is NOT
+    repeated.
+    """
+    M0 = pilot.S.shape[0]
+    n = X.shape[0]
+    G = lam * pilot.n * pilot.KSS + pilot.KSnKnS
+    G = G + 1e-6 * jnp.trace(G) / M0 * jnp.eye(M0, dtype=G.dtype)
+    cho = jax.scipy.linalg.cho_factor(G)
+    S = pilot.S
+    Xb, _ = _blocked_rows(X, block_size)
+
+    def score_block(xb):
+        KbS = kernel(xb, S)                       # (b, M0)
+        sol = jax.scipy.linalg.cho_solve(cho, KbS.T)  # (M0, b)
+        return jnp.sum(KbS.T * sol, axis=0)       # (b,)
+
+    scores = jax.lax.map(score_block, Xb).reshape(-1)[:n]
+    return jnp.maximum(scores, 1e-12)
+
+
 def approximate_leverage_scores(
     key: Array,
     X: Array,
@@ -63,38 +158,39 @@ def approximate_leverage_scores(
     pilot_size: int = 256,
     block_size: int = 4096,
 ) -> Array:
-    """Nystrom/Woodbury approximate ridge leverage scores, O(n M0^2)."""
-    n, _ = X.shape
-    M0 = min(pilot_size, n)
-    pilot_idx = jax.random.choice(key, n, shape=(M0,), replace=False)
-    S = X[pilot_idx]
-    KSS = kernel(S, S)
+    """Nystrom/Woodbury approximate ridge leverage scores, O(n M0^2).
 
-    # Accumulate K_Sn K_nS = sum over row-blocks of K_bS^T K_bS.
-    nb = -(-n // block_size)
-    pad = nb * block_size - n
-    Xp = jnp.pad(X, ((0, pad), (0, 0)))
-    mask = jnp.pad(jnp.ones((n,), X.dtype), (0, pad)).reshape(nb, block_size)
-    Xb = Xp.reshape(nb, block_size, -1)
+    The single-lambda composition of ``build_leverage_pilot`` and
+    ``leverage_scores_from_pilot``.
+    """
+    pilot = build_leverage_pilot(key, X, kernel, pilot_size=pilot_size,
+                                 block_size=block_size)
+    return leverage_scores_from_pilot(pilot, X, kernel, lam,
+                                      block_size=block_size)
 
-    def acc(carry, inp):
-        xb, mb = inp
-        Kb = kernel(xb, S) * mb[:, None]
-        return carry + Kb.T @ Kb, None
 
-    KSnKnS, _ = jax.lax.scan(acc, jnp.zeros((M0, M0), X.dtype), (Xb, mask))
+def approximate_leverage_scores_path(
+    key: Array,
+    X: Array,
+    kernel: KernelFn,
+    lams,
+    *,
+    pilot_size: int = 256,
+    block_size: int = 4096,
+) -> Array:
+    """(L, n) leverage scores over a lambda grid from ONE pilot-Gram build.
 
-    G = lam * n * KSS + KSnKnS
-    G = G + 1e-6 * jnp.trace(G) / M0 * jnp.eye(M0, dtype=G.dtype)
-    cho = jax.scipy.linalg.cho_factor(G)
-
-    def score_block(xb):
-        KbS = kernel(xb, S)                       # (b, M0)
-        sol = jax.scipy.linalg.cho_solve(cho, KbS.T)  # (M0, b)
-        return jnp.sum(KbS.T * sol, axis=0)       # (b,)
-
-    scores = jax.lax.map(score_block, Xb).reshape(-1)[:n]
-    return jnp.maximum(scores, 1e-12)
+    The O(n M0^2) accumulation runs once; each grid point pays only its
+    G-Cholesky and scoring pass — the sampling-diagnostics twin of the
+    shared-sweep path solve.
+    """
+    pilot = build_leverage_pilot(key, X, kernel, pilot_size=pilot_size,
+                                 block_size=block_size)
+    return jnp.stack([
+        leverage_scores_from_pilot(pilot, X, kernel, float(lam),
+                                   block_size=block_size)
+        for lam in lams
+    ])
 
 
 def leverage_score_centers(

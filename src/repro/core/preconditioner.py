@@ -16,10 +16,27 @@ with Q (M, q) a partial isometry. T diagonal is a valid special case of
 B is never materialized: we expose the linear maps FALKON needs (the B^T H B
 composition happens in falkon.py), exactly like Alg. 1's nested triangular
 solves.
+
+The factorization is split into two stages because only the second depends on
+the regularization:
+
+* **shared stage** (``_shared_factor``) — the O(M^3) work: one Cholesky (or
+  eigendecomposition) of D K_MM D producing T/Q, plus the Gram of the factor
+  ``T T^T`` that every lam-ridge reads. lam never appears.
+* **lam stage** (``_lam_factor``) — ``A = chol(T T^T / M + lam I)``, a single
+  cheap Cholesky per lam.
+
+``make_preconditioner`` composes them for one lam;
+``make_preconditioner_path`` runs the shared stage ONCE and vmaps the lam
+stage over a grid of L lams, returning a :class:`PreconditionerPath` whose
+``A`` is a batched (L, q, q) stack and whose maps act on (q, L*p) blocks —
+L independent systems stacked along the column axis, sharing every
+O(nM)-cost data sweep upstream (see falkon.py's path solver).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +47,17 @@ Array = jax.Array
 
 def _bcast(d: Array, v: Array) -> Array:
     return d[(...,) + (None,) * (v.ndim - 1)]
+
+
+def _solve_T(T: Array, diag_T: bool, v: Array, trans: bool = False) -> Array:
+    """T^{-1} v (or T^{-T} v) — diagonal fast path for the eig factorization.
+
+    Shared by the single-lam and path preconditioners: T is lam-independent,
+    so the path applies it to the whole stacked column block in one solve.
+    """
+    if diag_T:
+        return v / _bcast(jnp.diagonal(T), v)
+    return solve_triangular(T, v, lower=False, trans=1 if trans else 0)
 
 
 @jax.tree_util.register_dataclass
@@ -47,9 +75,7 @@ class Preconditioner:
         return self.T.shape[0]
 
     def _solve_T(self, v: Array, trans: bool = False) -> Array:
-        if self.diag_T:
-            return v / _bcast(jnp.diagonal(self.T), v)
-        return solve_triangular(self.T, v, lower=False, trans=1 if trans else 0)
+        return _solve_T(self.T, self.diag_T, v, trans)
 
     # --- the three maps -------------------------------------------------
     def right(self, u: Array) -> Array:
@@ -79,6 +105,173 @@ class Preconditioner:
         """alpha = D Q T^{-1} A^{-1} beta (Alg. 1's ``alpha = T\\(A\\beta)``)."""
         return self.right(beta)
 
+    def ridge(self, u: Array, lam) -> Array:
+        """lam * A^{-T} A^{-1} u — the regularization term of W = B^T H B.
+
+        Uses the T^{-T} Q^T D K_MM D Q T^{-1} = I identity (Lemma 2 /
+        Eq. 19), exactly as the MATLAB code does.
+        """
+        v = solve_triangular(self.A, u, lower=False)
+        return lam * solve_triangular(self.A, v, lower=False, trans=1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PreconditionerPath:
+    """L preconditioners sharing T/Q/D, differing only in the lam-ridge A.
+
+    The maps act on **stacked column blocks**: a (q, L*p) array whose column
+    group ``[l*p:(l+1)*p]`` belongs to system l (lam = ``lams[l]``). The
+    lam-independent part (T, Q, D — the expensive factors) applies to the
+    whole block in one solve; only the cheap per-system A triangular solves
+    are vmapped over the (L, q, q) stack. This is the seam that lets ONE
+    O(nM) data sweep serve all L regularization values in the path solver.
+    """
+
+    T: Array            # (q, q) shared factor (diagonal in the eig path)
+    A: Array            # (L, q, q) per-lam upper-triangular stack
+    Q: Array | None     # (M, q) shared partial isometry
+    D: Array | None     # (M,) shared sampling-weight diagonal
+    lams: Array         # (L,) regularization grid, A[l] = chol(TT^T/M + lams[l] I)
+    n: Array            # number of training points (scalar)
+    diag_T: bool = dataclasses.field(metadata=dict(static=True), default=False)
+
+    @property
+    def q(self) -> int:
+        return self.T.shape[0]
+
+    @property
+    def L(self) -> int:
+        return self.A.shape[0]
+
+    # --- stacked-block plumbing ----------------------------------------
+    def _group(self, U: Array) -> Array:
+        """(q, L*p) -> (L, q, p): split the column axis into systems."""
+        q, cols = U.shape
+        return U.reshape(q, self.L, cols // self.L).transpose(1, 0, 2)
+
+    @staticmethod
+    def _ungroup(G: Array) -> Array:
+        """(L, q, p) -> (q, L*p): inverse of ``_group``."""
+        L, q, p = G.shape
+        return G.transpose(1, 0, 2).reshape(q, L * p)
+
+    def solve_A(self, U: Array, trans: bool = False) -> Array:
+        """Per-system A^{-1} (or A^{-T}) over the column groups of U."""
+        tr = 1 if trans else 0
+        solve = functools.partial(solve_triangular, lower=False, trans=tr)
+        return self._ungroup(jax.vmap(solve)(self.A, self._group(U)))
+
+    def col_lams(self, U: Array) -> Array:
+        """lams broadcast to U's columns: lam_l repeated p times."""
+        return jnp.repeat(self.lams, U.shape[1] // self.L)
+
+    # --- the three maps, system-batched ---------------------------------
+    def right(self, U: Array) -> Array:
+        """gamma_l = D Q T^{-1} A_l^{-1} u_l, stacked: (q, L*p) -> (M, L*p)."""
+        v = self.solve_A(U)
+        v = _solve_T(self.T, self.diag_T, v)
+        if self.Q is not None:
+            v = self.Q @ v
+        if self.D is not None:
+            v = v * _bcast(self.D, v)
+        return v
+
+    def left(self, W: Array) -> Array:
+        """A_l^{-T} T^{-T} Q^T D w_l, stacked: (M, L*p) -> (q, L*p)."""
+        if self.D is not None:
+            W = W * _bcast(self.D, W)
+        if self.Q is not None:
+            W = self.Q.T @ W
+        W = _solve_T(self.T, self.diag_T, W, trans=True)
+        return self.solve_A(W, trans=True)
+
+    def coeffs(self, beta: Array) -> Array:
+        """alpha_l = D Q T^{-1} A_l^{-1} beta_l, stacked over columns."""
+        return self.right(beta)
+
+    def ridge(self, U: Array, lams=None) -> Array:
+        """lam_l * A_l^{-T} A_l^{-1} u_l per column group of U."""
+        del lams  # the grid is part of the factorization; kept for the
+        # _falkon_operator calling convention shared with Preconditioner
+        v = self.solve_A(self.solve_A(U), trans=True)
+        return v * self.col_lams(U)[None, :]
+
+    def expand_rhs(self, w: Array) -> Array:
+        """The lam-independent RHS ``w = K_nM^T y / n`` (M, p) expanded to
+        the stacked (q, L*p) CG right-hand side.
+
+        The shared D/Q/T^{-T} half is applied ONCE; only the per-system
+        A_l^{-T} differs — the b-side twin of the shared data sweep.
+        """
+        if w.ndim == 1:
+            w = w[:, None]
+        if self.D is not None:
+            w = w * _bcast(self.D, w)
+        if self.Q is not None:
+            w = self.Q.T @ w
+        shared = _solve_T(self.T, self.diag_T, w, trans=True)      # (q, p)
+        solve = functools.partial(solve_triangular, lower=False, trans=1)
+        per = jax.vmap(lambda A: solve(A, shared))(self.A)         # (L, q, p)
+        return self._ungroup(per)
+
+    def split(self, stacked: Array) -> Array:
+        """(rows, L*p) -> (L, rows, p): per-system views of a stacked block."""
+        rows, cols = stacked.shape
+        return stacked.reshape(rows, self.L, cols // self.L).transpose(1, 0, 2)
+
+    def system(self, index: int) -> Preconditioner:
+        """The single-lam :class:`Preconditioner` for system ``index``."""
+        return Preconditioner(T=self.T, A=self.A[index], Q=self.Q, D=self.D,
+                              n=self.n, diag_T=self.diag_T)
+
+
+# ---------------------------------------------------------------------------
+# Factorization stages
+# ---------------------------------------------------------------------------
+def _shared_factor(
+    KMM: Array,
+    D: Array | None,
+    jitter: float | None,
+    rank_deficient: bool,
+    rank_tol: float,
+) -> tuple[Array, Array | None, Array, bool]:
+    """Stage 1 — everything lam never touches: (T, Q, TTt, diag_T).
+
+    ``TTt`` is the (q, q) Gram of the factor (``T T^T`` for the Cholesky
+    path, ``diag(kept s)`` for the eig path) that every lam-ridge Cholesky
+    reads; computing it here means an L-point path pays for it once.
+    """
+    M = KMM.shape[0]
+    dt = KMM.dtype
+    if D is not None:
+        KMM = KMM * D[:, None] * D[None, :]
+
+    if rank_deficient:
+        # Appendix A Example 2 (eigendecomposition). Static shapes: rank-q
+        # truncation is expressed by zeroing the dropped columns of Q and
+        # guarding the inverses, so q == M structurally.
+        s, U = jnp.linalg.eigh(KMM)                       # ascending
+        s = s[::-1]
+        U = U[:, ::-1]
+        keep = s > (rank_tol * jnp.maximum(s[0], 1e-30))
+        s_safe = jnp.where(keep, s, 1.0)
+        T = jnp.diag(jnp.sqrt(s_safe))
+        Q = U * keep[None, :].astype(dt)
+        TTt = jnp.diag(jnp.where(keep, s_safe, 0.0))
+        return T, Q, TTt, True
+
+    eps = jitter if jitter is not None else float(jnp.finfo(dt).eps) * M
+    T = jnp.linalg.cholesky(KMM + eps * jnp.eye(M, dtype=dt)).T   # upper
+    return T, None, T @ T.T, False
+
+
+def _lam_factor(TTt: Array, lam, M: int) -> Array:
+    """Stage 2 — ``A = chol(T T^T / M + lam I)`` (upper): one cheap Cholesky
+    per regularization value; vmapped over the grid by the path builder."""
+    eye = jnp.eye(TTt.shape[0], dtype=TTt.dtype)
+    return jnp.linalg.cholesky(TTt / M + lam * eye).T
+
 
 def make_preconditioner(
     KMM: Array,
@@ -98,28 +291,46 @@ def make_preconditioner(
     """
     M = KMM.shape[0]
     dt = KMM.dtype
-    if D is not None:
-        KMM = KMM * D[:, None] * D[None, :]
+    T, Q, TTt, diag_T = _shared_factor(KMM, D, jitter, rank_deficient,
+                                       rank_tol)
+    A = _lam_factor(TTt, lam, M)
+    return Preconditioner(T=T, A=A, Q=Q, D=D, n=jnp.asarray(n, dt),
+                          diag_T=diag_T)
 
-    if rank_deficient:
-        # Appendix A Example 2 (eigendecomposition). Static shapes: rank-q
-        # truncation is expressed by zeroing the dropped columns of Q and
-        # guarding the inverses, so q == M structurally.
-        s, U = jnp.linalg.eigh(KMM)                       # ascending
-        s = s[::-1]
-        U = U[:, ::-1]
-        keep = s > (rank_tol * jnp.maximum(s[0], 1e-30))
-        s_safe = jnp.where(keep, s, 1.0)
-        T = jnp.diag(jnp.sqrt(s_safe))
-        Q = U * keep[None, :].astype(dt)
-        A = jnp.linalg.cholesky(
-            jnp.diag(jnp.where(keep, s_safe, 0.0)) / M + lam * jnp.eye(M, dtype=dt)
-        ).T
-        return Preconditioner(T=T, A=A, Q=Q, D=D, n=jnp.asarray(n, dt),
-                              diag_T=True)
 
-    eps = jitter if jitter is not None else float(jnp.finfo(dt).eps) * M
-    T = jnp.linalg.cholesky(KMM + eps * jnp.eye(M, dtype=dt)).T   # upper
-    A = jnp.linalg.cholesky(T @ T.T / M + lam * jnp.eye(M, dtype=dt)).T
-    return Preconditioner(T=T, A=A, Q=None, D=D, n=jnp.asarray(n, dt),
-                          diag_T=False)
+def make_preconditioner_path(
+    KMM: Array,
+    lams,
+    n: int,
+    *,
+    D: Array | None = None,
+    jitter: float | None = None,
+    rank_deficient: bool = False,
+    rank_tol: float = 1e-7,
+) -> PreconditionerPath:
+    """One shared factorization, L cheap lam-ridge Cholesky's.
+
+    ``lams`` is the regularization grid ((L,) array-like, each > 0). The
+    O(M^3) shared stage runs once; the (L, q, q) ``A`` stack costs L * M^3/3
+    on an M x M triangular Gram that is already resident — against L full
+    ``make_preconditioner`` calls this saves L-1 Cholesky factorizations of
+    K_MM itself, and against L full *fits* it is the enabler for sharing
+    every O(nM) data sweep (see ``falkon_solve_path``).
+    """
+    M = KMM.shape[0]
+    dt = KMM.dtype
+    lams = jnp.asarray(lams, dt)
+    if lams.ndim != 1 or lams.shape[0] < 1:
+        raise ValueError(f"lams must be a non-empty 1-D grid, got shape "
+                         f"{lams.shape}")
+    if not isinstance(lams, jax.core.Tracer) and bool(jnp.any(lams <= 0.0)):
+        # a non-positive ridge makes TT^T/M + lam I indefinite and the
+        # batched Cholesky returns silent NaNs, not an error — fail here
+        # (concrete grids only; traced grids keep the builder jittable)
+        raise ValueError(
+            f"every lam in the path must be > 0, got {tuple(map(float, lams))}")
+    T, Q, TTt, diag_T = _shared_factor(KMM, D, jitter, rank_deficient,
+                                       rank_tol)
+    A = jax.vmap(lambda lam: _lam_factor(TTt, lam, M))(lams)
+    return PreconditionerPath(T=T, A=A, Q=Q, D=D, lams=lams,
+                              n=jnp.asarray(n, dt), diag_T=diag_T)

@@ -9,12 +9,14 @@
 See ``base.py`` for the protocol/registry, ``jnp_backend.py`` for the
 reference implementation and ``pallas_backend.py`` for the fused TPU path.
 """
-from .base import (KernelOps, OpsBase, POLICIES, PRECISIONS, PrecisionPolicy,
-                   SWEEP_PATHS, SweepPlan, SweepPlanWarning, available_ops,
-                   get_ops, plan_sweep, register_ops, resolve_precision)
+from .base import (CountingOps, KernelOps, OpsBase, POLICIES, PRECISIONS,
+                   PrecisionPolicy, SWEEP_PATHS, SweepPlan, SweepPlanWarning,
+                   available_ops, get_ops, plan_sweep, register_ops,
+                   resolve_precision)
 from . import jnp_backend as _jnp_backend    # noqa: F401  (registers "jnp")
 from . import pallas_backend as _pallas_backend  # noqa: F401  ("pallas")
 
-__all__ = ["KernelOps", "OpsBase", "POLICIES", "PRECISIONS", "PrecisionPolicy",
-           "SWEEP_PATHS", "SweepPlan", "SweepPlanWarning", "available_ops",
-           "get_ops", "plan_sweep", "register_ops", "resolve_precision"]
+__all__ = ["CountingOps", "KernelOps", "OpsBase", "POLICIES", "PRECISIONS",
+           "PrecisionPolicy", "SWEEP_PATHS", "SweepPlan", "SweepPlanWarning",
+           "available_ops", "get_ops", "plan_sweep", "register_ops",
+           "resolve_precision"]

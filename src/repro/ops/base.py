@@ -166,7 +166,7 @@ class SweepPlan:
     n: int
     M: int
     d: int
-    p: int
+    p: int                     # TOTAL column width charged (= systems * p_rhs)
     block_m: int               # (bm, bn) tile dims the sweep runs with
     block_n: int
     shard_m: int | None        # C-shard rows for the j_sharded path
@@ -179,6 +179,7 @@ class SweepPlan:
     accum_dtype: str = "float32"    # contraction accumulate dtype
     coeffs_dtype: str = "float32"   # u-in / w-out coefficient dtype
     compensated: bool = False       # Kahan carry buffers counted in scratch
+    systems: int = 1                # stacked lam-path systems sharing the sweep
 
     @property
     def total_bytes(self) -> int:
@@ -203,6 +204,7 @@ class SweepPlan:
 def plan_sweep(
     n: int, M: int, d: int, p: int = 1, *,
     bm: int, bn: int,
+    systems: int = 1,
     itemsize: int = 4,
     vec_itemsize: int | None = None,
     coeffs_itemsize: int | None = None,
@@ -228,6 +230,16 @@ def plan_sweep(
     shard's padded storage-dtype copy stays within the budget-scaled HBM
     workspace. A single shard covering all of M degenerates to the classic
     two-pass composition.
+
+    ``systems`` is the lam-path stacking factor: the path solver stacks L
+    independent regularization systems along the column axis so one data
+    sweep serves all of them, which means every p-sized term above is
+    charged at the WIDENED width ``p * systems`` — a fat path that no
+    longer fits the fused budget must route to two_pass/j_sharded exactly
+    as a fat multi-rhs would (the plan records the effective ``p`` and the
+    ``systems`` factor separately). Passing the stacked width directly as
+    ``p`` is equivalent; ``systems`` exists so callers planning a path can
+    ask about it without pre-multiplying.
 
     ``policy`` (a :class:`PrecisionPolicy`) is the preferred way to set the
     dtype knobs; explicit ``itemsize``/``vec_itemsize``/``compensated``
@@ -259,7 +271,8 @@ def plan_sweep(
                      coeffs_dtype=_names.get(coeffs_itemsize, "float32"))
     if vmem_budget is None:
         vmem_budget = _vmem_budget()
-    p = max(p, 1)
+    systems = max(systems, 1)
+    p = max(p, 1) * systems
     Mpad = -(-M // _LANE) * _LANE
     dp = -(-d // _LANE) * _LANE
     pp = -(-p // _LANE) * _LANE
@@ -275,7 +288,7 @@ def plan_sweep(
     base = dict(n=n, M=M, d=d, p=p, block_m=bm, block_n=bn,
                 scratch_bytes=scratch, io_bytes=io,
                 vmem_budget_bytes=vmem_budget,
-                compensated=compensated, **names)
+                compensated=compensated, systems=systems, **names)
 
     if scratch + io <= vmem_budget:
         return SweepPlan(
@@ -336,8 +349,13 @@ class KernelOps(Protocol):
         """K(A, B) materialized — the preconditioner path."""
         ...
 
-    def plan(self, n: int, M: int, d: int, p: int = 1) -> SweepPlan:
-        """The sweep path this backend would take for these shapes."""
+    def plan(self, n: int, M: int, d: int, p: int = 1,
+             systems: int = 1) -> SweepPlan:
+        """The sweep path this backend would take for these shapes.
+
+        ``systems`` charges the lam-path stacking: the planner models the
+        widened ``p * systems`` column block the path solve actually sweeps.
+        """
         ...
 
 
@@ -386,3 +404,66 @@ class OpsBase:
     def policy(self) -> PrecisionPolicy:
         """The resolved :class:`PrecisionPolicy` this backend runs under."""
         return resolve_precision(self.precision)
+
+
+class CountingOps:
+    """Invocation-counting facade over any :class:`KernelOps`.
+
+    The instrumentation seam behind the lam-path acceptance claim: a path
+    fit over L regularizers must issue ~1/L the ``sweep`` calls of L
+    sequential fits, and "number of sweeps" is exactly what this wrapper
+    counts. Pure delegation (same primitives, same results, same plan) plus
+    three counters — ``sweeps``, ``applies``, ``grams``.
+
+    The counters are PROGRAM-POINT counts, not executed-data-pass counts:
+    a primitive called under a trace (``jax.jit``, or the matvec inside the
+    scanned CG driver's ``lax.scan`` body) increments once at trace time no
+    matter how many times the compiled program replays it. That is still
+    the right invariant for the sharing claim — a solve whose scan body
+    contains ONE sweep serving L systems counts 1 where L sequential solves
+    count L, and both execute their traced sweep t times — but it means a
+    fixed count does NOT scale with the iteration count t, and jitted
+    facades (e.g. the streaming ``JittedOps``) count compilations, not
+    calls.
+    """
+
+    def __init__(self, ops):
+        self.ops = ops
+        self.sweeps = 0
+        self.applies = 0
+        self.grams = 0
+
+    @property
+    def kernel(self):
+        return self.ops.kernel
+
+    @property
+    def block_size(self):
+        return self.ops.block_size
+
+    @property
+    def precision(self):
+        return self.ops.precision
+
+    @property
+    def policy(self):
+        return self.ops.policy
+
+    def sweep(self, X, C, u, v=None):
+        self.sweeps += 1
+        return self.ops.sweep(X, C, u, v)
+
+    def apply(self, X, C, u):
+        self.applies += 1
+        return self.ops.apply(X, C, u)
+
+    def gram(self, A, B):
+        self.grams += 1
+        return self.ops.gram(A, B)
+
+    def plan(self, n: int, M: int, d: int, p: int = 1,
+             systems: int = 1) -> SweepPlan:
+        return self.ops.plan(n, M, d, p, systems)
+
+    def reset(self) -> None:
+        self.sweeps = self.applies = self.grams = 0

@@ -147,14 +147,17 @@ class JnpKernelOps(OpsBase):
             B = B.astype(gt)
         return self.kernel(A, B)
 
-    def plan(self, n: int, M: int, d: int, p: int = 1) -> SweepPlan:
+    def plan(self, n: int, M: int, d: int, p: int = 1,
+             systems: int = 1) -> SweepPlan:
         """Reference backend has one path: the lax.scan row sweep. Reported
         through the same ``SweepPlan`` shape so callers can introspect any
-        backend uniformly."""
-        p = max(p, 1)
+        backend uniformly (``systems`` widens p exactly as the Pallas
+        planner charges a stacked lam-path block)."""
+        systems = max(systems, 1)
+        p = max(p, 1) * systems
         pol = self.policy
         return SweepPlan(
-            path="jnp", n=n, M=M, d=d, p=p,
+            path="jnp", n=n, M=M, d=d, p=p, systems=systems,
             block_m=self.block_size, block_n=M, shard_m=None,
             scratch_bytes=4 * self.block_size * M, io_bytes=0,
             vmem_budget_bytes=0,

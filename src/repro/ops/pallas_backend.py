@@ -88,18 +88,22 @@ class PallasKernelOps(OpsBase):
             u = u.astype(co)
         return u, v
 
-    def plan(self, n: int, M: int, d: int, p: int = 1) -> SweepPlan:
+    def plan(self, n: int, M: int, d: int, p: int = 1,
+             systems: int = 1) -> SweepPlan:
         """The routing decision ``sweep`` will take for these shapes.
 
         The same VMEM budget model applies in interpret mode: Python
         emulation has no hard VMEM ceiling, but letting the fused kernel
         allocate a (bm, Mpad) strip at M ~ 10^5 is exactly the
         out-of-memory blowup the j-sharded path exists to avoid, and CPU
-        tests should exercise the routing real TPUs will use.
+        tests should exercise the routing real TPUs will use. ``systems``
+        charges the lam-path stacking (effective width ``p * systems``) so
+        a fat path routes off the fused path exactly like a fat multi-rhs.
         """
         from repro.kernels.kernel_matvec import sweep_block_dims
         bm, bn = sweep_block_dims(n, M, self._block_m, 512)
-        return plan_sweep(n, M, d, p, bm=bm, bn=bn, policy=self.policy)
+        return plan_sweep(n, M, d, p, systems=systems, bm=bm, bn=bn,
+                          policy=self.policy)
 
     def sweep(self, X: Array, C: Array, u: Array, v: Array | None = None) -> Array:
         from repro.kernels.kernel_matvec import (fused_sweep_pallas,

@@ -1,0 +1,180 @@
+"""The unified CG core: scanned/host driver parity + diagnostics.
+
+Pins two contracts the lam-path refactor leaned on:
+
+* ``conjugate_gradient`` (lax.scan, static shape, masked no-ops) and
+  ``conjugate_gradient_host`` (python loop, may stop early) are shells over
+  ONE shared core — same initialization, same masked update, same residual
+  bookkeeping — so tol-driven early stopping agrees between them, and the
+  host driver's early ``break`` TRUNCATES ``residual_norms`` to
+  ``iterations + 1`` entries (the out-of-core solve's documented shape).
+* ``falkon_solve``'s power-iteration ``cond_estimate`` tracks the true
+  condition number of the preconditioned operator W (the Thm 2 diagnostic).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import synthetic_regression
+from repro.core import (FalkonConfig, conjugate_gradient,
+                        conjugate_gradient_host, falkon_solve,
+                        make_preconditioner, uniform_centers)
+from repro.core.falkon import _falkon_operator
+from repro.ops import get_ops
+
+
+def _spd(q, seed=0, shift=None):
+    A0 = jax.random.normal(jax.random.PRNGKey(seed), (q, q))
+    A = A0 @ A0.T + (shift if shift is not None else q) * jnp.eye(q)
+    return A
+
+
+def test_host_matches_scanned_full_run():
+    """tol=0: the host driver runs all t iterations and the two drivers'
+    iterates/residual histories coincide (same shared update, loop style is
+    the only difference)."""
+    A = _spd(32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (32,))
+    mv = lambda v: A @ v
+    scan = conjugate_gradient(mv, b, t=25)
+    host = conjugate_gradient_host(mv, b, t=25)
+    assert host.residual_norms.shape == scan.residual_norms.shape == (26,)
+    np.testing.assert_allclose(np.asarray(host.x), np.asarray(scan.x),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(host.residual_norms),
+                               np.asarray(scan.residual_norms),
+                               rtol=1e-4, atol=1e-7)
+
+
+def test_host_tol_early_stop_truncates_residual_norms():
+    """THE pinned contract: the host driver skips remaining data passes once
+    every column converges, so residual_norms has iterations+1 entries —
+    not the scanned driver's full t+1."""
+    A = _spd(20)
+    b = jax.random.normal(jax.random.PRNGKey(2), (20,))
+    mv = lambda v: A @ v
+    t = 200
+    host = conjugate_gradient_host(mv, b, t=t, tol=1e-5)
+    it = int(host.iterations)
+    assert 0 < it < t, "tolerance should stop the loop early"
+    assert host.residual_norms.shape == (it + 1,)
+    np.testing.assert_allclose(np.asarray(host.x),
+                               np.asarray(jnp.linalg.solve(A, b)),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_host_scanned_tol_parity():
+    """Same tol, same system: both drivers apply the same number of real
+    updates and agree on the solution; the scanned history's extra entries
+    are frozen at the converged value (masked no-ops)."""
+    A = _spd(20)
+    b = jax.random.normal(jax.random.PRNGKey(2), (20,))
+    mv = lambda v: A @ v
+    t = 200
+    scan = conjugate_gradient(mv, b, t=t, tol=1e-5)
+    host = conjugate_gradient_host(mv, b, t=t, tol=1e-5)
+    it_h, it_s = int(host.iterations), int(scan.iterations)
+    # compiled-vs-eager arithmetic may flip the knife-edge iteration
+    assert abs(it_h - it_s) <= 1
+    assert scan.residual_norms.shape == (t + 1,)
+    k = min(it_h, it_s)
+    np.testing.assert_allclose(np.asarray(host.residual_norms[:k + 1]),
+                               np.asarray(scan.residual_norms[:k + 1]),
+                               rtol=1e-3, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(host.x), np.asarray(scan.x),
+                               rtol=1e-4, atol=1e-5)
+    # the scanned tail is frozen once everything converged
+    tail = np.asarray(scan.residual_norms[it_s:])
+    np.testing.assert_array_equal(tail, np.full_like(tail, tail[0]))
+
+
+def test_host_multirhs_stops_when_all_columns_converge():
+    A = _spd(24)
+    # very different column scales => different per-column convergence times
+    B = jax.random.normal(jax.random.PRNGKey(3), (24, 3)) * jnp.array(
+        [1.0, 1e-3, 10.0])
+    mv = lambda v: A @ v
+    host = conjugate_gradient_host(mv, B, t=300, tol=1e-5)
+    it = int(host.iterations)
+    assert 0 < it < 300
+    assert host.residual_norms.shape == (it + 1, 3)
+    sol = jnp.linalg.solve(A, B)
+    np.testing.assert_allclose(np.asarray(host.x), np.asarray(sol),
+                               rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# estimate_cond: the power-iteration diagnostic
+# ---------------------------------------------------------------------------
+def _tiny_falkon(lam=1e-3, n=300, M=48):
+    X, y = synthetic_regression(jax.random.PRNGKey(0), n)
+    cfg = FalkonConfig(kernel_params=(("sigma", 1.5),), lam=lam,
+                       num_centers=M, iterations=5, block_size=128)
+    kern = cfg.make_kernel()
+    sel = uniform_centers(jax.random.PRNGKey(1), X, M)
+    ops = get_ops("jnp", kern, block_size=128)
+    KMM = ops.gram(sel.centers, sel.centers)
+    pre = make_preconditioner(KMM, lam, n)
+    return X, y, sel.centers, pre, kern, cfg, ops
+
+
+def test_estimate_cond_tracks_true_condition_number():
+    X, y, centers, pre, kern, cfg, ops = _tiny_falkon()
+    state = falkon_solve(X, y, centers, pre, kern, cfg.lam, 5, ops=ops,
+                         estimate_cond=True)
+    est = float(state.cond_estimate)
+
+    # densify W = B^T H B by applying the operator to the identity
+    mv = lambda g: ops.sweep(X, centers, g, None)
+    W = _falkon_operator(mv, pre, cfg.lam, X.shape[0])
+    Wmat = W(jnp.eye(pre.q, dtype=X.dtype))
+    eig = jnp.linalg.eigvalsh(0.5 * (Wmat + Wmat.T))
+    true_cond = float(eig[-1] / eig[0])
+
+    assert est >= 1.0
+    # 12 power iterations on a preconditioned (tightly clustered) spectrum:
+    # order-of-magnitude agreement is the diagnostic's contract
+    assert true_cond / 3.0 <= est <= true_cond * 3.0, (est, true_cond)
+
+
+def test_estimate_cond_flag_off_returns_zero_and_saves_sweeps():
+    from repro.ops import CountingOps
+    X, y, centers, pre, kern, cfg, ops = _tiny_falkon()
+    c_on = CountingOps(ops)
+    on = falkon_solve(X, y, centers, pre, kern, cfg.lam, 5, ops=c_on,
+                      estimate_cond=True)
+    c_off = CountingOps(ops)
+    off = falkon_solve(X, y, centers, pre, kern, cfg.lam, 5, ops=c_off,
+                       estimate_cond=False)
+    assert float(off.cond_estimate) == 0.0
+    assert float(on.cond_estimate) > 0.0
+    assert c_off.sweeps < c_on.sweeps  # the diagnostic costs extra sweeps
+    np.testing.assert_array_equal(np.asarray(on.alpha), np.asarray(off.alpha))
+
+
+def test_config_estimate_cond_threads_through_fit():
+    from repro.core import falkon_fit
+    X, y = synthetic_regression(jax.random.PRNGKey(0), 200)
+    cfg = FalkonConfig(num_centers=32, iterations=3, block_size=64,
+                       estimate_cond=False)
+    _, state = falkon_fit(jax.random.PRNGKey(1), X, y, cfg)
+    assert float(state.cond_estimate) == 0.0
+
+
+@pytest.mark.parametrize("storage", [None, "bfloat16"])
+def test_host_scanned_storage_contract(storage):
+    """The reduced-storage iterate contract reaches both drivers via the
+    shared core (loose tolerance: eager-vs-compiled rounding differs at
+    bf16 ulps)."""
+    A = _spd(16, shift=16.0)
+    b = jax.random.normal(jax.random.PRNGKey(4), (16,))
+    mv = lambda v: A @ v.astype(jnp.float32)
+    scan = conjugate_gradient(mv, b, t=30, storage_dtype=storage)
+    host = conjugate_gradient_host(mv, b, t=30, storage_dtype=storage)
+    want = jnp.dtype(storage) if storage else b.dtype
+    assert scan.x.dtype == host.x.dtype == want
+    tol = 5e-2 if storage else 1e-5
+    np.testing.assert_allclose(np.asarray(host.x, np.float32),
+                               np.asarray(scan.x, np.float32),
+                               rtol=tol, atol=tol)

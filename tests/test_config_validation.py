@@ -1,0 +1,73 @@
+"""FalkonConfig fails fast: unknown knobs error at CONFIG time, naming the
+options — not deep inside ``get_ops`` at solve time — and the deprecated
+``matvec_impl`` alias warns."""
+import pytest
+
+from repro.core import FalkonConfig
+from repro.core.falkon import CENTER_SELECTIONS
+from repro.ops import PRECISIONS, PrecisionPolicy, available_ops
+
+
+def test_unknown_ops_impl_fails_eagerly_naming_options():
+    with pytest.raises(ValueError, match="unknown ops_impl 'cuda'"):
+        FalkonConfig(ops_impl="cuda")
+    with pytest.raises(ValueError) as e:
+        FalkonConfig(ops_impl="cuda")
+    for name in available_ops():
+        assert name in str(e.value)
+
+
+def test_unknown_precision_fails_eagerly_naming_options():
+    with pytest.raises(ValueError, match="unknown precision"):
+        FalkonConfig(precision="fp8")
+    with pytest.raises(ValueError) as e:
+        FalkonConfig(precision="fp8")
+    for name in PRECISIONS:
+        assert name in str(e.value)
+
+
+def test_unknown_center_selection_fails_eagerly_naming_options():
+    with pytest.raises(ValueError, match="unknown center_selection"):
+        FalkonConfig(center_selection="kmeans")
+    with pytest.raises(ValueError) as e:
+        FalkonConfig(center_selection="kmeans")
+    for name in CENTER_SELECTIONS:
+        assert name in str(e.value)
+
+
+def test_valid_configs_still_construct():
+    FalkonConfig()  # defaults
+    FalkonConfig(ops_impl="pallas", precision="bf16",
+                 center_selection="leverage")
+    # a custom PrecisionPolicy instance passes validation too
+    FalkonConfig(precision=PrecisionPolicy(name="custom", storage="bfloat16"))
+
+
+def test_matvec_impl_alias_warns_deprecation():
+    with pytest.warns(DeprecationWarning, match="matvec_impl is a deprecated"):
+        cfg = FalkonConfig(matvec_impl="pallas")
+    assert cfg.impl == "pallas"  # still honored, just loudly
+
+
+def test_matvec_impl_alias_is_validated_too():
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="unknown ops_impl"):
+            FalkonConfig(matvec_impl="cuda")
+
+
+def test_falkon_solve_matvec_impl_warns():
+    import jax
+    import jax.numpy as jnp
+    from conftest import synthetic_regression
+    from repro.core import falkon_solve, make_preconditioner, uniform_centers
+    from repro.core.kernels import make_kernel
+
+    X, y = synthetic_regression(jax.random.PRNGKey(0), 64)
+    kern = make_kernel("gaussian", sigma=1.5)
+    sel = uniform_centers(jax.random.PRNGKey(1), X, 16)
+    pre = make_preconditioner(kern(sel.centers, sel.centers), 1e-3, 64)
+    with pytest.warns(DeprecationWarning, match="matvec_impl"):
+        st = falkon_solve(X, y, sel.centers, pre, kern, 1e-3, 2,
+                          block_size=64, matvec_impl="jnp",
+                          estimate_cond=False)
+    assert bool(jnp.all(jnp.isfinite(st.alpha)))
