@@ -19,6 +19,14 @@ Dispatches on the candidate's ``benchmark`` field:
   below the checked-in geomean; per record the CountingOps sweep counts
   must satisfy ``sweeps_seq == L * sweeps_path`` EXACTLY — the
   deterministic signal that the path solve still shares every data pass.
+* ``serve_coalesce`` — coalescing-server gate against ``BENCH_serve.json``:
+  coalesced serving must stay >= 2x the per-request baseline's rows/s on a
+  ragged trace (same-run ratio; absolute floor ONLY — deliberately no
+  ``--max-regression-pct`` band, because the cold baseline is dominated by
+  XLA compile time and compile-vs-compute speed is not comparable across
+  machines); per record ``retraces_after_warmup`` must be 0 EXACTLY — the
+  deterministic signal that the bucket ladder still covers the traffic
+  with the warmup-compiled shapes.
 
 For ``sweep_fusion``, two gates per matching (n, M, d, block_m, block_n)
 record:
@@ -73,6 +81,41 @@ PRECISION_HEADROOM_FLOOR = 1.8
 
 #: Absolute acceptance floor for the lambda-path gate (at L=8).
 PATH_SPEEDUP_FLOOR = 2.0
+
+#: Absolute acceptance floor for the serving gate (ragged trace).
+SERVE_SPEEDUP_FLOOR = 2.0
+
+
+def compare_serve(baseline: dict, candidate: dict,
+                  max_pct: float) -> list[str]:
+    """Gate BENCH_serve.json: zero retraces + the 2x throughput floor."""
+    failures = []
+    for r in candidate.get("records", []):
+        key = (r.get("n"), r.get("M"), r.get("max_batch"))
+        if r["retraces_after_warmup"] != 0:
+            failures.append(
+                f"{key}: {r['retraces_after_warmup']} XLA retraces after "
+                "warmup — the bucket ladder stopped covering the ragged "
+                "trace with warmup-compiled shapes")
+
+    speedups = [r["speedup_vs_per_request"]
+                for r in candidate.get("records", [])]
+    if not speedups:
+        return failures + ["candidate has no serve_coalesce records"]
+    got = _geomean(speedups)
+    print(f"coalesced-vs-per-request speedup geomean over {len(speedups)} "
+          f"points: {got:.3f} (floor {SERVE_SPEEDUP_FLOOR})")
+    if got < SERVE_SPEEDUP_FLOOR:
+        failures.append(
+            f"speedup_vs_per_request geomean {got:.3f} < absolute floor "
+            f"{SERVE_SPEEDUP_FLOOR} — the coalescing win is gone")
+    # No baseline-relative band here, unlike the other gates: the cold
+    # per-request baseline is dominated by XLA compile time (one retrace per
+    # distinct request size), and compile-vs-compute speed varies far more
+    # across machines than the kernel ratios the other gates track. The
+    # absolute floor plus the exact zero-retrace invariant are the stable
+    # signals.
+    return failures
 
 
 def compare_lambda_path(baseline: dict, candidate: dict,
@@ -226,7 +269,8 @@ def main(argv=None) -> int:
         )
         return 1
     gate = {"precision_sweep": compare_precision,
-            "lambda_path": compare_lambda_path}.get(kind, compare)
+            "lambda_path": compare_lambda_path,
+            "serve_coalesce": compare_serve}.get(kind, compare)
     failures = gate(baseline, candidate, args.max_regression_pct)
     if failures:
         print(f"bench-regression gate FAILED ({kind}):")

@@ -1,0 +1,203 @@
+"""Serving benchmark: batch-coalescing server vs the per-request loop.
+
+Measures the serving tentpole end to end on a ragged request trace (sizes
+uniform in 1..max_batch, pre-generated OUTSIDE every timer) and writes
+``BENCH_serve.json`` (path override: env ``BENCH_SERVE_JSON``), gated in CI
+by ``benchmarks/check_regression.py``:
+
+* ``speedup_vs_per_request`` — coalesced rows/s over the single-stream
+  baseline's rows/s, measured in the same run on the same machine
+  (machine-neutral ratio, like the other gates). The baseline is the old
+  ``serve --falkon`` protocol: one jitted ``est.predict`` dispatch per
+  request, which retraces on every DISTINCT batch size in the trace — the
+  production cost profile the server removes. The gate floor is 2x.
+  ``speedup_vs_per_request_warm`` is also recorded (baseline re-run with
+  every shape already compiled — isolating the dispatch-coalescing win from
+  the retrace win) but not gated: it depends on per-call dispatch overhead,
+  which varies wildly across hosts.
+* ``retraces_after_warmup`` — the server's trace counter after serving the
+  whole ragged trace; must be 0 EXACTLY (deterministic, machine-independent:
+  if it moves, the bucket ladder stopped covering the traffic).
+* p50/p99 latency per arm — per-request: each dispatch timed individually;
+  coalesced: the trace arrives in flush windows and every request in a
+  window is charged the whole window's wall time (the honest number — a
+  coalesced request waits for its batch).
+
+Runs on the jnp reference backend: the coalescing win is batching policy,
+not kernel speed, and interpret-mode Pallas wall-clock on CPU CI runners
+would measure the emulator.
+
+    PYTHONPATH=src python -m benchmarks.serve_coalesce [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FalkonConfig, falkon_fit
+from repro.serve import CoalescingPredictServer
+
+from .check_regression import _geomean
+from .common import emit
+
+#: (n, M, d, n_requests, max_batch) benchmark points.
+FAST_POINTS = [(4096, 256, 16, 150, 128)]
+FULL_POINTS = FAST_POINTS + [(4096, 256, 16, 150, 32)]
+
+SPEEDUP_FLOOR = 2.0     # the CI gate's absolute acceptance
+FLUSH_WINDOW = 16       # requests per coalesced flush (latency attribution)
+
+
+def _fit(n, M, d, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    X = jax.random.normal(ks[0], (n, d))
+    w = jax.random.normal(ks[1], (d,))
+    y = jnp.sin(X @ w) + 0.05 * jax.random.normal(ks[2], (n,))
+    cfg = FalkonConfig(kernel_params=(("sigma", 2.0),), lam=1e-4,
+                       num_centers=M, iterations=10, block_size=256,
+                       ops_impl="jnp", estimate_cond=False)
+    est, _ = falkon_fit(jax.random.PRNGKey(1), X, y, cfg)
+    jax.block_until_ready(est.alpha)
+    return est
+
+
+def _trace(n_requests, max_batch, d, seed=0):
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(1, max_batch + 1, size=n_requests)
+    return [rng.standard_normal((int(s), d)).astype(np.float32)
+            for s in sizes]
+
+
+def _run_per_request(est, trace, d, *, warm_shapes):
+    """The single-stream baseline; returns (seconds, [per-request seconds]).
+
+    A FRESH ``jax.jit`` wrapper per call keeps its compile cache empty, so
+    each invocation measures the protocol from cold — except the shapes in
+    ``warm_shapes``, compiled before the timer (the old loop warmed exactly
+    one shape; the warm variant passes all of them).
+    """
+    step = jax.jit(est.predict)
+    for s in sorted(warm_shapes):
+        jax.block_until_ready(step(jnp.zeros((s, d), jnp.float32)))
+    lat = []
+    t0 = time.perf_counter()
+    for xb in trace:
+        t1 = time.perf_counter()
+        jax.block_until_ready(step(jnp.asarray(xb)))
+        lat.append(time.perf_counter() - t1)
+    return time.perf_counter() - t0, lat
+
+
+def _run_coalesced(est, trace, max_batch):
+    """The server arm; returns (seconds, [per-request seconds], server).
+
+    The trace arrives in ``FLUSH_WINDOW``-request windows; every request in
+    a window is charged the window's whole flush time.
+    """
+    server = CoalescingPredictServer(est, max_batch=max_batch)
+    server.warmup()
+    lat = []
+    t0 = time.perf_counter()
+    for w0 in range(0, len(trace), FLUSH_WINDOW):
+        window = trace[w0:w0 + FLUSH_WINDOW]
+        t1 = time.perf_counter()
+        for xb in window:
+            server.submit(xb)
+        server.flush()
+        lat.extend([time.perf_counter() - t1] * len(window))
+    return time.perf_counter() - t0, lat, server
+
+
+def _pct(lat, q):
+    return float(np.percentile(np.asarray(lat), q) * 1e3)
+
+
+def run(points, *, max_requests=None):
+    records = []
+    for n, M, d, n_requests, max_batch in points:
+        if max_requests is not None:
+            n_requests = min(n_requests, max_requests)
+        est = _fit(n, M, d)
+        trace = _trace(n_requests, max_batch, d)
+        rows = sum(b.shape[0] for b in trace)
+
+        sec_cold, lat_req = _run_per_request(est, trace, d,
+                                             warm_shapes={max_batch})
+        warm = {b.shape[0] for b in trace}
+        sec_warm, _ = _run_per_request(est, trace, d, warm_shapes=warm)
+        sec_co, lat_co, server = _run_coalesced(est, trace, max_batch)
+
+        rec = dict(
+            n=n, M=M, d=d, n_requests=n_requests, max_batch=max_batch,
+            rows=rows, impl="jnp",
+            ladder=list(server.ladder),
+            rows_per_s_coalesced=rows / sec_co,
+            rows_per_s_per_request=rows / sec_cold,
+            rows_per_s_per_request_warm=rows / sec_warm,
+            speedup_vs_per_request=sec_cold / sec_co,
+            speedup_vs_per_request_warm=sec_warm / sec_co,
+            p50_ms_coalesced=_pct(lat_co, 50),
+            p99_ms_coalesced=_pct(lat_co, 99),
+            p50_ms_per_request=_pct(lat_req, 50),
+            p99_ms_per_request=_pct(lat_req, 99),
+            dispatches=server.stats.dispatches,
+            pad_fraction=server.stats.pad_fraction,
+            retraces_after_warmup=server.retraces_since_warmup(),
+        )
+        records.append(rec)
+        print(f"n={n} M={M} max_batch={max_batch}: coalesced "
+              f"{rec['rows_per_s_coalesced']:.0f} rows/s vs per-request "
+              f"{rec['rows_per_s_per_request']:.0f} (warm "
+              f"{rec['rows_per_s_per_request_warm']:.0f}) -> "
+              f"{rec['speedup_vs_per_request']:.1f}x (warm "
+              f"{rec['speedup_vs_per_request_warm']:.1f}x); p99 "
+              f"{rec['p99_ms_coalesced']:.1f}ms vs "
+              f"{rec['p99_ms_per_request']:.1f}ms; retraces "
+              f"{rec['retraces_after_warmup']}")
+    return records
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI mode: fast point set, trace capped at 100 "
+                         "requests")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    points = FULL_POINTS if args.full else FAST_POINTS
+
+    records = run(points, max_requests=100 if args.quick else None)
+    summary = dict(
+        speedup_geomean=_geomean([r["speedup_vs_per_request"]
+                                  for r in records]),
+        speedup_warm_geomean=_geomean([r["speedup_vs_per_request_warm"]
+                                       for r in records]),
+        retraces_after_warmup=sum(r["retraces_after_warmup"]
+                                  for r in records),
+        speedup_floor=SPEEDUP_FLOOR,
+    )
+    payload = {"benchmark": "serve_coalesce", "records": records,
+               "summary": summary}
+    out = os.environ.get("BENCH_SERVE_JSON", "BENCH_serve.json")
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out}: coalesced speedup geomean "
+          f"{summary['speedup_geomean']:.1f}x (warm-baseline "
+          f"{summary['speedup_warm_geomean']:.1f}x) over {len(records)} "
+          f"points, {summary['retraces_after_warmup']} retraces after warmup")
+
+    emit([dict(name=f"serve_b{r['max_batch']}",
+               us_per_call=f"{1e6 / r['rows_per_s_coalesced']:.1f}",
+               speedup=f"{r['speedup_vs_per_request']:.1f}",
+               p99_ms=f"{r['p99_ms_coalesced']:.1f}")
+          for r in records])
+
+
+if __name__ == "__main__":
+    main()

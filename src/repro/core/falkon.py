@@ -145,20 +145,25 @@ class FalkonEstimator:
     ops_impl: str = dataclasses.field(metadata=dict(static=True), default="jnp")
     precision: str = dataclasses.field(metadata=dict(static=True), default="fp32")
 
+    @functools.cached_property
     def _ops(self) -> KernelOps:
+        # cached on the instance (cached_property writes __dict__ directly,
+        # so the frozen dataclass is fine — same trick as _jitted_ops): the
+        # backend + resolved precision policy are built ONCE, not rebuilt
+        # via get_ops on every predict() call. Both predict paths and the
+        # serving layer route through this one object.
         return get_ops(self.ops_impl, self.kernel, block_size=self.block_size,
                        precision=self.precision)
 
     def predict(self, X: Array) -> Array:
-        return self._ops().apply(X, self.centers, self.alpha)
+        return self._ops.apply(X, self.centers, self.alpha)
 
     @functools.cached_property
     def _jitted_ops(self):
-        # cached on the instance (writes __dict__ directly, so frozen is
-        # fine): repeat predict_stream calls reuse the same jit wrappers
-        # and therefore the same XLA compile cache per chunk shape.
+        # jit wrappers over the cached ops: repeat predict_stream calls
+        # reuse the same XLA compile cache per chunk shape.
         from repro.data.streaming import JittedOps
-        return JittedOps(self._ops())
+        return JittedOps(self._ops)
 
     def predict_stream(self, loader) -> Array:
         """Predict over a ``StreamingLoader``/iterable of (X_chunk, _) pairs
@@ -660,6 +665,7 @@ def _streaming_setup(
     *,
     prefetch: int | None,
     centers: Array | None,
+    ops: KernelOps | None = None,
 ):
     """Shared front half of the streaming fits: centers, loader, out_dim.
 
@@ -679,7 +685,8 @@ def _streaming_setup(
             f"(got {config.center_selection!r})")
 
     kernel = config.make_kernel()
-    ops = config.make_ops(kernel)
+    if ops is None:
+        ops = config.make_ops(kernel)
     dt = jnp.dtype(config.dtype)
     n = source.n_rows
     M = min(config.num_centers, n)
@@ -712,6 +719,7 @@ def falkon_fit_streaming(
     *,
     prefetch: int | None = None,
     centers: Array | None = None,
+    ops: KernelOps | None = None,
 ) -> tuple[FalkonEstimator, FalkonState]:
     """Fit FALKON from a ``ChunkSource`` without materializing X on device.
 
@@ -719,13 +727,16 @@ def falkon_fit_streaming(
     for their streaming variants: uniform centers from one host-side pass,
     the M x M preconditioner built in-core (the paper's memory budget), then
     every CG sweep streams the chunks through a double-buffered host->device
-    loader. ``centers`` overrides sampling (used by parity tests).
+    loader. ``centers`` overrides sampling (used by parity tests); ``ops``
+    overrides the backend (the instrumentation seam — a ``CountingOps``
+    under the jitted streaming facade counts XLA compiles, which is how
+    tests pin the one-compile-per-fit contract for ragged tail chunks).
     ``prefetch`` defaults to 2 chunks in flight on real accelerators and to
     synchronous transfers on CPU, where an overlap thread only contends with
     compute.
     """
     kernel, ops, centers, loader, out_dim, n = _streaming_setup(
-        key, source, config, prefetch=prefetch, centers=centers)
+        key, source, config, prefetch=prefetch, centers=centers, ops=ops)
     KMM = _stage_gram(ops, centers)
     precond = _stage_precondition(KMM, config.lam, n, config)
 
@@ -745,6 +756,7 @@ def falkon_fit_path_streaming(
     *,
     prefetch: int | None = None,
     centers: Array | None = None,
+    ops: KernelOps | None = None,
 ) -> FalkonPathResult:
     """``falkon_fit_path`` for a host-streamed ``ChunkSource``.
 
@@ -756,7 +768,7 @@ def falkon_fit_path_streaming(
     """
     lam_vals = _check_lams(lams)
     kernel, ops, centers, loader, out_dim, n = _streaming_setup(
-        key, source, config, prefetch=prefetch, centers=centers)
+        key, source, config, prefetch=prefetch, centers=centers, ops=ops)
     dt = jnp.dtype(config.dtype)
     KMM = _stage_gram(ops, centers)
     precond = _stage_precondition(KMM, jnp.asarray(lam_vals, dt), n, config)

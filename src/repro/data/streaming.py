@@ -127,6 +127,13 @@ class StreamingLoader:
     def dim(self) -> int:
         return self.source.dim
 
+    @property
+    def chunk_rows(self) -> int | None:
+        """The source's nominal chunk height (None when the source doesn't
+        declare one) — what ``streaming_sweep`` pads ragged tails up to so
+        every chunk of a fit shares ONE compiled sweep."""
+        return getattr(self.source, "chunk_rows", None)
+
     def _put(self, a):
         a = jnp.asarray(a)
         if self.dtype is not None and jnp.issubdtype(a.dtype, jnp.floating):
@@ -210,7 +217,12 @@ class JittedOps:
         self.apply = jax.jit(ops.apply)
 
 
-def streaming_sweep(ops, loader, C: Array, u: Array, *, use_targets=True):
+def _pad_rows(a: Array, rows: int) -> Array:
+    return jnp.pad(a, ((0, rows - a.shape[0]),) + ((0, 0),) * (a.ndim - 1))
+
+
+def streaming_sweep(ops, loader, C: Array, u: Array, *, use_targets=True,
+                    pad_ragged: bool = True):
     """``K(X,C)^T (K(X,C) u + v)`` accumulated over streamed chunks of X.
 
     The sweep is additive over row chunks, so the chunked sum equals the
@@ -218,11 +230,24 @@ def streaming_sweep(ops, loader, C: Array, u: Array, *, use_targets=True):
     feeds each chunk's y as the sweep's v term (the RHS pass of Alg. 1);
     ``False`` runs the pure normal-equation matvec (v = 0) — and, when the
     loader supports it, skips transferring the targets at all.
+
+    With ``pad_ragged`` (on by default, active when the loader declares
+    ``chunk_rows``), a short tail chunk is zero-padded up to ``chunk_rows``
+    and swept with a ``row_mask`` zeroing the pad rows' contribution EXACTLY
+    — so every chunk of every CG iteration shares ONE sweep shape. Without
+    this, a ragged tail misses the jit cache and costs a second XLA compile
+    per sweep form per fit; full chunks also carry the (all-ones) mask so
+    the tail shares their compiled program rather than adding a mask-less
+    sibling trace.
     """
     if use_targets or not hasattr(loader, "iter_chunks"):
         it = iter(loader)
     else:
         it = loader.iter_chunks(with_targets=False)
+    chunk_rows = getattr(loader, "chunk_rows", None) if pad_ragged else None
+    full_mask = None
+    if chunk_rows:
+        full_mask = jnp.ones((chunk_rows,), jnp.float32)
     w = None
     out_dtype = None
     for xc, yc in it:
@@ -233,7 +258,16 @@ def streaming_sweep(ops, loader, C: Array, u: Array, *, use_targets=True):
                 "pass would produce a zero (garbage) solution"
             )
         vc = yc if use_targets else None
-        wc = ops.sweep(xc, C, u, vc)
+        nc = xc.shape[0]
+        if chunk_rows and nc < chunk_rows:
+            xc = _pad_rows(xc, chunk_rows)
+            vc = None if vc is None else _pad_rows(vc, chunk_rows)
+            mask = (jnp.arange(chunk_rows) < nc).astype(jnp.float32)
+            wc = ops.sweep(xc, C, u, vc, row_mask=mask)
+        elif chunk_rows and nc == chunk_rows:
+            wc = ops.sweep(xc, C, u, vc, row_mask=full_mask)
+        else:
+            wc = ops.sweep(xc, C, u, vc)
         if out_dtype is None:
             out_dtype = wc.dtype
         # Reduced-storage chunk results (bf16 policy) accumulate in fp32
@@ -248,17 +282,27 @@ def streaming_sweep(ops, loader, C: Array, u: Array, *, use_targets=True):
     return w.astype(out_dtype)
 
 
-def streaming_apply(ops, loader, C: Array, u: Array) -> Array:
+def streaming_apply(ops, loader, C: Array, u: Array, *,
+                    pad_ragged: bool = True) -> Array:
     """``K(X,C) u`` over streamed chunks of X, concatenated in order.
 
     Predictions never read targets, so target transfer is skipped when the
-    loader supports it.
+    loader supports it. A ragged tail chunk is padded up to the loader's
+    ``chunk_rows`` (pad rows applied, then sliced off — apply is row-local,
+    so valid rows are untouched): every chunk shares one compiled apply.
     """
     if hasattr(loader, "iter_chunks"):
         it = loader.iter_chunks(with_targets=False)
     else:
         it = iter(loader)
-    outs = [ops.apply(xc, C, u) for xc, _ in it]
+    chunk_rows = getattr(loader, "chunk_rows", None) if pad_ragged else None
+    outs = []
+    for xc, _ in it:
+        nc = xc.shape[0]
+        if chunk_rows and nc < chunk_rows:
+            outs.append(ops.apply(_pad_rows(xc, chunk_rows), C, u)[:nc])
+        else:
+            outs.append(ops.apply(xc, C, u))
     if not outs:
         raise ValueError("streaming_apply: loader yielded no chunks")
     return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)

@@ -244,7 +244,8 @@ def kernel_matmul_pallas(
 # fused sweep: w = K(X, C)^T (K(X, C) u + v) in ONE pass over X
 # ---------------------------------------------------------------------------
 def _fused_sweep_kernel(x_ref, c_ref, u_ref, *rest,
-                        spec: KernelSpec, has_v: bool, compensated: bool,
+                        spec: KernelSpec, has_v: bool, has_mask: bool,
+                        compensated: bool,
                         n_valid: int, m_valid: int,
                         bm: int, bn: int, nbi: int, nbj: int):
     """One (i, j) grid step of the single-pass sweep.
@@ -252,8 +253,11 @@ def _fused_sweep_kernel(x_ref, c_ref, u_ref, *rest,
     Per step: the Gram tile K_ij is computed ONCE, staged into the row-strip
     scratch ``strip[j]``, and folded into ``t_i += K_ij u_j``. When the strip
     for row block i is complete (j == nbj-1), ``t_i`` gains ``v_i``, padded X
-    rows are masked, and the strip is swept a second time FROM VMEM for
-    ``w_j += K_ij^T t_i`` — no kernel re-evaluation, no HBM round-trip.
+    rows are masked (both the wrapper's shape padding via the in-kernel iota
+    and, with ``has_mask``, the caller's explicit row mask — streamed tail
+    chunks padded to a fixed shape), and the strip is swept a second time
+    FROM VMEM for ``w_j += K_ij^T t_i`` — no kernel re-evaluation, no HBM
+    round-trip.
 
     With ``compensated`` both reductions (t over the j tiles, w over the i
     row blocks) run through Kahan carry buffers, keeping the summation error
@@ -262,7 +266,14 @@ def _fused_sweep_kernel(x_ref, c_ref, u_ref, *rest,
     """
     if compensated:
         *rest, tc_ref, wc_ref = rest
-    if has_v:
+    mask_ref = None
+    if has_mask:
+        if has_v:
+            v_ref, mask_ref, *rest = rest
+        else:
+            mask_ref, *rest = rest
+        o_ref, cnt_ref, strip_ref, t_ref, w_ref = rest
+    elif has_v:
         v_ref, o_ref, cnt_ref, strip_ref, t_ref, w_ref = rest
     else:
         o_ref, cnt_ref, strip_ref, t_ref, w_ref = rest
@@ -303,6 +314,10 @@ def _fused_sweep_kernel(x_ref, c_ref, u_ref, *rest,
             t = t + v_ref[...].astype(jnp.float32)
         row = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
         t = t * (row < n_valid).astype(jnp.float32)            # pad rows of X
+        if has_mask:
+            # caller-supplied row mask (lane-padded; column 0 is the mask):
+            # zeroing t_i zeroes the masked rows' K^T t contribution EXACTLY
+            t = t * mask_ref[...][:, :1]
 
         def body(jj, _):
             delta = jax.lax.dot_general(                       # (bn, p) MXU
@@ -325,6 +340,7 @@ def _fused_sweep_kernel(x_ref, c_ref, u_ref, *rest,
 def fused_sweep_pallas(
     X: Array, C: Array, u: Array, v: Array | None, *,
     spec: KernelSpec,
+    row_mask: Array | None = None,
     block_m: int = 256, block_n: int = 512,
     compensated: bool = False,
     interpret: bool = True,
@@ -333,6 +349,10 @@ def fused_sweep_pallas(
     """w = K(X,C)^T (K(X,C) u + v) — one fused pass, each Gram tile once.
 
     X: (n, d), C: (M, d), u: (M, p), v: (n, p) or None -> (M, p).
+    ``row_mask`` (n,), 0/1: rows with mask 0 contribute EXACTLY zero to w
+    (their t_i is zeroed before the transposed product) — how callers sweep
+    a fixed-shape chunk whose tail rows are padding (see
+    ``repro.data.streaming``) without a shape-changing slice.
 
     VMEM residency per step: one (bm, d) X tile, one (bn, d) C tile, the
     row-strip scratch (nbj, bm, bn) and the fp32 accumulator (nbj, bn, p) —
@@ -366,6 +386,7 @@ def fused_sweep_pallas(
     up = jnp.pad(u2, ((0, Mpad - M), (0, pp - p)))
 
     has_v = v2 is not None
+    has_mask = row_mask is not None
     in_specs = [
         pl.BlockSpec((bm, dp), lambda i, j: (i, 0)),          # X_i
         pl.BlockSpec((bn, dp), lambda i, j: (j, 0)),          # C_j
@@ -376,6 +397,12 @@ def fused_sweep_pallas(
         vp = jnp.pad(v2, ((0, npad - n), (0, pp - p)))
         in_specs.append(pl.BlockSpec((bm, pp), lambda i, j: (i, 0)))  # v_i
         operands.append(vp)
+    if has_mask:
+        # (n,) -> (npad, LANE) with the mask in column 0 (lane-aligned
+        # operand; the kernel reads [:, :1])
+        mk = row_mask.astype(jnp.float32).reshape(n, 1)
+        operands.append(jnp.pad(mk, ((0, npad - n), (0, LANE - 1))))
+        in_specs.append(pl.BlockSpec((bm, LANE), lambda i, j: (i, 0)))
 
     scratch = [
         pltpu.VMEM((nbj, bm, bn), jnp.float32),   # Gram row strip
@@ -389,7 +416,7 @@ def fused_sweep_pallas(
         ]
     out, cnt = pl.pallas_call(
         functools.partial(
-            _fused_sweep_kernel, spec=spec, has_v=has_v,
+            _fused_sweep_kernel, spec=spec, has_v=has_v, has_mask=has_mask,
             compensated=compensated,
             n_valid=n, m_valid=M, bm=bm, bn=bn, nbi=nbi, nbj=nbj),
         grid=(nbi, nbj),
@@ -421,6 +448,7 @@ def fused_sweep_pallas(
 def sharded_sweep_pallas(
     X: Array, C: Array, u: Array, v: Array | None, *,
     spec: KernelSpec,
+    row_mask: Array | None = None,
     shard_m: int = 8192,
     block_m: int = 256, block_n: int = 512,
     compensated: bool = False,
@@ -465,6 +493,10 @@ def sharded_sweep_pallas(
                              block_m=block_m, block_n=block_n,
                              compensated=compensated, out_dtype=t_dtype,
                              interpret=interpret)
+    if row_mask is not None:
+        # zeroing masked rows of the HBM-spilled t zeroes their K^T t
+        # contribution EXACTLY (the transpose phase only ever reads t)
+        t = t * row_mask.astype(t.dtype)[:, None]
 
     shard = max(int(shard_m), 1)
     ws = [

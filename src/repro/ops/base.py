@@ -337,8 +337,15 @@ class KernelOps(Protocol):
     block_size: int
     precision: "str | PrecisionPolicy"
 
-    def sweep(self, X, C, u, v=None):
-        """K(X,C)^T (K(X,C) u + v); ``v=None`` means v == 0."""
+    def sweep(self, X, C, u, v=None, row_mask=None):
+        """K(X,C)^T (K(X,C) u + v); ``v=None`` means v == 0.
+
+        ``row_mask`` (n,), 0/1 (or None = all valid): rows with mask 0
+        contribute EXACTLY zero to the result. The sweep is additive over
+        rows, so this lets callers pad a ragged row chunk to a fixed shape
+        (one XLA compile per fit instead of one per distinct chunk shape —
+        see ``repro.data.streaming``) without changing the math.
+        """
         ...
 
     def apply(self, X, C, u):
@@ -449,9 +456,9 @@ class CountingOps:
     def policy(self):
         return self.ops.policy
 
-    def sweep(self, X, C, u, v=None):
+    def sweep(self, X, C, u, v=None, row_mask=None):
         self.sweeps += 1
-        return self.ops.sweep(X, C, u, v)
+        return self.ops.sweep(X, C, u, v, row_mask)
 
     def apply(self, X, C, u):
         self.applies += 1

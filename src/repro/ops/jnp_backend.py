@@ -19,13 +19,20 @@ from .base import OpsBase, SweepPlan, register_ops
 Array = jax.Array
 
 
-def _pad_blocks(X: Array, v: Array | None, block_size: int):
-    """Pad rows of X (and v) to a multiple of block_size; return mask."""
+def _pad_blocks(X: Array, v: Array | None, block_size: int,
+                row_mask: Array | None = None):
+    """Pad rows of X (and v) to a multiple of block_size; return mask.
+
+    ``row_mask`` (n,), 0/1 — a caller-supplied validity mask folded into the
+    block-padding mask, so masked rows drop out of the sweep exactly like
+    the block padding does (their Gram rows are zeroed)."""
     n = X.shape[0]
     nb = -(-n // block_size)
     pad = nb * block_size - n
     Xp = jnp.pad(X, ((0, pad), (0, 0)))
-    mask = jnp.pad(jnp.ones((n,), X.dtype), (0, pad))
+    valid = (jnp.ones((n,), X.dtype) if row_mask is None
+             else row_mask.astype(X.dtype))
+    mask = jnp.pad(valid, (0, pad))
     vp = None
     if v is not None:
         widths = ((0, pad),) + ((0, 0),) * (v.ndim - 1)
@@ -63,10 +70,14 @@ class JnpKernelOps(OpsBase):
     def _inputs(self, X: Array, C: Array) -> tuple[Array, Array]:
         return self._quant(X), self._quant(C)
 
-    def sweep(self, X: Array, C: Array, u: Array, v: Array | None = None) -> Array:
+    def sweep(self, X: Array, C: Array, u: Array, v: Array | None = None,
+              row_mask: Array | None = None) -> Array:
         """K_nM^T (K_nM u + v) with blocked O(M * block) memory.
 
         ``u``: (M,) or (M, p); ``v``: (n,) or (n, p) or None (treated as 0).
+        ``row_mask`` (n,), 0/1: rows with mask 0 contribute EXACTLY zero —
+        the contract that lets streamed tail chunks be padded to a fixed
+        shape (one XLA compile per fit) without changing the result.
         Under a non-fp32 policy the data-space v is quantized through the
         storage dtype, u through the policy's coefficient dtype (float32 by
         override — quantized coefficients destabilize preconditioned CG),
@@ -79,7 +90,7 @@ class JnpKernelOps(OpsBase):
         u, v = self._quant_coeffs(u), self._quant(v)
         block_size = self.block_size
         kernel = self.kernel
-        Xb, mask, vp, nb = _pad_blocks(X, v, block_size)
+        Xb, mask, vp, nb = _pad_blocks(X, v, block_size, row_mask)
         out_shape = (C.shape[0],) + u.shape[1:]
         if vp is not None:
             vb = vp.reshape((nb, block_size) + v.shape[1:])

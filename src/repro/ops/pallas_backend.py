@@ -105,7 +105,11 @@ class PallasKernelOps(OpsBase):
         return plan_sweep(n, M, d, p, systems=systems, bm=bm, bn=bn,
                           policy=self.policy)
 
-    def sweep(self, X: Array, C: Array, u: Array, v: Array | None = None) -> Array:
+    def sweep(self, X: Array, C: Array, u: Array, v: Array | None = None,
+              row_mask: Array | None = None) -> Array:
+        """``row_mask`` (n,), 0/1: masked rows contribute EXACTLY zero (the
+        fused kernel zeroes their t_i in VMEM; the sharded path zeroes the
+        spilled t rows) — fixed-shape padded chunks sweep correctly."""
         from repro.kernels.kernel_matvec import (fused_sweep_pallas,
                                                  sharded_sweep_pallas)
         pol = self.policy
@@ -115,6 +119,7 @@ class PallasKernelOps(OpsBase):
         plan = self.plan(X.shape[0], C.shape[0], X.shape[1], p)
         if plan.path == "fused":
             return fused_sweep_pallas(X, C, u, v, spec=self._spec,
+                                      row_mask=row_mask,
                                       block_m=self._block_m,
                                       compensated=pol.compensated,
                                       interpret=_interpret())
@@ -127,7 +132,7 @@ class PallasKernelOps(OpsBase):
             t_dt = jnp.dtype(pol.storage)
             out_dt = jnp.dtype(pol.buffer_dtype("coeffs"))
         return sharded_sweep_pallas(
-            X, C, u, v, spec=self._spec,
+            X, C, u, v, spec=self._spec, row_mask=row_mask,
             shard_m=plan.shard_m if plan.shard_m is not None else plan.M,
             block_m=self._block_m, compensated=pol.compensated,
             t_dtype=t_dt, out_dtype=out_dt,

@@ -1,0 +1,19 @@
+"""FALKON serving layer: batch-coalescing predict server.
+
+    from repro.serve import CoalescingPredictServer
+    server = CoalescingPredictServer(est, max_batch=256)
+    server.warmup()                       # one compile per bucket rung
+    preds = server.predict_many(batches)  # ragged batches, zero retraces
+
+``coalesce`` holds the pure packing policy (bucket ladder + dispatch
+planning); ``server`` executes it over ``KernelOps.apply``, including the
+multi-model tier that serves a whole ``FalkonPathResult`` through stacked
+applies. ``repro.launch.serve --falkon`` drives this from the CLI;
+``benchmarks/serve_coalesce.py`` measures it against the per-request loop.
+"""
+from .coalesce import (Dispatch, Segment, bucket_ladder, pick_bucket,
+                       plan_dispatches)
+from .server import CoalescingPredictServer, ServeStats
+
+__all__ = ["CoalescingPredictServer", "Dispatch", "Segment", "ServeStats",
+           "bucket_ladder", "pick_bucket", "plan_dispatches"]

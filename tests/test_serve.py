@@ -1,0 +1,254 @@
+"""Batch-coalescing predict server (repro.serve) + launch/serve --falkon.
+
+* Coalescing policy: bucket ladder construction, bucket selection, dispatch
+  planning (in-order packing, splitting, zero-size requests).
+* Pad/scatter parity: bucketed predictions == direct ``est.predict`` —
+  BIT-IDENTICAL in fp32 on the jnp backend (pad rows are dropped, never
+  mixed into valid rows; centers/alpha enter the jitted apply as arguments,
+  not foldable constants), tolerance-checked on the pallas backend.
+* Zero retraces: the server's trace counter (incremented at jit trace time)
+  must not move after warmup, for any ragged request mix.
+* Multi-model tier: a FalkonPathResult served through ONE stacked apply per
+  bucket matches each per-lam estimator's own predictions.
+* ``launch/serve.py --falkon`` CLI smoke (coalesced, per-request, streaming
+  fit) — previously had zero coverage.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FalkonConfig, falkon_fit, falkon_fit_path
+from repro.serve import (CoalescingPredictServer, bucket_ladder, pick_bucket,
+                         plan_dispatches)
+
+
+# ---------------------------------------------------------------------------
+# pure coalescing policy
+# ---------------------------------------------------------------------------
+def test_bucket_ladder_powers_of_two():
+    assert bucket_ladder(256) == (8, 16, 32, 64, 128, 256)
+    assert bucket_ladder(64, min_bucket=4) == (4, 8, 16, 32, 64)
+    # non-pow2 ends round UP
+    assert bucket_ladder(100, min_bucket=6) == (8, 16, 32, 64, 128)
+    assert bucket_ladder(1, min_bucket=1) == (1,)
+    # min above max: one rung covering both
+    assert bucket_ladder(4, min_bucket=32) == (32,)
+    with pytest.raises(ValueError, match="max_batch"):
+        bucket_ladder(0)
+    with pytest.raises(ValueError, match="min_bucket"):
+        bucket_ladder(8, min_bucket=0)
+
+
+def test_pick_bucket_smallest_fitting_rung():
+    ladder = bucket_ladder(64)
+    assert pick_bucket(1, ladder) == 8
+    assert pick_bucket(8, ladder) == 8
+    assert pick_bucket(9, ladder) == 16
+    assert pick_bucket(64, ladder) == 64
+    with pytest.raises(ValueError, match="exceed"):
+        pick_bucket(65, ladder)
+    with pytest.raises(ValueError, match="rows"):
+        pick_bucket(0, ladder)
+
+
+def test_plan_dispatches_packs_in_order_and_splits():
+    ladder = bucket_ladder(32)
+    plan = plan_dispatches([10, 10, 20, 70, 3], ladder)
+    # every request row lands exactly once, in order
+    seen = {}
+    for di, disp in enumerate(plan):
+        assert disp.bucket == pick_bucket(disp.rows, ladder)
+        assert disp.rows <= ladder[-1]
+        filled = 0
+        for s in disp.segments:
+            assert s.buf_offset == filled  # densely packed, no holes
+            filled += s.rows
+            seen.setdefault(s.request, []).append((di, s.req_offset, s.rows))
+        assert filled == disp.rows
+    assert set(seen) == {0, 1, 2, 3, 4}
+    for req, size in enumerate([10, 10, 20, 70, 3]):
+        covered = sorted(seen[req], key=lambda t: t[1])
+        assert sum(r for _, _, r in covered) == size
+        off = 0
+        for _, req_off, r in covered:  # contiguous, in-order coverage
+            assert req_off == off
+            off += r
+    # request 3 (70 rows > 32-row cap) was split across >= 3 dispatches
+    assert len(seen[3]) >= 3
+    # zero-size requests vanish from the plan
+    assert plan_dispatches([0, 0], ladder) == ()
+    with pytest.raises(ValueError, match="negative"):
+        plan_dispatches([-1], ladder)
+
+
+def test_plan_dispatches_fills_to_capacity():
+    ladder = bucket_ladder(64)
+    plan = plan_dispatches([40, 40, 40], ladder)
+    # greedy fill: 64, 56 — not three 40-row dispatches
+    assert [d.rows for d in plan] == [64, 56]
+    assert [d.bucket for d in plan] == [64, 64]
+    assert plan[0].pad_rows == 0 and plan[1].pad_rows == 8
+
+
+# ---------------------------------------------------------------------------
+# server over a fitted estimator
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def fitted():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    X = jax.random.normal(ks[0], (1500, 6))
+    w = jax.random.normal(ks[1], (6,))
+    y = jnp.sin(X @ w) + 0.05 * jax.random.normal(ks[2], (1500,))
+    cfg = FalkonConfig(kernel_params=(("sigma", 2.0),), lam=1e-4,
+                       num_centers=96, iterations=10, block_size=128,
+                       estimate_cond=False)
+    est, _ = falkon_fit(jax.random.PRNGKey(1), X, y, cfg)
+    return est, cfg, X, y
+
+
+def _ragged_requests(d, sizes, seed=7):
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(sizes))
+    return [np.asarray(jax.random.normal(keys[i], (int(s), d)))
+            for i, s in enumerate(sizes)]
+
+
+def test_bucketed_predictions_bit_identical_fp32(fitted):
+    """Pad/scatter parity — the acceptance criterion: every coalesced
+    prediction equals the one-shot ``est.predict`` BIT FOR BIT (fp32, jnp
+    backend), across co-packing, padding and request splitting."""
+    est, _, _, _ = fitted
+    server = CoalescingPredictServer(est, max_batch=32)
+    server.warmup()
+    reqs = _ragged_requests(6, [1, 5, 32, 31, 17, 80, 2, 9])  # 80 splits
+    outs = server.predict_many(reqs)
+    for r, o in zip(reqs, outs):
+        direct = np.asarray(est.predict(jnp.asarray(r)))
+        np.testing.assert_array_equal(o, direct)
+
+
+def test_bucketed_predictions_pallas_backend(fitted):
+    est, cfg, _, _ = fitted
+    est_p = dataclasses.replace(est, ops_impl="pallas")
+    server = CoalescingPredictServer(est_p, max_batch=16)
+    outs = server.predict_many(_ragged_requests(6, [3, 16, 11]))
+    for r, o in zip(_ragged_requests(6, [3, 16, 11]), outs):
+        direct = np.asarray(est_p.predict(jnp.asarray(r)))
+        np.testing.assert_allclose(o, direct, rtol=1e-5, atol=1e-5)
+
+
+def test_zero_retraces_after_warmup(fitted):
+    est, _, _, _ = fitted
+    server = CoalescingPredictServer(est, max_batch=64, min_bucket=8)
+    compile_s = server.warmup()
+    assert set(compile_s) == set(server.ladder) == {8, 16, 32, 64}
+    assert server.trace_count == len(server.ladder)  # one trace per rung
+    rng = np.random.default_rng(0)
+    for _ in range(3):  # several flushes of fresh ragged mixes
+        sizes = rng.integers(1, 150, size=23)  # incl. > max_batch splits
+        server.predict_many(_ragged_requests(6, sizes, seed=int(sizes[0])))
+    assert server.retraces_since_warmup() == 0
+    assert server.stats.requests == 69
+
+
+def test_lazy_warmup_and_submit_flush_roundtrip(fitted):
+    est, _, _, _ = fitted
+    server = CoalescingPredictServer(est, max_batch=16)
+    assert server.flush() == []         # nothing queued
+    t0 = server.submit(np.zeros((3, 6), np.float32))
+    t1 = server.submit(np.zeros((5, 6), np.float32))
+    assert (t0, t1) == (0, 1)
+    outs = server.flush()               # warmup ran lazily
+    assert [o.shape for o in outs] == [(3,), (5,)]
+    assert server.retraces_since_warmup() == 0
+    with pytest.raises(ValueError, match="rows"):
+        server.submit(np.zeros((3, 7), np.float32))  # wrong feature dim
+
+
+def test_zero_row_request(fitted):
+    est, _, _, _ = fitted
+    server = CoalescingPredictServer(est, max_batch=16)
+    outs = server.predict_many(
+        [np.zeros((0, 6), np.float32), np.ones((4, 6), np.float32)])
+    assert outs[0].shape == (0,)
+    assert outs[1].shape == (4,)
+
+
+def test_multioutput_estimator_parity():
+    """(M, p) coefficients -> (rows, p) predictions through the buckets."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    X = jax.random.normal(ks[0], (600, 5))
+    Y = jnp.stack([jnp.sin(X[:, 0]), jnp.cos(X[:, 1])], axis=1)
+    cfg = FalkonConfig(kernel_params=(("sigma", 1.5),), lam=1e-4,
+                       num_centers=64, iterations=8, block_size=128,
+                       estimate_cond=False)
+    est, _ = falkon_fit(ks[1], X, Y, cfg)
+    server = CoalescingPredictServer(est, max_batch=32)
+    reqs = _ragged_requests(5, [7, 40, 3])
+    outs = server.predict_many(reqs)
+    for r, o in zip(reqs, outs):
+        assert o.shape == (r.shape[0], 2)
+        np.testing.assert_array_equal(
+            o, np.asarray(est.predict(jnp.asarray(r))))
+
+
+def test_stacked_path_serving_parity(fitted):
+    """The multi-model tier: all L lam-estimators through ONE stacked apply
+    per bucket must match each estimator served alone."""
+    est, cfg, X, y = fitted
+    lams = (1e-5, 1e-4, 1e-3)
+    path = falkon_fit_path(jax.random.PRNGKey(1), X, y, cfg, lams)
+    server = CoalescingPredictServer(path, max_batch=32)
+    server.warmup()
+    reqs = _ragged_requests(6, [9, 33, 4])
+    outs = server.predict_many(reqs)
+    assert server.retraces_since_warmup() == 0
+    for r, o in zip(reqs, outs):
+        assert o.shape == (r.shape[0], len(lams))
+        for i in range(len(lams)):
+            direct = np.asarray(path.estimators[i].predict(jnp.asarray(r)))
+            np.testing.assert_allclose(o[:, i], direct,
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_estimator_ops_cached(fitted):
+    """Bugfix regression: predict must not rebuild the backend per call."""
+    est, _, _, _ = fitted
+    assert est._ops is est._ops                     # cached_property
+    assert est._jitted_ops.ops is est._ops          # stream path shares it
+    # a pytree round-trip (fresh instance) gets its own lazily-built cache
+    leaves, treedef = jax.tree_util.tree_flatten(est)
+    est2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert "_ops" not in est2.__dict__
+    np.testing.assert_array_equal(
+        np.asarray(est2.predict(jnp.zeros((2, 6)))),
+        np.asarray(est.predict(jnp.zeros((2, 6)))))
+
+
+def test_server_rejects_unknown_model():
+    with pytest.raises(TypeError, match="FalkonEstimator"):
+        CoalescingPredictServer(object())
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke: launch/serve.py --falkon modes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("extra", [
+    [],                          # coalesced (default)
+    ["--per-request"],           # single-stream baseline loop
+    ["--stream-chunk", "512"],   # out-of-core fit, coalesced serving
+])
+def test_serve_main_falkon_smoke(monkeypatch, capsys, extra):
+    from repro.launch import serve as serve_mod
+    argv = ["serve", "--falkon", "--n", "512", "--d", "5", "--centers", "48",
+            "--batch", "16", "--requests", "6"] + extra
+    monkeypatch.setattr("sys.argv", argv)
+    serve_mod.main()
+    out = capsys.readouterr().out
+    assert "falkon[jnp/fp32]: fit n=512" in out
+    if "--per-request" in extra:
+        assert "per-request:" in out and "rows/s" in out
+    else:
+        assert "coalesced:" in out and "retraces after warmup: 0" in out

@@ -25,6 +25,7 @@ from repro.core import (
 )
 from repro.data import (
     ArrayChunkSource,
+    JittedOps,
     StreamingLoader,
     streaming_apply,
     streaming_sweep,
@@ -188,3 +189,98 @@ def test_streaming_fit_rejects_leverage_selection():
     cfg = FalkonConfig(num_centers=32, center_selection="leverage")
     with pytest.raises(ValueError, match="uniform"):
         falkon_fit_streaming(jax.random.PRNGKey(0), src, cfg)
+
+
+# ---------------------------------------------------------------------------
+# ragged tail chunk: row-masked padding, one XLA compile per fit
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_sweep_row_mask_masks_rows_exactly(impl):
+    """The contract tail-padding rests on: masked rows contribute EXACTLY
+    zero — the masked padded sweep is bit-identical to sweeping the valid
+    prefix alone (with and without the v term)."""
+    X, y, u = _problem(n=200, M=32)
+    kern = GaussianKernel(sigma=2.0)
+    ops = get_ops(impl, kern, block_size=64)
+    C = jnp.asarray(X[:32])
+    uj = jnp.asarray(u[:32])
+    n_valid = 130
+    mask = (jnp.arange(200) < n_valid).astype(jnp.float32)
+    Xp = jnp.asarray(X).at[n_valid:].set(123.0)  # junk in the pad rows
+    yp = jnp.asarray(y) * mask
+    ref = ops.sweep(jnp.asarray(X[:n_valid]), C, uj, jnp.asarray(y[:n_valid]))
+    got = ops.sweep(Xp, C, uj, yp, row_mask=mask)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    ref0 = ops.sweep(jnp.asarray(X[:n_valid]), C, uj, None)
+    got0 = ops.sweep(Xp, C, uj, None, row_mask=mask)
+    np.testing.assert_array_equal(np.asarray(got0), np.asarray(ref0))
+
+
+def test_sweep_row_mask_sharded_path(monkeypatch):
+    """row_mask must survive the planner's fallback to the j-sharded sweep
+    (the spilled t rows are zeroed between the two phases)."""
+    monkeypatch.setenv("REPRO_VMEM_BUDGET_MB", "0.25")  # force off fused
+    X, y, u = _problem(n=200, M=64)
+    kern = GaussianKernel(sigma=2.0)
+    ops = get_ops("pallas", kern, block_size=64)
+    assert ops.plan(200, 64, X.shape[1]).path != "fused"
+    C = jnp.asarray(X[:64])
+    mask = (jnp.arange(200) < 150).astype(jnp.float32)
+    with pytest.warns(Warning):
+        ref = ops.sweep(jnp.asarray(X[:150]), C, jnp.asarray(u),
+                        jnp.asarray(y[:150]))
+        got = ops.sweep(jnp.asarray(X), C, jnp.asarray(u),
+                        jnp.asarray(y) * mask, row_mask=mask)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_streaming_sweep_pads_tail_to_one_shape():
+    """Padded-tail streaming equals the legacy ragged-tail sweep bit for
+    bit, and the ragged tail no longer costs a second XLA compile: over
+    many passes the jitted sweep traces ONCE per (v-present) form."""
+    from repro.ops import CountingOps
+
+    X, y, u = _problem(n=1000)
+    kern = GaussianKernel(sigma=2.0)
+    ops = get_ops("jnp", kern, block_size=128)
+    C = jnp.asarray(X[:64])
+    loader = StreamingLoader(ArrayChunkSource(X, y, chunk_rows=300),
+                             prefetch=0)
+    padded = streaming_sweep(ops, loader, C, jnp.asarray(u),
+                             use_targets=True)
+    legacy = streaming_sweep(ops, loader, C, jnp.asarray(u),
+                             use_targets=True, pad_ragged=False)
+    np.testing.assert_array_equal(np.asarray(padded), np.asarray(legacy))
+
+    # CountingOps under the jitted facade counts XLA traces, not calls
+    cnt = CountingOps(ops)
+    jops = JittedOps(cnt)
+    for _ in range(3):  # 3 passes x 4 chunks (300/300/300/100-row tail)
+        streaming_sweep(jops, loader, C, jnp.asarray(u), use_targets=False)
+    assert cnt.sweeps == 1, (
+        f"expected ONE trace for 12 ragged-tail chunk sweeps, got "
+        f"{cnt.sweeps} — the tail chunk is missing the compile cache again")
+
+
+def test_streaming_fit_compiles_sweep_once_per_form():
+    """End-to-end single-compile-per-fit: a full streaming fit with a ragged
+    tail chunk traces the sweep exactly twice — once for the RHS pass (v =
+    targets) and once for the CG matvec form (v = None) — regardless of
+    iteration or chunk count. Before the tail-padding fix this was 4 (every
+    epoch's short chunk re-missed the cache with a second shape)."""
+    from repro.ops import CountingOps
+
+    X, y, _ = _problem(n=1000, M=64)
+    cfg = FalkonConfig(
+        kernel="gaussian", kernel_params=(("sigma", 2.0),), lam=1e-3,
+        num_centers=64, iterations=12, block_size=128, estimate_cond=False)
+    cnt = CountingOps(cfg.make_ops())
+    src = ArrayChunkSource(X, y, chunk_rows=300)  # 300*3 + ragged 100
+    est, _ = falkon_fit_streaming(jax.random.PRNGKey(1), src, cfg,
+                                  centers=jnp.asarray(X[:64]), ops=cnt)
+    assert cnt.sweeps == 2, (
+        f"streaming fit traced the sweep {cnt.sweeps} times; the ragged "
+        "tail chunk must share the full chunks' compiled program")
+    # and the padded-tail fit still predicts like the in-core solve
+    pred = est.predict(jnp.asarray(X[:100]))
+    assert np.all(np.isfinite(np.asarray(pred)))
