@@ -19,6 +19,14 @@ Dispatches on the candidate's ``benchmark`` field:
   below the checked-in geomean; per record the CountingOps sweep counts
   must satisfy ``sweeps_seq == L * sweeps_path`` EXACTLY — the
   deterministic signal that the path solve still shares every data pass.
+* ``distributed_sweep`` — mesh-sharded backend gate against
+  ``BENCH_distributed.json``: per record ``psums_per_sweep`` must be 1 and
+  ``comm_floats`` must equal M*p EXACTLY (the one-(M,p)-psum-per-sweep
+  design invariant), the distributed-vs-single-device sweep parity must
+  stay under the baseline's reassociation ceiling, and the CountingOps fit
+  section must show identical sweep/gram trace counts distributed vs
+  single-device with ``psums == sweeps``. Deliberately NO wall-clock or
+  speedup gate — the CI harness simulates devices on shared cores.
 * ``serve_coalesce`` — coalescing-server gate against ``BENCH_serve.json``:
   coalesced serving must stay >= 2x the per-request baseline's rows/s on a
   ragged trace (same-run ratio; absolute floor ONLY — deliberately no
@@ -153,6 +161,65 @@ def compare_lambda_path(baseline: dict, candidate: dict,
     return failures
 
 
+def compare_distributed(baseline: dict, candidate: dict,
+                        max_pct: float) -> list[str]:
+    """Gate BENCH_distributed.json: exact comm invariants + parity ceiling.
+
+    Deliberately NO wall-clock or speedup gate: the benchmark's simulated
+    host devices share physical cores, so distributed wall clock measures
+    scheduler contention, not the backend. The machine-independent signals
+    are the comm counters (one (M, p) psum per sweep, M*p floats) and the
+    sweep/gram count parity of the distributed fit.
+    """
+    failures = []
+    ceiling = float(baseline.get("summary", {}).get("parity_ceiling", 1e-4))
+    for r in candidate.get("records", []) + candidate.get("parity", []):
+        key = (r.get("impl", "jnp"), r.get("n"), r.get("M"),
+               r.get("devices"))
+        if r["psums_per_sweep"] != 1:
+            failures.append(
+                f"{key}: {r['psums_per_sweep']} psums per sweep != 1 — the "
+                "sweep stopped being single-collective")
+        if r["comm_floats"] != r["comm_floats_expected"]:
+            failures.append(
+                f"{key}: comm_floats {r['comm_floats']} != M*p = "
+                f"{r['comm_floats_expected']} — extra data on the wire")
+        if r["parity_rel"] > ceiling:
+            failures.append(
+                f"{key}: distributed-vs-single parity {r['parity_rel']:.2e}"
+                f" > ceiling {ceiling:.0e} — beyond psum reassociation")
+    if not candidate.get("records"):
+        failures.append("candidate has no distributed_sweep records")
+
+    c = candidate.get("fit_counting")
+    if c is None:
+        failures.append("candidate has no fit_counting section")
+    else:
+        if c["sweeps_dist"] != c["sweeps_single"]:
+            failures.append(
+                f"fit traces {c['sweeps_dist']} sweeps distributed vs "
+                f"{c['sweeps_single']} single-device — hidden re-sweeps")
+        if c["grams_dist"] != c["grams_single"]:
+            failures.append(
+                f"fit traces {c['grams_dist']} grams distributed vs "
+                f"{c['grams_single']} single-device")
+        if c["psums"] != c["sweeps_dist"]:
+            failures.append(
+                f"fit psums {c['psums']} != sweeps {c['sweeps_dist']} — "
+                "a non-sweep collective appeared")
+        if c["fit_parity_rel"] > 100 * ceiling:
+            failures.append(
+                f"fit parity {c['fit_parity_rel']:.2e} > "
+                f"{100 * ceiling:.0e} (CG amplifies the sweep ceiling; "
+                "100x is the documented band)")
+    if not failures:
+        print(f"distributed invariants hold on "
+              f"{len(candidate.get('records', []))} scaling + "
+              f"{len(candidate.get('parity', []))} parity points "
+              f"(ceiling {ceiling:.0e})")
+    return failures
+
+
 def compare_precision(baseline: dict, candidate: dict,
                       max_pct: float) -> list[str]:
     """Gate BENCH_precision.json: error ceiling + (throughput | footprint)."""
@@ -270,7 +337,8 @@ def main(argv=None) -> int:
         return 1
     gate = {"precision_sweep": compare_precision,
             "lambda_path": compare_lambda_path,
-            "serve_coalesce": compare_serve}.get(kind, compare)
+            "serve_coalesce": compare_serve,
+            "distributed_sweep": compare_distributed}.get(kind, compare)
     failures = gate(baseline, candidate, args.max_regression_pct)
     if failures:
         print(f"bench-regression gate FAILED ({kind}):")

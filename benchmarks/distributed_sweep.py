@@ -1,0 +1,215 @@
+"""Multi-device data-parallel FALKON: scaling + comm-invariant benchmark.
+
+Runs the mesh-sharded ``DistributedOps`` backend over 1/2/4/8 simulated
+host devices (``--xla_force_host_platform_device_count``, set below before
+jax imports) and writes ``BENCH_distributed.json`` with three sections:
+
+1. **Scaling records** — the ``K_nM^T (K_nM u + v)`` sweep timed per device
+   count, with rows/s and the same-run ratio vs the 1-device mesh. On a CI
+   host the simulated devices SHARE physical cores, so wall-clock speedup
+   is not expected and deliberately not gated; the numbers document the
+   harness and become meaningful on real multi-chip hardware.
+
+2. **Comm invariants** (the gated signals, all machine-independent):
+   ``psums_per_sweep`` must be exactly 1 — the backend's whole design is
+   that the (M, p) partial is the ONLY collective per sweep — and
+   ``comm_floats`` must be exactly M*p. ``parity_rel`` (distributed vs
+   single-device sweep on identical inputs) must stay under the psum-
+   reassociation ceiling: fp32 summed in a different order, not an
+   approximation. Checked for jnp AND pallas inner backends.
+
+3. **Fit counting** — a ``CountingOps`` wrapped by ``DistributedOps``
+   through a full ``falkon_fit``: the distributed fit must trace exactly
+   the sweep/gram counts of the single-device fit (no hidden per-shard
+   re-sweeps), and the psum count must equal the sweep count.
+
+Gated by ``benchmarks/check_regression.py --baseline BENCH_distributed.json``
+(the ``distributed_sweep`` gate): exact invariants + the parity ceiling,
+never wall clock.
+
+    PYTHONPATH=src python -m benchmarks.distributed_sweep [--full]
+"""
+from __future__ import annotations
+
+import os
+
+# Must precede any jax import in this process: device count is fixed at
+# backend init. Respect an existing override (e.g. CI exporting 8 already).
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8"
+    ).strip()
+
+import argparse
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import FalkonConfig, GaussianKernel, falkon_fit
+from repro.ops import CountingOps, DistributedOps, get_ops
+
+from .common import emit, timed_best
+
+FAST_POINTS = [(16384, 512, 32)]
+FULL_POINTS = FAST_POINTS + [(65536, 1024, 32)]
+
+#: distributed-vs-single-device sweep parity ceiling. The only difference
+#: is fp32 summation order (per-shard partials psum'd vs one global scan),
+#: measured ~1e-7; 1e-4 leaves two orders of headroom without letting a
+#: real numeric break through.
+PARITY_CEILING = 1e-4
+
+DEVICE_COUNTS = (1, 2, 4, 8)
+
+
+def _mesh(k: int) -> Mesh:
+    return Mesh(np.asarray(jax.devices()[:k]), ("data",))
+
+
+def _scaling_point(n: int, M: int, d: int) -> list[dict]:
+    rng = np.random.default_rng(n + M + d)
+    X = jnp.asarray(rng.standard_normal((n, d), dtype=np.float32))
+    v = jnp.asarray(rng.standard_normal((n,), dtype=np.float32))
+    u = jnp.asarray(rng.standard_normal((M,), dtype=np.float32))
+    C = X[:M]
+
+    inner = get_ops("jnp", GaussianKernel(sigma=2.0), block_size=4096)
+    ref, t_single = timed_best(
+        jax.jit(lambda X, C, u, v: inner.sweep(X, C, u, v)), X, C, u, v,
+        repeat=5)
+
+    records = []
+    t_one = None
+    for k in DEVICE_COUNTS:
+        dist = DistributedOps(inner, _mesh(k), ("data",))
+        fn = jax.jit(lambda X, C, u, v: dist.sweep(X, C, u, v))
+        out, t = timed_best(fn, X, C, u, v, repeat=5)
+        if t_one is None:
+            t_one = t
+        rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+        records.append(dict(
+            n=n, M=M, d=d, devices=k,
+            backend=jax.default_backend(),
+            us_per_sweep=round(t * 1e6, 1),
+            rows_per_s=round(n / t, 1),
+            speedup_vs_1dev=round(t_one / t, 3),
+            # the gated invariants: jit traces the sweep ONCE, so the
+            # counters read exactly the per-traced-sweep comm cost
+            psums_per_sweep=dist.psums,
+            comm_floats=dist.psum_floats,
+            comm_floats_expected=M * 1,
+            parity_rel=rel,
+            n_local=-(-n // k),
+        ))
+    return records
+
+
+def _parity_point(impl: str, n: int, M: int, d: int) -> dict:
+    rng = np.random.default_rng(7)
+    X = jnp.asarray(rng.standard_normal((n, d), dtype=np.float32))
+    v = jnp.asarray(rng.standard_normal((n,), dtype=np.float32))
+    u = jnp.asarray(rng.standard_normal((M,), dtype=np.float32))
+    C = X[:M]
+    inner = get_ops(impl, GaussianKernel(sigma=2.0), block_size=1024)
+    dist = DistributedOps(inner, _mesh(8), ("data",))
+    ref = inner.sweep(X, C, u, v)
+    got = dist.sweep(X, C, u, v)
+    return dict(
+        impl=impl, n=n, M=M, d=d, devices=8,
+        parity_rel=float(jnp.linalg.norm(got - ref) / jnp.linalg.norm(ref)),
+        psums_per_sweep=dist.psums,
+        comm_floats=dist.psum_floats,
+        comm_floats_expected=M,
+        plan_local=dataclasses.asdict(dist.plan(n, M, d, 1)),
+    )
+
+
+def _fit_counting(n: int, M: int, d: int) -> dict:
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    X = jax.random.normal(k1, (n, d))
+    y = jnp.sin(X @ jax.random.normal(k2, (d,)))
+    cfg = FalkonConfig(kernel="gaussian", kernel_params=(("sigma", 2.0),),
+                       lam=1e-4, num_centers=M, iterations=10,
+                       block_size=1024)
+    count_1 = CountingOps(get_ops("jnp", cfg.make_kernel(), block_size=1024))
+    falkon_fit(jax.random.PRNGKey(1), X, y, cfg, ops=count_1)
+    count_8 = CountingOps(get_ops("jnp", cfg.make_kernel(), block_size=1024))
+    dist = DistributedOps(count_8, _mesh(8), ("data",))
+    cfg_8 = dataclasses.replace(cfg, mesh=dist.mesh)
+    est_8, _ = falkon_fit(jax.random.PRNGKey(1), X, y, cfg_8, ops=dist)
+    est_1, _ = falkon_fit(jax.random.PRNGKey(1), X, y, cfg)
+    p1, p8 = est_1.predict(X), est_8.predict(X)
+    return dict(
+        n=n, M=M, d=d, devices=8, iterations=cfg.iterations,
+        sweeps_single=count_1.sweeps, sweeps_dist=count_8.sweeps,
+        grams_single=count_1.grams, grams_dist=count_8.grams,
+        psums=dist.psums,
+        fit_parity_rel=float(jnp.linalg.norm(p8 - p1) / jnp.linalg.norm(p1)),
+    )
+
+
+def run(fast: bool = True):
+    points = FAST_POINTS if fast else FULL_POINTS
+    scaling = [r for pt in points for r in _scaling_point(*pt)]
+    parity = [_parity_point("jnp", 8192, 256, 16),
+              _parity_point("pallas", 2048, 128, 16)]
+    counting = _fit_counting(4096, 256, 8)
+
+    payload = {
+        "benchmark": "distributed_sweep",
+        "records": scaling,
+        "parity": parity,
+        "fit_counting": counting,
+        "summary": {
+            "parity_ceiling": PARITY_CEILING,
+            "devices": list(DEVICE_COUNTS),
+            "comm_model": "one (M, p) psum per sweep = M*p floats per "
+                          "CG iteration, independent of n and devices",
+        },
+    }
+    out = os.environ.get("BENCH_DISTRIBUTED_JSON", "BENCH_distributed.json")
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+
+    rows = []
+    for r in scaling:
+        rows.append(dict(
+            name=f"distributed_sweep/n{r['n']}_M{r['M']}_dev{r['devices']}",
+            us_per_call=r["us_per_sweep"],
+            rows_per_s=r["rows_per_s"],
+            speedup_vs_1dev=r["speedup_vs_1dev"],
+            psums_per_sweep=r["psums_per_sweep"],
+            comm_floats=r["comm_floats"],
+            parity_rel=f"{r['parity_rel']:.2e}",
+        ))
+    for r in parity:
+        rows.append(dict(
+            name=f"distributed_parity/{r['impl']}",
+            us_per_call="",
+            parity_rel=f"{r['parity_rel']:.2e}",
+            psums_per_sweep=r["psums_per_sweep"],
+            plan_path=r["plan_local"]["path"],
+        ))
+    c = counting
+    rows.append(dict(
+        name="distributed_fit/counting",
+        us_per_call="",
+        sweeps=f"{c['sweeps_dist']}/{c['sweeps_single']}",
+        grams=f"{c['grams_dist']}/{c['grams_single']}",
+        psums=c["psums"],
+        fit_parity_rel=f"{c['fit_parity_rel']:.2e}",
+    ))
+    emit(rows)
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    run(fast=not ap.parse_args().full)

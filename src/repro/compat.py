@@ -8,6 +8,11 @@ APIs that have migrated across versions:
 * ``use_mesh``    — ``jax.sharding.use_mesh`` -> ``jax.set_mesh`` ->
                     entering the ``Mesh`` object itself (0.4.x context
                     manager). Context manager: ``with use_mesh(mesh): ...``
+* ``shard_map``   — ``jax.shard_map`` (newer) ->
+                    ``jax.experimental.shard_map.shard_map`` (0.4.x), with
+                    the replication-check kwarg (``check_rep`` ->
+                    ``check_vma`` rename) normalized away. This is the one
+                    entry point the distributed KernelOps backend uses.
 """
 from __future__ import annotations
 
@@ -31,6 +36,28 @@ def use_mesh(mesh):
     if fn is not None:
         return fn(mesh)
     return mesh  # jax.sharding.Mesh is its own context manager on 0.4.x
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``jax.shard_map``/``jax.experimental.shard_map.shard_map`` across
+    jax versions (the module moved out of experimental after 0.4.x).
+
+    The per-shard functions this repo maps contain ``psum`` reductions whose
+    replication the static checker cannot always prove (the pre-refactor
+    wrapper already ran ``check_rep=False``), so the check is disabled under
+    whichever keyword spelling this jax uses (``check_rep`` on 0.4.x,
+    ``check_vma`` after the rename, or neither).
+    """
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn
+    for kw in ({"check_rep": False}, {"check_vma": False}, {}):
+        try:
+            return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+        except TypeError:
+            continue
+    raise TypeError("no compatible shard_map signature found")
 
 
 def cost_analysis_dict(compiled) -> dict:

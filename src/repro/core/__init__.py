@@ -15,8 +15,10 @@ Public API:
     approximate_leverage_scores_path               (shared pilot-Gram build)
     make_kernel, KernelSpec, spec_of, GaussianKernel, LaplacianKernel,
     Matern32Kernel, LinearKernel, PolynomialKernel
-    knm_matvec, knm_apply, make_distributed_matvec,
+    knm_matvec, knm_apply,
     streaming_knm_matvec, streaming_knm_apply        (KernelOps delegates)
+    (the distributed sweep is a backend now: ``repro.ops.DistributedOps``,
+    selected via ``FalkonConfig(mesh=..., data_axes=...)``)
     baselines: krr_direct, krr_gradient, nystrom_direct, nystrom_gradient
 
 Kernel compute is pluggable: the ``repro.ops`` KernelOps registry ("jnp"
@@ -33,8 +35,8 @@ from .falkon import (FalkonConfig, FalkonEstimator, FalkonPathResult,
 from .kernels import (GaussianKernel, KernelFn, KernelSpec, LaplacianKernel,
                       LinearKernel, Matern32Kernel, PolynomialKernel,
                       available_kernels, make_kernel, spec_of)
-from .matvec import (knm_apply, knm_matvec, make_distributed_matvec,
-                     streaming_knm_apply, streaming_knm_matvec)
+from .matvec import (knm_apply, knm_matvec, streaming_knm_apply,
+                     streaming_knm_matvec)
 from .nystrom import (LeveragePilot, NystromCenters,
                       approximate_leverage_scores,
                       approximate_leverage_scores_path, build_leverage_pilot,

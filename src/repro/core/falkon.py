@@ -1,9 +1,13 @@
 """FALKON solver (paper Alg. 1 / Alg. 2) — composable JAX module.
 
-Single-device path mirrors Alg. 1 line by line; the distributed path shards the
-data sweep over the mesh data axes (see matvec.py) — the preconditioner and the
+Single-device path mirrors Alg. 1 line by line; the distributed path shards
+the data sweep over the mesh data axes — the preconditioner and the
 (q,)-sized CG state are replicated (they are O(M^2)/O(M), the paper's memory
-budget).
+budget). Distribution is a *backend*, not solver logic:
+``FalkonConfig(mesh=..., data_axes=...)`` makes ``make_ops`` wrap the named
+backend in :class:`repro.ops.DistributedOps` (shard-local sweeps, one (M, p)
+psum per iteration), and every fit variant below — in-core, lam-path,
+streaming — inherits the sharding with no mesh-specific code of its own.
 
 All kernel work flows through a pluggable ``KernelOps`` backend
 (``repro.ops``): ``FalkonConfig.ops_impl`` selects it ("jnp" reference or
@@ -45,11 +49,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from repro.ops import KernelOps, available_ops, get_ops, resolve_precision
+from repro.ops import (DistributedOps, KernelOps, available_ops, get_ops,
+                       resolve_precision)
 
 from .cg import conjugate_gradient, conjugate_gradient_host
 from .kernels import KernelFn, make_kernel
-from .matvec import make_distributed_matvec
 from .nystrom import NystromCenters, select_centers
 from .preconditioner import (Preconditioner, PreconditionerPath,
                              make_preconditioner, make_preconditioner_path)
@@ -84,6 +88,10 @@ class FalkonConfig:
     tol: float = 0.0
     dtype: str = "float32"
     estimate_cond: bool = True             # power-iteration cond(W) diagnostic
+    mesh: Mesh | None = None               # data-parallel mesh (None = single
+                                           # device); make_ops wraps the
+                                           # backend in DistributedOps
+    data_axes: tuple[str, ...] = ("data",)  # mesh axes the rows shard over
 
     def __post_init__(self):
         """Fail on an unknown backend/policy/scheme at CONFIG time, naming
@@ -100,6 +108,12 @@ class FalkonConfig:
             raise ValueError(
                 f"unknown center_selection {self.center_selection!r}; "
                 f"supported: {CENTER_SELECTIONS}")
+        if self.mesh is not None:
+            missing = [a for a in self.data_axes if a not in self.mesh.shape]
+            if missing:
+                raise ValueError(
+                    f"data_axes {missing} not in mesh axes "
+                    f"{tuple(self.mesh.shape)}")
 
     @property
     def impl(self) -> str:
@@ -110,9 +124,15 @@ class FalkonConfig:
         return make_kernel(self.kernel, **dict(self.kernel_params))
 
     def make_ops(self, kernel: KernelFn | None = None) -> KernelOps:
-        return get_ops(self.impl, kernel if kernel is not None
-                       else self.make_kernel(),
-                       block_size=self.block_size, precision=self.precision)
+        """The backend every stage of a fit runs on — wrapped in
+        :class:`DistributedOps` when a ``mesh`` is configured, so sharding
+        is decided here once and inherited by every fit/predict path."""
+        ops = get_ops(self.impl, kernel if kernel is not None
+                      else self.make_kernel(),
+                      block_size=self.block_size, precision=self.precision)
+        if self.mesh is not None:
+            ops = DistributedOps(ops, self.mesh, self.data_axes)
+        return ops
 
 
 class FalkonState(NamedTuple):
@@ -246,7 +266,6 @@ def falkon_solve(
     precision: str = "fp32",
     matvec_impl: str | None = None,
     tol: float = 0.0,
-    dist_matvec: Callable | None = None,
     estimate_cond: bool = True,
     ops: KernelOps | None = None,
 ) -> FalkonState:
@@ -254,8 +273,11 @@ def falkon_solve(
 
     The per-iteration sweep runs on ``ops`` if given, else on the KernelOps
     backend named by ``ops_impl`` (``matvec_impl`` is a deprecated alias —
-    using it warns) — unless a ``dist_matvec`` (already backend-bound, see
-    ``make_distributed_matvec``) is supplied.
+    using it warns). Distribution is an ``ops`` concern: pass a
+    :class:`repro.ops.DistributedOps` (or fit via
+    ``FalkonConfig(mesh=...)``) and every sweep below shards over the mesh
+    with one (M, p) psum per call — this replaced the retired
+    ``dist_matvec``/``make_distributed_matvec`` wrapper.
     """
     n = X.shape[0]
     if ops is None:
@@ -265,16 +287,12 @@ def falkon_solve(
         impl = matvec_impl if matvec_impl is not None else ops_impl
         ops = get_ops(impl, kernel, block_size=block_size, precision=precision)
 
-    if dist_matvec is None:
-        def matvec(g):
-            return ops.sweep(X, centers, g, None)
-        def rhs_sweep():
-            zeros = jnp.zeros((centers.shape[0],) + y.shape[1:], X.dtype)
-            return ops.sweep(X, centers, zeros, y)
-    else:
-        zeros_u = jnp.zeros((centers.shape[0],) + y.shape[1:], X.dtype)
-        matvec = lambda g: dist_matvec(X, centers, g, jnp.zeros_like(y))
-        rhs_sweep = lambda: dist_matvec(X, centers, zeros_u, y)
+    def matvec(g):
+        return ops.sweep(X, centers, g, None)
+
+    def rhs_sweep():
+        zeros = jnp.zeros((centers.shape[0],) + y.shape[1:], X.dtype)
+        return ops.sweep(X, centers, zeros, y)
 
     W = _falkon_operator(matvec, precond, lam, n)
     b = precond.left(rhs_sweep() / n)             # r = B^T z / n (Alg. 1)
@@ -413,6 +431,26 @@ def _stage_precondition(
                  rank_deficient=config.rank_deficient)
 
 
+def _resolve_ops(
+    config: FalkonConfig,
+    kernel: KernelFn,
+    ops: KernelOps | None,
+) -> KernelOps:
+    """The one place every fit variant resolves its backend.
+
+    ``ops=None`` builds from the config (mesh-wrapped when configured). An
+    explicit ``ops`` — the instrumentation seam, e.g. ``CountingOps`` — is
+    wrapped in :class:`DistributedOps` when the config names a mesh and the
+    caller has not already distributed it, so counting facades compose with
+    sharding on either side.
+    """
+    if ops is None:
+        return config.make_ops(kernel)
+    if config.mesh is not None and not isinstance(ops, DistributedOps):
+        return DistributedOps(ops, config.mesh, config.data_axes)
+    return ops
+
+
 def _stage_wrap(
     centers: Array,
     alpha: Array,
@@ -437,15 +475,20 @@ def falkon_fit(
 ) -> tuple[FalkonEstimator, FalkonState]:
     """Select centers, build the preconditioner, run the solve.
 
-    With ``mesh`` given, X/y are swept shard-locally over ``data_axes`` and
-    reduced with one psum per CG iteration (see DESIGN.md §6). The K_MM Gram
-    block, every CG sweep and the returned estimator's predict path all run
-    on the backend named by ``config.ops_impl`` — or on ``ops`` when given
-    (the instrumentation seam: e.g. ``repro.ops.CountingOps``).
+    With a mesh (``config.mesh``, or the ``mesh=``/``data_axes=`` kwargs,
+    which override the config), every sweep runs shard-locally over the data
+    axes and is reduced with one (M, p) psum per CG iteration — the backend
+    is wrapped in :class:`repro.ops.DistributedOps`, so the fused/two-pass/
+    j-sharded planner and the precision policy apply per shard unchanged.
+    The K_MM Gram block, every CG sweep and the returned estimator's predict
+    path all run on the backend named by ``config.ops_impl`` — or on ``ops``
+    when given (the instrumentation seam: e.g. ``repro.ops.CountingOps``).
     """
+    if mesh is not None:
+        config = dataclasses.replace(config, mesh=mesh,
+                                     data_axes=tuple(data_axes))
     kernel = config.make_kernel()
-    if ops is None:
-        ops = config.make_ops(kernel)
+    ops = _resolve_ops(config, kernel, ops)
     dt = jnp.dtype(config.dtype)
     X = X.astype(dt)
     y = y.astype(dt)
@@ -455,16 +498,9 @@ def falkon_fit(
     KMM = _stage_gram(ops, sel.centers)
     precond = _stage_precondition(KMM, config.lam, n, config, D=sel.D)
 
-    dist = None
-    if mesh is not None:
-        dist = make_distributed_matvec(mesh, data_axes, kernel,
-                                       block_size=config.block_size,
-                                       impl=config.impl,
-                                       precision=config.precision)
-
     state = falkon_solve(
         X, y, sel.centers, precond, kernel, config.lam, config.iterations,
-        block_size=config.block_size, tol=config.tol, dist_matvec=dist,
+        block_size=config.block_size, tol=config.tol,
         estimate_cond=config.estimate_cond, ops=ops,
     )
     est = _stage_wrap(sel.centers, state.alpha, kernel, config)
@@ -538,8 +574,7 @@ def falkon_fit_path(
     """
     lam_vals = _check_lams(lams)
     kernel = config.make_kernel()
-    if ops is None:
-        ops = config.make_ops(kernel)
+    ops = _resolve_ops(config, kernel, ops)
     dt = jnp.dtype(config.dtype)
     X = X.astype(dt)
     y = y.astype(dt)
@@ -685,8 +720,7 @@ def _streaming_setup(
             f"(got {config.center_selection!r})")
 
     kernel = config.make_kernel()
-    if ops is None:
-        ops = config.make_ops(kernel)
+    ops = _resolve_ops(config, kernel, ops)
     dt = jnp.dtype(config.dtype)
     n = source.n_rows
     M = min(config.num_centers, n)

@@ -13,20 +13,17 @@ actual implementations live in the pluggable backend layer:
                                  (impl="pallas"; each Gram tile computed once)
 
 This module keeps the historical functional API (``knm_matvec``,
-``knm_apply``) as one-line delegates, and owns the distributed wrapper:
-``make_distributed_matvec`` shard_maps a backend's ``sweep`` over the mesh
-data axes — each device sweeps its local shard with whichever backend was
-selected (the distributed path gets the fused kernel for free) and
-contributions are psum-reduced. This is how the single-machine paper
-algorithm becomes a multi-pod one: the sweep is embarrassingly data-parallel
-in n, the psum is the only communication (M floats per iteration).
+``knm_apply``) as one-line delegates. The distributed sweep that used to
+live here (``make_distributed_matvec``, a seed-era one-off shard_map
+wrapper) is retired: distribution is now a composable backend —
+``repro.ops.DistributedOps`` wraps any registered ``KernelOps`` and
+shard_maps its sweep over the mesh data axes with one (M, p) psum per call,
+so fit/path/streaming/serving all inherit it through the registry instead
+of through a special matvec.
 """
 from __future__ import annotations
 
-from typing import Callable
-
 import jax
-from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.ops import PrecisionPolicy, get_ops  # noqa: F401  (annotation)
 
@@ -108,35 +105,3 @@ def streaming_knm_apply(
 
     ops = get_ops(impl, kernel, block_size=block_size, precision=precision)
     return streaming_apply(ops, loader, C, u)
-
-
-def make_distributed_matvec(
-    mesh: Mesh,
-    data_axes: tuple[str, ...],
-    kernel: KernelFn,
-    *,
-    block_size: int = 2048,
-    impl: str = "jnp",
-    precision: "str | PrecisionPolicy" = "fp32",
-) -> Callable:
-    """shard_map-wrapped ``K_nM^T (K_nM u + v)`` over the mesh data axes.
-
-    X, v are sharded over ``data_axes``; C, u replicated; output replicated
-    (psum over data axes). One call = one full data sweep = 4 * n_local * M
-    flops per device + one (M, p) psum. The local sweep runs on whichever
-    KernelOps backend ``impl`` names.
-    """
-    from jax.experimental.shard_map import shard_map
-
-    ops = get_ops(impl, kernel, block_size=block_size, precision=precision)
-
-    def local(Xl, C, u, vl):
-        return jax.lax.psum(ops.sweep(Xl, C, u, vl), data_axes)
-
-    xspec = P(data_axes)
-    return shard_map(
-        local, mesh=mesh,
-        in_specs=(xspec, P(), P(), xspec),
-        out_specs=P(),
-        check_rep=False,
-    )

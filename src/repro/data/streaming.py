@@ -26,6 +26,10 @@ Layers:
 * ``streaming_uniform_centers`` — exact uniform Nystrom sampling without
   materializing X: draw M global row indices up front, gather while
   streaming.
+* ``ShardedChunkSource`` / ``shard_chunk_sources`` — per-host row-range
+  views for the multi-device data-parallel fit: each host streams only its
+  own n/shards slice, so n is bounded by aggregate host RAM (the sweep is
+  additive over rows; shard partials psum to the full result).
 
 These are the pieces ``repro.core.falkon.falkon_fit_streaming`` composes
 into the out-of-core fit; ``repro.launch.serve --falkon --stream-chunk``
@@ -90,6 +94,59 @@ class ArrayChunkSource(ChunkSource):
             i1 = min(i0 + self.chunk_rows, self.n_rows)
             yc = None if self.y is None else self.y[i0:i1]
             yield self.X[i0:i1], yc
+
+
+class ShardedChunkSource(ChunkSource):
+    """Row-range view: shard ``index`` of ``num_shards`` over a parent source.
+
+    The per-host loader primitive of the multi-device data-parallel fit:
+    shard i streams rows ``[i * ceil(n/s), (i+1) * ceil(n/s))`` of the
+    parent, so each host's RAM holds only its own n/s slice — n is bounded
+    by *aggregate* host memory, not any single machine's. The FALKON sweep
+    is additive over rows, so the per-shard streaming sweeps sum (psum, in
+    the mesh setting) to exactly the full-source sweep; a ragged final
+    shard simply yields fewer rows and the sweep's ``row_mask`` padding
+    handles the rest (tested in tests/test_distributed.py).
+
+    Host-side and lazy: the parent's ``chunks()`` is re-walked per pass and
+    rows outside this shard's range are skipped without copying; chunks are
+    sliced at the range boundary, so this shard's chunk grid aligns with
+    the parent's (``chunk_rows`` is inherited).
+    """
+
+    def __init__(self, source: ChunkSource, index: int, num_shards: int):
+        if not 0 < num_shards:
+            raise ValueError(f"num_shards must be positive, got {num_shards}")
+        if not 0 <= index < num_shards:
+            raise ValueError(
+                f"shard index must be in [0, {num_shards}), got {index}")
+        self.source = source
+        self.index = index
+        self.num_shards = num_shards
+        rows_per = -(-source.n_rows // num_shards)
+        self.row_start = min(index * rows_per, source.n_rows)
+        self.row_stop = min(self.row_start + rows_per, source.n_rows)
+        self.n_rows = self.row_stop - self.row_start
+        self.dim = source.dim
+        self.chunk_rows = source.chunk_rows
+
+    def chunks(self) -> Iterator[tuple[np.ndarray, np.ndarray | None]]:
+        offset = 0
+        for xc, yc in self.source.chunks():
+            lo = max(self.row_start - offset, 0)
+            hi = min(self.row_stop - offset, xc.shape[0])
+            if hi > lo:
+                yield xc[lo:hi], None if yc is None else yc[lo:hi]
+            offset += xc.shape[0]
+            if offset >= self.row_stop:
+                return
+
+
+def shard_chunk_sources(source: ChunkSource,
+                        num_shards: int) -> tuple[ShardedChunkSource, ...]:
+    """All ``num_shards`` row-range views of ``source``, in shard order."""
+    return tuple(ShardedChunkSource(source, i, num_shards)
+                 for i in range(num_shards))
 
 
 class StreamingLoader:

@@ -157,9 +157,10 @@ def run_falkon_cell(multi_pod: bool, *, block_size: int = 8192,
     (MillionSongs-like), M=16384 centers, t=20 CG iterations, X/y sharded
     over the data axes, preconditioner replicated."""
     import jax.numpy as jnp
-    from repro.core import GaussianKernel, falkon_solve, make_distributed_matvec
+    from repro.core import GaussianKernel, falkon_solve
     from repro.core.preconditioner import Preconditioner
     from repro.distributed.mesh import data_axes
+    from repro.ops import DistributedOps, get_ops
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.size
@@ -173,14 +174,14 @@ def run_falkon_cell(multi_pod: bool, *, block_size: int = 8192,
         # so flatten the WHOLE mesh (incl. the idle "model" axis) into the
         # data sweep — 256/512-way instead of 16/32-way.
         dp = data_axes(mesh) + ("model",) if full_mesh_data else data_axes(mesh)
-        dmv = make_distributed_matvec(mesh, dp, kern, block_size=block_size,
-                                      impl=impl)
+        dops = DistributedOps(
+            get_ops(impl, kern, block_size=block_size), mesh, dp)
 
         def solve(X, y, C, T, A):
             pre = Preconditioner(T=T, A=A, Q=None, D=None,
                                  n=jnp.asarray(n, f32), diag_T=False)
             st = falkon_solve(X, y, C, pre, kern, 1e-6, t,
-                              block_size=block_size, dist_matvec=dmv,
+                              block_size=block_size, ops=dops,
                               estimate_cond=False)
             return st.alpha
 

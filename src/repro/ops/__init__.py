@@ -15,8 +15,9 @@ from .base import (CountingOps, KernelOps, OpsBase, POLICIES, PRECISIONS,
                    resolve_precision)
 from . import jnp_backend as _jnp_backend    # noqa: F401  (registers "jnp")
 from . import pallas_backend as _pallas_backend  # noqa: F401  ("pallas")
+from .distributed_backend import DistributedOps
 
-__all__ = ["CountingOps", "KernelOps", "OpsBase", "POLICIES", "PRECISIONS",
-           "PrecisionPolicy", "SWEEP_PATHS", "SweepPlan", "SweepPlanWarning",
-           "available_ops", "get_ops", "plan_sweep", "register_ops",
-           "resolve_precision"]
+__all__ = ["CountingOps", "DistributedOps", "KernelOps", "OpsBase",
+           "POLICIES", "PRECISIONS", "PrecisionPolicy", "SWEEP_PATHS",
+           "SweepPlan", "SweepPlanWarning", "available_ops", "get_ops",
+           "plan_sweep", "register_ops", "resolve_precision"]
