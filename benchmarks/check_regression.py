@@ -27,6 +27,15 @@ Dispatches on the candidate's ``benchmark`` field:
   section must show identical sweep/gram trace counts distributed vs
   single-device with ``psums == sweeps``. Deliberately NO wall-clock or
   speedup gate — the CI harness simulates devices on shared cores.
+* ``precond_blocked`` — blocked-preconditioner gate against
+  ``BENCH_precond.json``: per record the blocked-vs-in-core factor
+  ``parity_rel`` must stay under the baseline's ``summary.parity_ceiling``
+  (default 1e-5 — the acceptance seam), ``peak_device_bytes`` must stay
+  under the plan's O(b * M) ``device_ceiling_bytes``, and — wherever the
+  dense footprint exceeds that ceiling — under ``dense_bytes`` too (the
+  M^2 -> b * M residency claim itself). Deliberately NO wall-clock gate,
+  same rationale as ``distributed_sweep``: every gated signal is exact
+  arithmetic or a measured byte count.
 * ``serve_coalesce`` — coalescing-server gate against ``BENCH_serve.json``:
   coalesced serving must stay >= 2x the per-request baseline's rows/s on a
   ragged trace (same-run ratio; absolute floor ONLY — deliberately no
@@ -220,6 +229,44 @@ def compare_distributed(baseline: dict, candidate: dict,
     return failures
 
 
+def compare_precond(baseline: dict, candidate: dict,
+                    max_pct: float) -> list[str]:
+    """Gate BENCH_precond.json: exact parity + device-residency ceilings.
+
+    Candidate-record invariants only (a --quick CI run and the checked-in
+    full baseline cover different M's by design; the ceiling comes from the
+    baseline summary, the measurements from the candidate). No wall clock.
+    """
+    failures = []
+    ceiling = float(baseline.get("summary", {}).get("parity_ceiling", 1e-5))
+    records = candidate.get("records", [])
+    if not records:
+        return ["candidate has no precond_blocked records"]
+    for r in records:
+        key = (r.get("M"), r.get("block"))
+        if r["parity_rel"] > ceiling:
+            failures.append(
+                f"{key}: blocked-vs-in-core factor parity "
+                f"{r['parity_rel']:.2e} > ceiling {ceiling:.0e} — the "
+                "out-of-core factorization stopped matching the dense one")
+        if r["peak_device_bytes"] > r["device_ceiling_bytes"]:
+            failures.append(
+                f"{key}: peak device bytes {r['peak_device_bytes']} > "
+                f"O(b*M) ceiling {r['device_ceiling_bytes']} — the blocked "
+                "path is keeping more than its two-panel working set "
+                "device-resident")
+        if (r["dense_bytes"] > r["device_ceiling_bytes"]
+                and r["peak_device_bytes"] >= r["dense_bytes"]):
+            failures.append(
+                f"{key}: peak device bytes {r['peak_device_bytes']} >= "
+                f"dense {r['dense_bytes']} — no residency win over in-core")
+    if not failures:
+        worst = max(r["parity_rel"] for r in records)
+        print(f"precond invariants hold on {len(records)} points "
+              f"(worst parity {worst:.2e}, ceiling {ceiling:.0e})")
+    return failures
+
+
 def compare_precision(baseline: dict, candidate: dict,
                       max_pct: float) -> list[str]:
     """Gate BENCH_precision.json: error ceiling + (throughput | footprint)."""
@@ -338,7 +385,8 @@ def main(argv=None) -> int:
     gate = {"precision_sweep": compare_precision,
             "lambda_path": compare_lambda_path,
             "serve_coalesce": compare_serve,
-            "distributed_sweep": compare_distributed}.get(kind, compare)
+            "distributed_sweep": compare_distributed,
+            "precond_blocked": compare_precond}.get(kind, compare)
     failures = gate(baseline, candidate, args.max_regression_pct)
     if failures:
         print(f"bench-regression gate FAILED ({kind}):")

@@ -1,0 +1,131 @@
+"""Blocked vs in-core preconditioner factorization benchmark.
+
+For each M, factors the same host-resident SPD matrix twice — in-core
+``jnp.linalg.cholesky`` and the tiled right-looking blocked path
+(``repro.kernels.blocked_cholesky``) — and writes ``BENCH_precond.json``
+with, per point:
+
+* ``parity_rel`` — blocked-vs-in-core factor relative error (gated:
+  <= ``summary.parity_ceiling`` = 1e-5, the ISSUE 7 acceptance seam).
+* ``peak_device_bytes`` — the blocked path's self-accounted peak device
+  residency (gated: <= ``device_ceiling_bytes`` = the ``FactorPlan``'s
+  3 * 2 * block * M * itemsize O(b * M) bound, and < ``dense_bytes``
+  whenever dense exceeds the ceiling — the M^2 -> b * M claim itself).
+* wall-clock for both paths — recorded for the curious, deliberately NOT
+  gated (same rationale as ``distributed_sweep``: CI runners and
+  interpret/CPU hosts make absolute time incomparable; every gated signal
+  here is exact arithmetic or a measured byte count).
+
+``--quick`` runs M in {1024, 2048, 4096} (CI-sized, ~10 s); the full run
+(checked-in baseline) adds {16384, 32768} — the acceptance ceiling, about
+half an hour of O(M^3) on one CPU core.
+
+    PYTHONPATH=src python -m benchmarks.precond_blocked --quick
+    python benchmarks/check_regression.py \
+        --baseline BENCH_precond.json --candidate BENCH_precond.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.blocked_cholesky import FactorStats, blocked_cholesky
+from repro.ops import plan_factor
+
+from .common import emit
+
+QUICK_MS = (1024, 2048, 4096)
+FULL_MS = (4096, 16384, 32768)
+
+#: blocked-vs-in-core factor parity ceiling — the acceptance invariant.
+PARITY_CEILING = 1e-5
+
+#: fixed panel width across points so peak_device_bytes is comparable
+#: between M's (the plan would otherwise shrink the block as M grows).
+BLOCK = 512
+
+
+def _spd(M: int, seed: int = 0) -> np.ndarray:
+    """Synthetic well-conditioned SPD host matrix: low-rank + identity.
+
+    rank-64 keeps generation O(M^2 * 64) — negligible next to the O(M^3)
+    factorizations being timed — and cond ~ M/64, far from the fp32 cliff,
+    so ``parity_rel`` measures the factorization, not the conditioning.
+    """
+    rng = np.random.default_rng(seed)
+    A = rng.standard_normal((M, 64)).astype(np.float32)
+    return (A @ A.T) / 64.0 + np.eye(M, dtype=np.float32)
+
+
+def _point(M: int) -> dict:
+    plan = plan_factor(M, block=BLOCK, factor_budget=1)   # force blocked
+    assert plan.path == "blocked" and plan.block == BLOCK
+    K = _spd(M, seed=M)
+
+    t0 = time.perf_counter()
+    T_incore = np.asarray(jnp.linalg.cholesky(jnp.asarray(K)).T)
+    t_incore = time.perf_counter() - t0
+
+    stats = FactorStats()
+    t0 = time.perf_counter()
+    T_blocked = blocked_cholesky(K, plan.block, stats=stats)
+    t_blocked = time.perf_counter() - t0
+
+    num = np.linalg.norm((T_blocked - T_incore).astype(np.float64))
+    den = np.linalg.norm(T_incore.astype(np.float64))
+    parity = float(num / den)
+    autoplan = plan_factor(M)     # what the default budget would choose
+    return dict(
+        M=M,
+        block=plan.block,
+        parity_rel=parity,
+        peak_device_bytes=stats.peak_device_bytes,
+        device_ceiling_bytes=plan.device_ceiling_bytes,
+        dense_bytes=plan.dense_bytes,
+        bytes_transferred=stats.bytes_transferred,
+        panels=stats.panels,
+        default_path=autoplan.path,
+        t_incore_s=round(t_incore, 3),
+        t_blocked_s=round(t_blocked, 3),
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized points (M <= 4096)")
+    args = ap.parse_args(argv)
+    Ms = QUICK_MS if args.quick else FULL_MS
+
+    records = [_point(M) for M in Ms]
+    payload = {
+        "benchmark": "precond_blocked",
+        "records": records,
+        "summary": {
+            "parity_ceiling": PARITY_CEILING,
+            "block": BLOCK,
+            "max_parity_rel": max(r["parity_rel"] for r in records),
+            "quick": bool(args.quick),
+        },
+    }
+    out = os.environ.get("BENCH_PRECOND_JSON", "BENCH_precond.json")
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out}")
+
+    emit([dict(name=f"precond_blocked_M{r['M']}",
+               us_per_call=int(r["t_blocked_s"] * 1e6),
+               parity_rel=f"{r['parity_rel']:.2e}",
+               peak_device_mb=round(r["peak_device_bytes"] / 2**20, 2),
+               dense_mb=round(r["dense_bytes"] / 2**20, 2))
+          for r in records])
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -6,8 +6,12 @@
 
 Demonstrates the paper's headline setting (n in the 10^5-10^6 range, M ~ sqrt
 n) end to end: uniform Nystrom centers, Cholesky preconditioner, blocked CG
-sweeps — optionally sharded over a ('data','model') mesh and/or routed through
-the fused Pallas kernel (interpret mode on CPU).
+sweeps — optionally routed through the fused Pallas kernel (interpret mode
+on CPU). Data-parallelism is one config field: ``FalkonConfig(mesh=...)``
+wraps whichever backend is selected in ``repro.ops.DistributedOps``, which
+shard_maps every sweep row-wise over the mesh data axes (one (M, p) psum
+per CG iteration — see docs/architecture.md for the comm model and the
+rest of the subsystem map).
 """
 import argparse
 import time
@@ -45,19 +49,19 @@ def main():
         dims = tuple(int(x) for x in args.mesh.split("x"))
         axes = ("data", "model")[:len(dims)]
         mesh = jax.make_mesh(dims, axes)
+        data_axes = axes[:1]
         print(f"mesh: {dict(zip(axes, dims))} over {len(jax.devices())} devices")
 
     cfg = FalkonConfig(
         kernel="gaussian", kernel_params=(("sigma", 4.0),),
         lam=float(1 / n ** 0.5), num_centers=M, iterations=args.iters,
         block_size=4096, ops_impl="pallas" if args.pallas else "jnp",
-        precision=args.precision,
+        precision=args.precision, mesh=mesh, data_axes=data_axes,
     )
     print(f"n={n} d={args.d} M={M} t={args.iters} lam={cfg.lam:.2e} "
           f"impl={cfg.impl} precision={cfg.precision}")
     t0 = time.perf_counter()
-    est, state = falkon_fit(jax.random.PRNGKey(2), X, y, cfg, mesh=mesh,
-                            data_axes=data_axes if mesh else ("data",))
+    est, state = falkon_fit(jax.random.PRNGKey(2), X, y, cfg)
     jax.block_until_ready(est.alpha)
     dt = time.perf_counter() - t0
     mse = float(jnp.mean((est.predict(Xte) - yte) ** 2))

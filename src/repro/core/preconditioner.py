@@ -32,11 +32,44 @@ stage over a grid of L lams, returning a :class:`PreconditionerPath` whose
 ``A`` is a batched (L, q, q) stack and whose maps act on (q, L*p) blocks —
 L independent systems stacked along the column axis, sharing every
 O(nM)-cost data sweep upstream (see falkon.py's path solver).
+
+Factor-path routing (in-core vs blocked)
+----------------------------------------
+Every factor here is UPPER triangular by convention: ``T = chol(...).T``
+with ``K = T^T T`` (jnp's Cholesky is lower; the transpose is taken at the
+factorization, never at the solves). Both builders route each O(M^3)
+Cholesky through ``repro.ops.plan_factor`` — the ``plan_sweep`` sibling for
+the preconditioner stack:
+
+* **incore** (dense factor fits ``REPRO_FACTOR_BUDGET_MB``, default 512 MB)
+  — one ``jnp.linalg.cholesky`` on the device-resident matrix, exactly the
+  historical path, bit-for-bit.
+* **blocked** (dense factor exceeds the budget) — the tiled right-looking
+  out-of-core path (``repro.kernels.blocked_cholesky``): the matrix is
+  factored from HOST memory in (b, b) tiles with only O(b * M) panel bytes
+  device-resident, lifting the M ceiling from "dense (M, M) fits HBM" to
+  "dense (M, M) fits host RAM". A :class:`repro.ops.FactorPlanWarning`
+  (carrying the full ``FactorPlan``) announces the fallback, mirroring
+  ``SweepPlanWarning``. The finished factors still live on device for
+  solve time — the remaining O(M^2) ceiling, documented in
+  docs/architecture.md.
+
+Routing honors the ``PrecisionPolicy`` ``cholesky`` override: tiles compute
+in float32 at minimum regardless of the storage policy (bf16 factors
+destabilize preconditioned CG — measured, see repro.ops.base), float64 when
+the caller runs x64. The blocked path requires a CONCRETE K_MM (it round-
+trips host memory): under a jit trace the plan silently falls back to
+in-core, and the eig-based ``rank_deficient`` factorization refuses the
+blocked route loudly (a dense (M, M) eigendecomposition cannot be tiled by
+this scheme — see ``_shared_factor``).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -229,21 +262,95 @@ class PreconditionerPath:
 # ---------------------------------------------------------------------------
 # Factorization stages
 # ---------------------------------------------------------------------------
+def _resolve_factor_plan(KMM: Array, factor_plan, rank_deficient: bool):
+    """Resolve the caller's ``factor_plan`` argument to a ``FactorPlan``.
+
+    ``None`` auto-plans from the factor budget (``REPRO_FACTOR_BUDGET_MB``);
+    a path name ("incore"/"blocked") forces that route; a ``FactorPlan`` is
+    taken as-is. A traced K_MM always lands in-core (the blocked path
+    round-trips host memory, which a trace cannot do); a blocked plan with
+    ``rank_deficient=True`` raises (see ``_shared_factor``); a blocked plan
+    on the normal path emits ``FactorPlanWarning``.
+    """
+    # Lazy import: repro.ops.__init__ constructs backends that reach into
+    # repro.core, so a module-level import here would be a cycle.
+    from repro.ops.base import FACTOR_PATHS, FactorPlan, FactorPlanWarning, \
+        plan_factor
+
+    M = KMM.shape[0]
+    itemsize = max(jnp.dtype(KMM.dtype).itemsize, 4)
+    if isinstance(factor_plan, FactorPlan):
+        plan = factor_plan
+    elif factor_plan is None:
+        plan = plan_factor(M, itemsize=itemsize)
+    elif factor_plan in FACTOR_PATHS:
+        # Force the named path by planning against a budget the dense
+        # factor trivially fits (incore) or trivially exceeds (blocked).
+        dense = M * M * itemsize
+        plan = plan_factor(M, itemsize=itemsize,
+                           factor_budget=dense if factor_plan == "incore"
+                           else dense - 1)
+    else:
+        raise ValueError(
+            f"factor_plan must be None, a FactorPlan, or one of "
+            f"{FACTOR_PATHS}; got {factor_plan!r}")
+
+    if plan.path == "blocked":
+        if isinstance(KMM, jax.core.Tracer):
+            # Can't leave the device under a trace — quietly keep the
+            # traced program on the historical in-core path.
+            return plan_factor(M, itemsize=itemsize,
+                               factor_budget=M * M * itemsize)
+        if rank_deficient:
+            raise ValueError(
+                "rank_deficient=True is not supported on the blocked factor "
+                "path: the eig fallback needs a dense (M, M) "
+                "eigendecomposition that this tiling cannot express. Use "
+                "the in-core path (raise REPRO_FACTOR_BUDGET_MB or pass "
+                "factor_plan='incore'), or drop rank_deficient.")
+        warnings.warn(FactorPlanWarning(plan), stacklevel=3)
+    return plan
+
+
 def _shared_factor(
     KMM: Array,
     D: Array | None,
     jitter: float | None,
     rank_deficient: bool,
     rank_tol: float,
+    plan=None,
 ) -> tuple[Array, Array | None, Array, bool]:
     """Stage 1 — everything lam never touches: (T, Q, TTt, diag_T).
 
     ``TTt`` is the (q, q) Gram of the factor (``T T^T`` for the Cholesky
     path, ``diag(kept s)`` for the eig path) that every lam-ridge Cholesky
     reads; computing it here means an L-point path pays for it once.
+
+    ``plan`` (a resolved ``FactorPlan`` or None) selects the Cholesky
+    route. On the blocked path the D-scaling, the jitter and both O(M^3)
+    products (``chol`` and ``T T^T``) run against HOST-resident numpy via
+    ``repro.kernels.blocked_cholesky`` — the device never holds more than
+    O(plan.block * M) factor bytes; the in-core path is untouched (and the
+    eig-based ``rank_deficient`` branch is in-core only — the resolver
+    refuses blocked plans for it loudly).
     """
     M = KMM.shape[0]
     dt = KMM.dtype
+
+    if plan is not None and plan.path == "blocked" and not rank_deficient:
+        from repro.kernels.blocked_cholesky import blocked_cholesky, \
+            blocked_syrk_tt
+        Kh = np.array(KMM)                     # host working copy
+        if D is not None:
+            Dh = np.array(D, dtype=Kh.dtype)
+            Kh *= Dh[:, None]
+            Kh *= Dh[None, :]
+        eps = jitter if jitter is not None else float(jnp.finfo(dt).eps) * M
+        Kh.flat[:: M + 1] += np.asarray(eps, Kh.dtype)
+        Th = blocked_cholesky(Kh, plan.block)
+        TTth = blocked_syrk_tt(Th, plan.block)
+        return jnp.asarray(Th, dt), None, jnp.asarray(TTth, dt), False
+
     if D is not None:
         KMM = KMM * D[:, None] * D[None, :]
 
@@ -266,9 +373,23 @@ def _shared_factor(
     return T, None, T @ T.T, False
 
 
-def _lam_factor(TTt: Array, lam, M: int) -> Array:
+def _lam_factor(TTt: Array, lam, M: int, plan=None) -> Array:
     """Stage 2 — ``A = chol(T T^T / M + lam I)`` (upper): one cheap Cholesky
-    per regularization value; vmapped over the grid by the path builder."""
+    per regularization value; vmapped over the grid by the path builder.
+
+    "Cheap" is relative to the data sweeps, not to device memory: at the
+    same (q, q) size as T it hits the same dense-factor wall, so a blocked
+    ``plan`` routes it through the same out-of-core tiling (requires a
+    concrete TTt and lam; traced inputs stay in-core).
+    """
+    if (plan is not None and plan.path == "blocked"
+            and not isinstance(TTt, jax.core.Tracer)
+            and not isinstance(lam, jax.core.Tracer)):
+        from repro.kernels.blocked_cholesky import blocked_cholesky
+        Bh = np.array(TTt)
+        Bh /= M
+        Bh.flat[:: Bh.shape[0] + 1] += np.asarray(float(lam), Bh.dtype)
+        return jnp.asarray(blocked_cholesky(Bh, plan.block), TTt.dtype)
     eye = jnp.eye(TTt.shape[0], dtype=TTt.dtype)
     return jnp.linalg.cholesky(TTt / M + lam * eye).T
 
@@ -282,18 +403,27 @@ def make_preconditioner(
     jitter: float | None = None,
     rank_deficient: bool = False,
     rank_tol: float = 1e-7,
+    factor_plan=None,
 ) -> Preconditioner:
     """Build the FALKON preconditioner from K_MM.
 
     Cost: 2 Cholesky factorizations + one triangular product = 4/3 M^3 flops
     (paper Sect. 3 "Computations"). ``D`` is the Def. 2 diagonal for
     leverage-score sampling (None for uniform sampling).
+
+    ``factor_plan`` routes the two Cholesky factorizations: ``None``
+    auto-plans in-core vs blocked from the dense-factor budget
+    (``REPRO_FACTOR_BUDGET_MB``), ``"incore"``/``"blocked"`` force a path,
+    and a ``repro.ops.FactorPlan`` is used as-is. See the module docstring
+    ("Factor-path routing") for the contract; results are path-independent
+    to ~1e-5 relative (tested), not bit-identical.
     """
     M = KMM.shape[0]
     dt = KMM.dtype
+    plan = _resolve_factor_plan(KMM, factor_plan, rank_deficient)
     T, Q, TTt, diag_T = _shared_factor(KMM, D, jitter, rank_deficient,
-                                       rank_tol)
-    A = _lam_factor(TTt, lam, M)
+                                       rank_tol, plan=plan)
+    A = _lam_factor(TTt, lam, M, plan=plan)
     return Preconditioner(T=T, A=A, Q=Q, D=D, n=jnp.asarray(n, dt),
                           diag_T=diag_T)
 
@@ -307,6 +437,7 @@ def make_preconditioner_path(
     jitter: float | None = None,
     rank_deficient: bool = False,
     rank_tol: float = 1e-7,
+    factor_plan=None,
 ) -> PreconditionerPath:
     """One shared factorization, L cheap lam-ridge Cholesky's.
 
@@ -316,6 +447,12 @@ def make_preconditioner_path(
     ``make_preconditioner`` calls this saves L-1 Cholesky factorizations of
     K_MM itself, and against L full *fits* it is the enabler for sharing
     every O(nM) data sweep (see ``falkon_solve_path``).
+
+    ``factor_plan`` routes every factorization exactly as in
+    ``make_preconditioner``. One sizing note: a blocked path builds the L
+    lam-ridge factors SEQUENTIALLY (a host-blocked loop cannot be vmapped),
+    and the (L, q, q) stack itself is L dense factors on device — the stack,
+    not the factorization, becomes the memory bound for large L * M^2.
     """
     M = KMM.shape[0]
     dt = KMM.dtype
@@ -329,8 +466,15 @@ def make_preconditioner_path(
         # (concrete grids only; traced grids keep the builder jittable)
         raise ValueError(
             f"every lam in the path must be > 0, got {tuple(map(float, lams))}")
+    plan = _resolve_factor_plan(KMM, factor_plan, rank_deficient)
     T, Q, TTt, diag_T = _shared_factor(KMM, D, jitter, rank_deficient,
-                                       rank_tol)
-    A = jax.vmap(lambda lam: _lam_factor(TTt, lam, M))(lams)
+                                       rank_tol, plan=plan)
+    if plan.path == "blocked" and not isinstance(lams, jax.core.Tracer):
+        # The host-blocked factorization cannot run under vmap; build the
+        # (L, q, q) stack one out-of-core Cholesky at a time.
+        A = jnp.stack([_lam_factor(TTt, lam, M, plan=plan)
+                       for lam in np.asarray(lams)])
+    else:
+        A = jax.vmap(lambda lam: _lam_factor(TTt, lam, M))(lams)
     return PreconditionerPath(T=T, A=A, Q=Q, D=D, lams=lams,
                               n=jnp.asarray(n, dt), diag_T=diag_T)

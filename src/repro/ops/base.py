@@ -55,6 +55,22 @@ term is input/vector quantization, |w - w_fp64| / |w_fp64| <= c * eps_bf16
 with eps_bf16 = 2^-8 ~= 3.9e-3; compensated fp32 accumulation keeps the
 summation term at O(eps_fp32) independent of n/M, so the documented
 end-to-end ceiling is 1e-2 relative across all registered kernels.
+
+This module also hosts the two memory planners — pure static-shape
+arithmetic (no jax, safe at trace time), each emitting a structured warning
+carrying the full plan when it routes off the default path:
+
+* :func:`plan_sweep` -> :class:`SweepPlan` (+ ``SweepPlanWarning``): routes
+  a sweep fused -> two_pass -> j_sharded against the VMEM budget
+  (``REPRO_VMEM_BUDGET_MB``).
+* :func:`plan_factor` -> :class:`FactorPlan` (+ ``FactorPlanWarning``):
+  routes the preconditioner's O(M^2) Cholesky factors incore -> blocked
+  against a device-memory budget (``REPRO_FACTOR_BUDGET_MB``, default
+  512 MB). The blocked path (``repro.kernels.blocked_cholesky``, consumed
+  by ``repro.core.preconditioner``) keeps the factor host-resident and
+  bounds peak device bytes at ``FactorPlan.device_ceiling_bytes`` =
+  3 * 2 * block * M * itemsize — O(b*M), not O(M^2). ``tile_dtype`` honors
+  the PrecisionPolicy ``cholesky`` override (float32 floor; see above).
 """
 from __future__ import annotations
 
@@ -326,6 +342,137 @@ class SweepPlanWarning(UserWarning):
         super().__init__(
             f"falkon sweep (n={plan.n}, M={plan.M}, d={plan.d}, p={plan.p}): "
             f"taking the {plan.path!r} path — {plan.reason}")
+
+
+# ---------------------------------------------------------------------------
+# Factorization planning: in-core vs blocked (out-of-core) Cholesky
+# ---------------------------------------------------------------------------
+FACTOR_PATHS = ("incore", "blocked")
+
+#: Default budget for a DENSE in-core Cholesky factor. FALKON's statistical
+#: optimality wants M ~ sqrt(n) Nystrom centers, and the preconditioner's
+#: O(M^2) factors are the first thing that stops fitting as M grows: a dense
+#: fp32 factor is 1 GB at M = 16384 and 40 GB at M = 10^5. Past this budget
+#: ``plan_factor`` routes to the blocked right-looking Cholesky
+#: (``repro.kernels.blocked_cholesky``), which keeps the matrix host-resident
+#: in (b, b) tiles and holds only O(b * M) panel bytes device-resident at any
+#: moment. Override per-process with ``REPRO_FACTOR_BUDGET_MB`` (the forcing
+#: knob tests use, mirroring ``REPRO_VMEM_BUDGET_MB``).
+DEFAULT_FACTOR_BUDGET = 512 * 2**20
+
+#: Blocked-path tile bounds: lane-aligned (multiples of _LANE*2 = 256) so the
+#: Pallas tile kernels need no ragged-edge handling inside the hot loop.
+_FACTOR_BLOCK_MIN = 256
+_FACTOR_BLOCK_MAX = 2048
+
+
+def _factor_budget() -> int:
+    mb = os.environ.get("REPRO_FACTOR_BUDGET_MB")
+    return int(float(mb) * 2**20) if mb else DEFAULT_FACTOR_BUDGET
+
+
+@dataclasses.dataclass(frozen=True)
+class FactorPlan:
+    """The Cholesky-path decision for one (M, M) factorization — the
+    ``SweepPlan`` sibling for the preconditioner stack, exposed so tests and
+    benchmarks can assert on routing and on the device-residency model
+    instead of reverse-engineering them.
+
+    ``dense_bytes`` is what the in-core path keeps device-resident (the
+    factor itself, before LAPACK workspace); ``panel_bytes`` is the blocked
+    path's algorithmic working set — the current factor panel plus one
+    trailing column panel, 2 * block * M * itemsize — the O(b * M) bound the
+    acceptance tests measure against (with slack for XLA temporaries; see
+    ``device_ceiling_bytes``).
+    """
+
+    path: str                  # one of FACTOR_PATHS
+    M: int
+    block: int | None          # (b, b) tile side for the blocked path
+    itemsize: int              # bytes per element of the factor dtype
+    dense_bytes: int           # M * M * itemsize — in-core factor residency
+    panel_bytes: int           # 2 * block * M * itemsize — blocked working set
+    factor_budget_bytes: int
+    reason: str
+    tile_dtype: str = "float32"   # in-tile compute dtype (policy `cholesky`
+    #                               override: fp32 floor even under bf16
+    #                               storage — the PR 3 measured constraint)
+
+    @property
+    def device_ceiling_bytes(self) -> int:
+        """The bound the blocked path's measured peak device residency must
+        stay under: 3x the two-panel model, covering the update's output
+        buffer and transient XLA copies. Still O(b * M) — the point is that
+        it does not scale with M^2."""
+        return 3 * self.panel_bytes
+
+
+def plan_factor(
+    M: int, *,
+    itemsize: int = 4,
+    policy: "PrecisionPolicy | None" = None,
+    block: int | None = None,
+    factor_budget: int | None = None,
+) -> FactorPlan:
+    """Pick in-core vs blocked Cholesky from a dense-factor budget model.
+
+    In-core ``jnp.linalg.cholesky`` keeps the full (M, M) factor (plus the
+    jittered input and LAPACK workspace) device-resident: ``M^2 * itemsize``
+    bytes. When that exceeds the budget the factorization routes to the
+    tiled right-looking blocked path, whose device working set is two
+    (M, block) panels. ``block`` is sized so those panels fit the budget
+    (lane-aligned, clamped to [{_FACTOR_BLOCK_MIN}, {_FACTOR_BLOCK_MAX}]).
+
+    ``policy`` pins the in-tile compute dtype through the ``cholesky``
+    per-buffer override — float32 by default even under the bf16 storage
+    policy (quantized factors destabilize the preconditioned CG operator;
+    the PR 3 measured constraint). ``itemsize`` is the factor storage width
+    (4 for fp32, 8 for x64 callers). Pure arithmetic on static shapes — safe
+    at trace time, no jax imports (this module stays import-cycle-free).
+    """
+    if factor_budget is None:
+        factor_budget = _factor_budget()
+    tile_dtype = "float32"
+    if policy is not None:
+        tile_dtype = policy.buffer_dtype("cholesky")
+        itemsize = max(_ITEMSIZE[tile_dtype], 4)  # fp32 floor
+    dense = M * M * itemsize
+
+    if block is None:
+        # two (M, block) panels ~ one budget of device workspace
+        block = factor_budget // max(2 * M * itemsize, 1)
+        block = (block // _FACTOR_BLOCK_MIN) * _FACTOR_BLOCK_MIN
+        block = max(_FACTOR_BLOCK_MIN, min(_FACTOR_BLOCK_MAX, block))
+    panel = 2 * block * M * itemsize
+    base = dict(M=M, itemsize=itemsize, dense_bytes=dense, panel_bytes=panel,
+                factor_budget_bytes=factor_budget, tile_dtype=tile_dtype)
+
+    if dense <= factor_budget:
+        return FactorPlan(
+            path="incore", block=None, panel_bytes=0,
+            reason=(f"dense factor {dense}B fits the {factor_budget}B "
+                    f"factor budget — in-core cholesky"),
+            **{k: v for k, v in base.items() if k != "panel_bytes"})
+    return FactorPlan(
+        path="blocked", block=block,
+        reason=(f"dense factor {dense}B exceeds the {factor_budget}B factor "
+                f"budget — blocked right-looking cholesky over "
+                f"{-(-M // block)} panels of {block} columns "
+                f"(device working set ~{panel}B)"),
+        **base)
+
+
+class FactorPlanWarning(UserWarning):
+    """Structured notice that a preconditioner factorization left the
+    in-core path: the dense (M, M) factor exceeded the factor budget and the
+    blocked out-of-core Cholesky was chosen (host-resident tiles, O(b * M)
+    device-resident panels). Carries the full ``FactorPlan`` as ``.plan``."""
+
+    def __init__(self, plan: FactorPlan):
+        self.plan = plan
+        super().__init__(
+            f"falkon preconditioner (M={plan.M}): taking the {plan.path!r} "
+            f"factor path — {plan.reason}")
 
 
 @runtime_checkable

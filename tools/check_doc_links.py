@@ -1,0 +1,111 @@
+"""Gate: every internal markdown link in the docs resolves.
+
+Scans ``README.md`` and ``docs/**/*.md`` for inline links/images
+``[text](target)`` and checks, for every *internal* target, that
+
+* a relative file path exists on disk (resolved against the linking file),
+* a ``#fragment`` names a real heading in the target file, using GitHub's
+  slug rules (lowercase, punctuation stripped, spaces -> hyphens,
+  ``-<n>`` suffixes for duplicates).
+
+External targets (``http(s)://``, ``mailto:``) and relative paths that
+escape the repository root (GitHub web paths like the CI badge's
+``../../actions/...``) are skipped — this gate is about the docs being
+internally navigable from a checkout, nothing more. No dependencies
+beyond the stdlib; CI runs it from the lint job:
+
+    python tools/check_doc_links.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+import urllib.parse
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+#: inline links and images; ignores fenced/inline code by construction of
+#: the docs (no link syntax inside code spans there) — good enough for a
+#: lint gate, and false positives fail loudly with file:line to fix.
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$")
+_CODESPAN = re.compile(r"`[^`]*`")
+
+
+def _slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces->hyphens."""
+    text = _CODESPAN.sub(lambda m: m.group(0).strip("`"), heading.strip())
+    text = text.lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def _anchors(md_path: pathlib.Path) -> set[str]:
+    anchors: set[str] = set()
+    counts: dict[str, int] = {}
+    in_fence = False
+    for line in md_path.read_text(encoding="utf-8").splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = _HEADING.match(line)
+        if not m:
+            continue
+        base = _slug(m.group(1))
+        n = counts.get(base, 0)
+        counts[base] = n + 1
+        anchors.add(base if n == 0 else f"{base}-{n}")
+    return anchors
+
+
+def _check_file(md_path: pathlib.Path) -> list[str]:
+    errors: list[str] = []
+    text = md_path.read_text(encoding="utf-8")
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        for m in _LINK.finditer(line):
+            target = m.group(1)
+            parsed = urllib.parse.urlsplit(target)
+            if parsed.scheme or parsed.netloc:
+                continue                      # external URL
+            path_part, fragment = parsed.path, parsed.fragment
+            where = f"{md_path.relative_to(ROOT)}:{lineno}"
+            if path_part:
+                dest = (md_path.parent / urllib.parse.unquote(path_part))
+                dest = dest.resolve()
+                if not dest.is_relative_to(ROOT):
+                    continue                  # GitHub web path (e.g. badge)
+                if not dest.exists():
+                    errors.append(f"{where}: broken link -> {target}")
+                    continue
+            else:
+                dest = md_path                # same-file #fragment
+            if fragment:
+                if dest.suffix.lower() != ".md" or not dest.is_file():
+                    continue                  # fragments into non-md: skip
+                if fragment.lower() not in _anchors(dest):
+                    errors.append(
+                        f"{where}: missing anchor #{fragment} in "
+                        f"{dest.relative_to(ROOT)}")
+    return errors
+
+
+def main() -> int:
+    files = sorted((ROOT / "docs").rglob("*.md")) + [ROOT / "README.md"]
+    files = [f for f in files if f.is_file()]
+    errors: list[str] = []
+    links = 0
+    for f in files:
+        links += len(_LINK.findall(f.read_text(encoding="utf-8")))
+        errors.extend(_check_file(f))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {links} links across {len(files)} files: "
+          f"{len(errors)} broken")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
