@@ -16,6 +16,8 @@ APIs that have migrated across versions:
 """
 from __future__ import annotations
 
+import inspect
+
 import jax
 
 
@@ -51,13 +53,27 @@ def shard_map(f, *, mesh, in_specs, out_specs):
     fn = getattr(jax, "shard_map", None)
     if fn is None:
         from jax.experimental.shard_map import shard_map as fn
-    for kw in ({"check_rep": False}, {"check_vma": False}, {}):
-        try:
-            return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                      **kw)
-        except TypeError:
-            continue
-    raise TypeError("no compatible shard_map signature found")
+    kwargs = {}
+    for kw in ("check_rep", "check_vma"):
+        if _accepts_kwarg(fn, kw):
+            kwargs[kw] = False
+            break
+    # A genuine TypeError from the call (bad specs, wrong arity) propagates
+    # untouched — the kwarg was chosen by signature, not by probing.
+    return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+def _accepts_kwarg(fn, name: str) -> bool:
+    """True if ``fn``'s signature names ``name`` as an explicit keyword (a
+    bare ``**kwargs`` does NOT count — passing the wrong rename through it
+    would fail later, far from here)."""
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
+    p = params.get(name)
+    return p is not None and p.kind in (
+        inspect.Parameter.POSITIONAL_OR_KEYWORD, inspect.Parameter.KEYWORD_ONLY)
 
 
 def cost_analysis_dict(compiled) -> dict:

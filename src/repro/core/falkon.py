@@ -442,13 +442,29 @@ def _resolve_ops(
     explicit ``ops`` — the instrumentation seam, e.g. ``CountingOps`` — is
     wrapped in :class:`DistributedOps` when the config names a mesh and the
     caller has not already distributed it, so counting facades compose with
-    sharding on either side.
+    sharding on either side. "Already distributed" is decided by walking the
+    whole facade chain (``.inner`` / ``.ops`` delegation attributes), not
+    just the outermost wrapper: ``CountingOps(DistributedOps(...))`` must
+    not get a second ``shard_map`` over the same mesh axes.
     """
     if ops is None:
         return config.make_ops(kernel)
-    if config.mesh is not None and not isinstance(ops, DistributedOps):
+    if config.mesh is not None and not _wraps_distributed(ops):
         return DistributedOps(ops, config.mesh, config.data_axes)
     return ops
+
+
+def _wraps_distributed(ops: KernelOps) -> bool:
+    """True if ``ops`` is, or anywhere down its facade chain wraps, a
+    :class:`DistributedOps`."""
+    seen: set[int] = set()
+    o: object | None = ops
+    while o is not None and id(o) not in seen:
+        if isinstance(o, DistributedOps):
+            return True
+        seen.add(id(o))
+        o = getattr(o, "inner", None) or getattr(o, "ops", None)
+    return False
 
 
 def _stage_wrap(

@@ -153,7 +153,11 @@ def _potrf_kernel(a_ref, o_ref):
                        keepdims=True)                 # A[:, j] as (b, 1)
         v = acol - jnp.sum(pref * lj, axis=1, keepdims=True)
         d = jnp.sum(jnp.where(rows[:, :1] == j, v, 0.0))  # v[j]
-        d = jnp.sqrt(jnp.maximum(d, jnp.finfo(A.dtype).tiny))
+        # A non-positive pivot means the tile is not SPD (insufficient
+        # jitter); propagate NaN so the failure is as observable as the
+        # in-core jnp.linalg.cholesky path's, rather than clamping to a
+        # finite garbage factor.
+        d = jnp.sqrt(jnp.where(d > 0, d, jnp.nan))
         colv = jnp.where(rows[:, :1] == j, d,
                          jnp.where(rows[:, :1] > j, v / d, 0.0))
         return jnp.where(cols == j, colv, L)
@@ -240,19 +244,26 @@ def _pallas_trsm(L, A, *, interpret: bool):
 
 @partial(jax.jit, static_argnames=("interpret",))
 def _pallas_update(C, P, Q, *, interpret: bool):
+    # The output width b (C's columns — ragged on the last block) and the
+    # contraction width k (P/Q's columns — the FACTOR panel width) are
+    # independent: in the trailing update of a ragged final block, k can
+    # exceed b. Pad each to its own lane-aligned size or the contraction
+    # silently truncates to the first bp columns.
     r, b = C.shape
+    k = P.shape[1]
     bp = _round_up(b, LANE)
+    kp = _round_up(k, LANE)
     bt = min(_round_up(r, SUBLANE), 1024)
     rp = _round_up(r, bt)
     Cp = jnp.pad(C, ((0, rp - r), (0, bp - b)))
-    Pp = jnp.pad(P, ((0, rp - r), (0, bp - b)))
-    Qp = jnp.pad(Q, ((0, bp - Q.shape[0]), (0, bp - b)))
+    Pp = jnp.pad(P, ((0, rp - r), (0, kp - k)))
+    Qp = jnp.pad(Q, ((0, bp - Q.shape[0]), (0, kp - k)))
     O = pl.pallas_call(
         _update_kernel,
         grid=(rp // bt,),
         in_specs=[pl.BlockSpec((bt, bp), lambda i: (i, 0)),
-                  pl.BlockSpec((bt, bp), lambda i: (i, 0)),
-                  pl.BlockSpec((bp, bp), lambda i: (0, 0))],
+                  pl.BlockSpec((bt, kp), lambda i: (i, 0)),
+                  pl.BlockSpec((bp, kp), lambda i: (0, 0))],
         out_specs=pl.BlockSpec((bt, bp), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rp, bp), C.dtype),
         interpret=interpret,

@@ -113,6 +113,33 @@ def test_blocked_cholesky_pallas_tile_engine_parity():
     assert _rel(Tp, np.linalg.cholesky(K.astype(np.float64)).T) < 1e-5
 
 
+@pytest.mark.parametrize("M,block", [(300, 256), (500, 192), (260, 256)])
+def test_blocked_cholesky_pallas_wide_block_ragged_parity(M, block):
+    """Regression: with block > LANE(=128) and M % block != 0, the trailing
+    update's factor panels are WIDER than the ragged output tile. The update
+    kernel must pad/tile the contraction dimension to the panel width, not
+    the output width — getting it wrong silently truncates the contraction
+    and corrupts the factor only on the default TPU (pallas) path."""
+    K = _spd(M, seed=M + block)
+    Tp = blocked_cholesky(K, block, tile_impl="pallas")
+    Tj = blocked_cholesky(K, block, tile_impl="jnp")
+    assert _rel(Tp, Tj) < 1e-5
+    assert _rel(Tp, np.linalg.cholesky(K.astype(np.float64)).T) < 1e-5
+
+
+def test_blocked_cholesky_pallas_indefinite_yields_nan():
+    """An indefinite (under-jittered) input must fail OBSERVABLY on the
+    pallas engine — NaNs in the factor, same as the in-core/jnp path —
+    not clamp the bad pivot and emit a finite garbage factor."""
+    M = 96
+    K = _spd(M, seed=11)
+    K[M // 2, M // 2] = -100.0  # force a negative pivot mid-factorization
+    Tp = blocked_cholesky(K, 32, tile_impl="pallas")
+    assert np.isnan(Tp).any(), "indefinite input produced a finite factor"
+    Tj = blocked_cholesky(K, 32, tile_impl="jnp")
+    assert np.isnan(Tj).any(), "jnp engine should also surface NaNs"
+
+
 def test_resolve_tile_impl():
     assert resolve_tile_impl("jnp") == "jnp"
     assert resolve_tile_impl("pallas") == "pallas"

@@ -144,6 +144,35 @@ def test_counting_ops_under_shard_map():
     """)
 
 
+def test_counting_outside_distributed_not_double_wrapped():
+    """The other composition order the _resolve_ops docstring promises:
+    CountingOps(DistributedOps(inner)) with config.mesh set must pass
+    through unwrapped — a second DistributedOps would nest shard_map over
+    the same mesh axes (trace failure / double reduction)."""
+    _run("""
+        import dataclasses, jax, jax.numpy as jnp, numpy as np
+        from repro.core import FalkonConfig, falkon_fit
+        from repro.core.falkon import _resolve_ops
+        from repro.ops import CountingOps, DistributedOps, get_ops
+        mesh = jax.make_mesh((8,), ("data",))
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        X = jax.random.normal(k1, (512, 5))
+        y = jnp.sin(X @ jax.random.normal(k2, (5,)))
+        cfg = FalkonConfig(kernel="gaussian", kernel_params=(("sigma", 2.0),),
+                           lam=1e-4, num_centers=64, iterations=10,
+                           block_size=64, mesh=mesh)
+        inner = get_ops("jnp", cfg.make_kernel(), block_size=64)
+        counted = CountingOps(DistributedOps(inner, mesh, ("data",)))
+        resolved = _resolve_ops(cfg, cfg.make_kernel(), counted)
+        assert resolved is counted, type(resolved)  # no second wrap
+        est_c, _ = falkon_fit(jax.random.PRNGKey(1), X, y, cfg, ops=counted)
+        assert counted.sweeps > 0
+        est_p, _ = falkon_fit(jax.random.PRNGKey(1), X, y, cfg)
+        assert bool(jnp.all(est_c.alpha == est_p.alpha))
+        print("OK sweeps", counted.sweeps)
+    """)
+
+
 def test_ragged_shard_mask_pad_parity():
     """n not divisible by the data axis: the padded final shard contributes
     exactly zero. At the same padded length, junk rows + row_mask is
