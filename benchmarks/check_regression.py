@@ -36,6 +36,19 @@ Dispatches on the candidate's ``benchmark`` field:
   M^2 -> b * M residency claim itself). Deliberately NO wall-clock gate,
   same rationale as ``distributed_sweep``: every gated signal is exact
   arithmetic or a measured byte count.
+* ``minibatch_fit`` — delayed-projection gate against
+  ``BENCH_minibatch.json``: per record the minibatch-vs-full-CG val MSE
+  ratio must stay under the baseline ceiling (default 1.15), the
+  sweep-equivalents ratio under the budget (default 0.5 — quality parity at
+  at most HALF the exact fit's data movement), and the CountingOps sweep
+  count must equal ``power_iters + steps`` EXACTLY (one chunk-sized sweep
+  per stochastic step). All machine-neutral; no wall clock.
+* ``streaming_sweep`` — host-streaming gate against ``BENCH_streaming.json``
+  (runs on the nightly full leg): per record the stream-vs-incore
+  throughput ratio must stay within ``--max-regression-pct`` of the
+  baseline (both sides measured in the same run, machine-neutral), the
+  streamed device working set must stay strictly below the in-core one,
+  and ``num_chunks`` must match the baseline exactly.
 * ``serve_coalesce`` — coalescing-server gate against ``BENCH_serve.json``:
   coalesced serving must stay >= 2x the per-request baseline's rows/s on a
   ragged trace (same-run ratio; absolute floor ONLY — deliberately no
@@ -67,13 +80,22 @@ Override knobs (documented for CI):
 * env ``BENCH_SKIP_REGRESSION=1`` — skip the gate entirely (exit 0); for
   emergencies, the PR description should say why.
 
+CI runs ONE invocation per job: ``--all`` globs every ``BENCH_*.json``
+under ``--candidate-dir`` (the benchmark steps' artifact directory), gates
+each against the checked-in baseline of the same filename, prints a
+per-gate pass/fail markdown table (appended to ``$GITHUB_STEP_SUMMARY``
+when set) and fails if any gate is red. Single pairs still work:
+
     PYTHONPATH=src python -m benchmarks.sweep_fusion --quick  # new run
     python benchmarks/check_regression.py \
         --baseline BENCH_sweep.json --candidate BENCH_sweep.json
+    python benchmarks/check_regression.py --all \
+        --candidate-dir bench-artifacts                       # the CI step
 """
 from __future__ import annotations
 
 import argparse
+import glob
 import json
 import os
 import sys
@@ -103,8 +125,7 @@ PATH_SPEEDUP_FLOOR = 2.0
 SERVE_SPEEDUP_FLOOR = 2.0
 
 
-def compare_serve(baseline: dict, candidate: dict,
-                  max_pct: float) -> list[str]:
+def compare_serve(baseline: dict, candidate: dict, max_pct: float) -> list[str]:
     """Gate BENCH_serve.json: zero retraces + the 2x throughput floor."""
     failures = []
     for r in candidate.get("records", []):
@@ -115,8 +136,7 @@ def compare_serve(baseline: dict, candidate: dict,
                 "warmup — the bucket ladder stopped covering the ragged "
                 "trace with warmup-compiled shapes")
 
-    speedups = [r["speedup_vs_per_request"]
-                for r in candidate.get("records", [])]
+    speedups = [r["speedup_vs_per_request"] for r in candidate.get("records", [])]
     if not speedups:
         return failures + ["candidate has no serve_coalesce records"]
     got = _geomean(speedups)
@@ -135,8 +155,7 @@ def compare_serve(baseline: dict, candidate: dict,
     return failures
 
 
-def compare_lambda_path(baseline: dict, candidate: dict,
-                        max_pct: float) -> list[str]:
+def compare_lambda_path(baseline: dict, candidate: dict, max_pct: float) -> list[str]:
     """Gate BENCH_path.json: exact sweep sharing + the 2x throughput floor."""
     failures = []
     for r in candidate.get("records", []):
@@ -147,8 +166,7 @@ def compare_lambda_path(baseline: dict, candidate: dict,
                 f"sweeps_path {r['sweeps_path']} — the path solve stopped "
                 "sharing the data sweep")
 
-    speedups = [r["speedup_vs_sequential"]
-                for r in candidate.get("records", [])]
+    speedups = [r["speedup_vs_sequential"] for r in candidate.get("records", [])]
     if not speedups:
         return failures + ["candidate has no lambda_path records"]
     got = _geomean(speedups)
@@ -170,8 +188,7 @@ def compare_lambda_path(baseline: dict, candidate: dict,
     return failures
 
 
-def compare_distributed(baseline: dict, candidate: dict,
-                        max_pct: float) -> list[str]:
+def compare_distributed(baseline: dict, candidate: dict, max_pct: float) -> list[str]:
     """Gate BENCH_distributed.json: exact comm invariants + parity ceiling.
 
     Deliberately NO wall-clock or speedup gate: the benchmark's simulated
@@ -183,8 +200,7 @@ def compare_distributed(baseline: dict, candidate: dict,
     failures = []
     ceiling = float(baseline.get("summary", {}).get("parity_ceiling", 1e-4))
     for r in candidate.get("records", []) + candidate.get("parity", []):
-        key = (r.get("impl", "jnp"), r.get("n"), r.get("M"),
-               r.get("devices"))
+        key = (r.get("impl", "jnp"), r.get("n"), r.get("M"), r.get("devices"))
         if r["psums_per_sweep"] != 1:
             failures.append(
                 f"{key}: {r['psums_per_sweep']} psums per sweep != 1 — the "
@@ -229,8 +245,7 @@ def compare_distributed(baseline: dict, candidate: dict,
     return failures
 
 
-def compare_precond(baseline: dict, candidate: dict,
-                    max_pct: float) -> list[str]:
+def compare_precond(baseline: dict, candidate: dict, max_pct: float) -> list[str]:
     """Gate BENCH_precond.json: exact parity + device-residency ceilings.
 
     Candidate-record invariants only (a --quick CI run and the checked-in
@@ -267,8 +282,7 @@ def compare_precond(baseline: dict, candidate: dict,
     return failures
 
 
-def compare_precision(baseline: dict, candidate: dict,
-                      max_pct: float) -> list[str]:
+def compare_precision(baseline: dict, candidate: dict, max_pct: float) -> list[str]:
     """Gate BENCH_precision.json: error ceiling + (throughput | footprint)."""
     failures = []
     cs = candidate.get("summary", {})
@@ -302,15 +316,105 @@ def compare_precision(baseline: dict, candidate: dict,
     # regression of the policy's win.
     scale = 1.0 - max_pct / 100.0
     regressed = []
-    for key, got in (("speedup_geomean", speed),
-                     ("hbm_headroom_geomean", head)):
+    for key, got in (("speedup_geomean", speed), ("hbm_headroom_geomean", head)):
         base = bs.get(key)
         if base is not None and got < float(base) * scale:
             regressed.append(
-                f"{key} {got:.3f} < baseline {float(base):.3f} - "
-                f"{max_pct:.0f}%")
+                f"{key} {got:.3f} < baseline {float(base):.3f} - " f"{max_pct:.0f}%"
+            )
     if len(regressed) == 2:
         failures.extend(regressed)
+    return failures
+
+
+def compare_minibatch(baseline: dict, candidate: dict, max_pct: float) -> list[str]:
+    """Gate BENCH_minibatch.json: quality parity at half the data movement.
+
+    Three candidate-record invariants, all machine-neutral (same-run MSE
+    ratio, deterministic row counts, exact sweep counts — no wall clock):
+    ``mse_ratio`` under the baseline's ceiling (the stochastic solver still
+    reaches full-CG quality), ``equiv_ratio`` under the baseline's budget
+    (and it still gets there in at most half the full fit's data passes),
+    and ``counted_sweeps == expected_sweeps`` EXACTLY (one chunk-sized
+    sweep per stochastic step plus the pilot's power iterations — the
+    CountingOps-pinned cost model).
+    """
+    failures = []
+    bs = baseline.get("summary", {})
+    ceiling = float(bs.get("mse_ratio_ceiling", 1.15))
+    budget = float(bs.get("equiv_budget", 0.5))
+    records = candidate.get("records", [])
+    if not records:
+        return ["candidate has no minibatch_fit records"]
+    for r in records:
+        key = (r.get("n"), r.get("M"), r.get("chunk_rows"))
+        if r["mse_ratio"] > ceiling:
+            failures.append(
+                f"{key}: minibatch-vs-full-CG mse ratio {r['mse_ratio']:.3f}"
+                f" > ceiling {ceiling} — the delayed-projection solve "
+                "stopped reaching exact-solve quality")
+        if r["equiv_ratio"] > budget:
+            failures.append(
+                f"{key}: sweep-equivalents ratio {r['equiv_ratio']:.3f} > "
+                f"budget {budget} — quality now costs more than half the "
+                "full fit's data movement")
+        if r["counted_sweeps"] != r["expected_sweeps"]:
+            failures.append(
+                f"{key}: counted sweeps {r['counted_sweeps']} != expected "
+                f"{r['expected_sweeps']} — a stochastic step stopped "
+                "costing exactly one chunk-sized sweep")
+    if not failures:
+        worst = max(r["mse_ratio"] for r in records)
+        print(f"minibatch invariants hold on {len(records)} points "
+              f"(worst mse ratio {worst:.3f}, ceiling {ceiling}; "
+              f"budget {budget})")
+    return failures
+
+
+def compare_streaming(baseline: dict, candidate: dict, max_pct: float) -> list[str]:
+    """Gate for ``streaming_sweep.py`` payloads.
+
+    Machine-neutral invariants: the streamed sweep must stay within
+    ``max_pct`` of the baseline's stream-vs-incore throughput ratio (both
+    sides of the ratio are measured on the same machine), keep its device
+    working set strictly below the in-core one, and walk the exact same
+    chunk count.
+    """
+    key = ("n", "M", "chunk_rows", "prefetch")
+    base = {tuple(r[k] for k in key): r for r in baseline["records"]}
+    cand = {tuple(r[k] for k in key): r for r in candidate["records"]}
+    failures = []
+    ratios = []
+    for k, b in base.items():
+        c = cand.get(k)
+        if c is None:
+            failures.append(f"{k}: baseline point missing from candidate")
+            continue
+        floor = b["stream_vs_incore_ratio"] * (1.0 - max_pct / 100.0)
+        ratios.append((k, c["stream_vs_incore_ratio"], floor))
+        if c["stream_vs_incore_ratio"] < floor:
+            failures.append(
+                f"{k}: stream/incore throughput ratio "
+                f"{c['stream_vs_incore_ratio']:.3f} < floor {floor:.3f}"
+            )
+        if c["device_workingset_bytes_stream"] >= c["device_workingset_bytes_incore"]:
+            failures.append(
+                f"{k}: streaming working set "
+                f"{c['device_workingset_bytes_stream']} is not below in-core "
+                f"{c['device_workingset_bytes_incore']}"
+            )
+        if c["num_chunks"] != b["num_chunks"]:
+            failures.append(
+                f"{k}: num_chunks {c['num_chunks']} != baseline {b['num_chunks']}"
+            )
+    if not ratios and not failures:
+        failures.append("no baseline points matched the candidate run")
+    if not failures:
+        worst = min(r for _, r, _ in ratios)
+        print(
+            f"streaming invariants hold on {len(ratios)} points "
+            f"(worst stream/incore ratio {worst:.3f})"
+        )
     return failures
 
 
@@ -350,15 +454,119 @@ def compare(baseline: dict, candidate: dict, max_pct: float) -> list[str]:
     return failures
 
 
+GATES = {
+    "precision_sweep": compare_precision,
+    "lambda_path": compare_lambda_path,
+    "serve_coalesce": compare_serve,
+    "distributed_sweep": compare_distributed,
+    "precond_blocked": compare_precond,
+    "minibatch_fit": compare_minibatch,
+    "streaming_sweep": compare_streaming,
+}
+
+
+def run_pair(
+    baseline_path: str, candidate_path: str, max_pct: float
+) -> tuple[str, list[str]]:
+    """Run one gate; returns (benchmark kind, failure lines)."""
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    with open(candidate_path) as f:
+        candidate = json.load(f)
+    kind = candidate.get("benchmark", "sweep_fusion")
+    if baseline.get("benchmark", kind) != kind:
+        return kind, [
+            f"baseline benchmark {baseline.get('benchmark')!r} != "
+            f"candidate {kind!r}"
+        ]
+    gate = GATES.get(kind, compare)
+    return kind, gate(baseline, candidate, max_pct)
+
+
+def _step_summary(rows: list[tuple[str, str, str, str]]) -> None:
+    """Append the per-gate markdown table to ``$GITHUB_STEP_SUMMARY``
+    (printed to stdout too, so local runs see the same table)."""
+    lines = [
+        "## Bench-regression gates",
+        "",
+        "| gate | benchmark | result | detail |",
+        "|---|---|---|---|",
+    ]
+    lines += [f"| {f} | {k} | {res} | {det} |" for f, k, res, det in rows]
+    table = "\n".join(lines)
+    print(table)
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if path:
+        with open(path, "a") as f:
+            f.write(table + "\n")
+
+
+def run_all(candidate_dir: str, baseline_dir: str, max_pct: float) -> int:
+    """Discover and gate every ``BENCH_*.json`` pair — the ONE CI step.
+
+    Candidates are whatever the benchmark steps dropped in
+    ``candidate_dir``; each is gated against the checked-in baseline of the
+    same filename in ``baseline_dir``. A baseline with no candidate is
+    reported (surfacing a benchmark that silently stopped running) but not
+    failed — jobs deliberately run subsets (the distributed benchmark lives
+    in its own job). Emits the per-gate pass/fail markdown table to
+    ``$GITHUB_STEP_SUMMARY`` and returns nonzero if any gate failed.
+    """
+    names = sorted(os.path.basename(p) for p in
+                   glob.glob(os.path.join(candidate_dir, "BENCH_*.json")))
+    if not names:
+        print(f"no BENCH_*.json candidates under {candidate_dir}")
+        return 1
+    rows, bad = [], 0
+    for name in names:
+        baseline_path = os.path.join(baseline_dir, name)
+        candidate_path = os.path.join(candidate_dir, name)
+        if not os.path.exists(baseline_path):
+            rows.append((name, "?", "❌ fail", "no checked-in baseline of this name"))
+            bad += 1
+            continue
+        print(f"--- {name}")
+        kind, failures = run_pair(baseline_path, candidate_path, max_pct)
+        if failures:
+            for line in failures:
+                print(f"  {line}")
+            rows.append(
+                (name, kind, "❌ fail", f"{len(failures)} failure(s): {failures[0]}")
+            )
+            bad += 1
+        else:
+            rows.append((name, kind, "✅ pass", ""))
+    for name in sorted(os.path.basename(p) for p in
+                       glob.glob(os.path.join(baseline_dir,
+                                              "BENCH_*.json"))):
+        if name not in names:
+            rows.append((name, "?", "⬜ no candidate",
+                         "baseline present but this job ran no candidate"))
+    _step_summary(rows)
+    if bad:
+        print(f"bench-regression gate FAILED: {bad}/{len(names)} gates red "
+              "(override: --max-regression-pct / BENCH_MAX_REGRESSION_PCT, "
+              "or BENCH_SKIP_REGRESSION=1 with a justification in the PR)")
+        return 1
+    print(f"bench-regression gate passed: {len(names)} gates green")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_sweep.json")
     ap.add_argument(
         "--candidate",
-        required=True,
-        help="json written by a fresh sweep_fusion run "
+        help="json written by a fresh benchmark run "
         "(BENCH_SWEEP_JSON=... python -m benchmarks.sweep_fusion --quick)",
     )
+    ap.add_argument(
+        "--all", action="store_true",
+        help="gate every BENCH_*.json under --candidate-dir against the "
+        "checked-in baseline of the same name; one markdown summary table",
+    )
+    ap.add_argument("--candidate-dir", default="bench-artifacts")
+    ap.add_argument("--baseline-dir", default=".")
     ap.add_argument(
         "--max-regression-pct",
         type=float,
@@ -370,24 +578,12 @@ def main(argv=None) -> int:
         print("BENCH_SKIP_REGRESSION=1 — bench-regression gate skipped")
         return 0
 
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-    with open(args.candidate) as f:
-        candidate = json.load(f)
+    if args.all:
+        return run_all(args.candidate_dir, args.baseline_dir, args.max_regression_pct)
+    if not args.candidate:
+        ap.error("--candidate is required (or use --all)")
 
-    kind = candidate.get("benchmark", "sweep_fusion")
-    if baseline.get("benchmark", kind) != kind:
-        print(
-            f"bench-regression gate FAILED: baseline benchmark "
-            f"{baseline.get('benchmark')!r} != candidate {kind!r}"
-        )
-        return 1
-    gate = {"precision_sweep": compare_precision,
-            "lambda_path": compare_lambda_path,
-            "serve_coalesce": compare_serve,
-            "distributed_sweep": compare_distributed,
-            "precond_blocked": compare_precond}.get(kind, compare)
-    failures = gate(baseline, candidate, args.max_regression_pct)
+    kind, failures = run_pair(args.baseline, args.candidate, args.max_regression_pct)
     if failures:
         print(f"bench-regression gate FAILED ({kind}):")
         for line in failures:
@@ -398,8 +594,7 @@ def main(argv=None) -> int:
         )
         return 1
     print(
-        f"bench-regression gate passed ({kind}): "
-        f"{len(baseline['records'])} baseline points within "
+        f"bench-regression gate passed ({kind}) within "
         f"{args.max_regression_pct:.0f}% tolerance"
     )
     return 0

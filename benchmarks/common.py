@@ -1,6 +1,11 @@
 """Shared benchmark utilities."""
+
 from __future__ import annotations
 
+import json
+import math
+import os
+import sys
 import time
 
 import jax
@@ -66,6 +71,57 @@ def auc(scores, labels) -> float:
     if n_pos == 0 or n_neg == 0:
         return 0.5
     return float((ranks[y].sum() - n_pos * (n_pos + 1) / 2) / (n_pos * n_neg))
+
+
+def _non_finite_paths(node, path=""):
+    """Yield json-paths of every NaN/inf number in a payload tree."""
+    if isinstance(node, dict):
+        for k, v in node.items():
+            yield from _non_finite_paths(v, f"{path}.{k}" if path else str(k))
+    elif isinstance(node, (list, tuple)):
+        for i, v in enumerate(node):
+            yield from _non_finite_paths(v, f"{path}[{i}]")
+    elif isinstance(node, float) and not math.isfinite(node):
+        yield f"{path}={node}"
+
+
+def check_payload(payload: dict) -> list[str]:
+    """Problems that make a BENCH_*.json worthless to gate (empty == good).
+
+    Two failure classes the regression gates cannot be trusted to catch on
+    their own: an EMPTY record list (every per-record invariant loop
+    vacuously passes) and NON-FINITE metrics (NaN poisons geomeans and every
+    ``>`` comparison silently evaluates False, i.e. "pass"). Benchmarks must
+    fail loudly at write time instead of handing CI a green lie.
+    """
+    problems = []
+    if not payload.get("benchmark"):
+        problems.append("payload has no 'benchmark' field")
+    if not payload.get("records"):
+        problems.append("payload has no records — nothing for the gate to check")
+    problems.extend(f"non-finite metric at {p}" for p in _non_finite_paths(payload))
+    return problems
+
+
+def write_payload(payload: dict, env_var: str, default_path: str) -> str:
+    """Validate and write a benchmark payload; die loudly on junk metrics.
+
+    The single exit door every gated benchmark writes through: path comes
+    from ``env_var`` (the CI artifact override) falling back to
+    ``default_path`` (the checked-in baseline name), and a payload that
+    fails :func:`check_payload` terminates the process with a nonzero exit
+    so the CI step goes red BEFORE a vacuous gate can go green.
+    """
+    problems = check_payload(payload)
+    if problems:
+        print(f"REFUSING to write {default_path}:", file=sys.stderr)
+        for line in problems:
+            print(f"  {line}", file=sys.stderr)
+        raise SystemExit(1)
+    out = os.environ.get(env_var, default_path)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    return out
 
 
 def emit(rows: list[dict]):

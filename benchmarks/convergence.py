@@ -11,8 +11,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import enable_x64
-from repro.core import (FalkonConfig, falkon_fit, falkon_solve,
-                        make_preconditioner, nystrom_direct, uniform_centers)
+from repro.core import (
+    FalkonConfig,
+    falkon_fit,
+    falkon_solve,
+    make_preconditioner,
+    nystrom_direct,
+    uniform_centers,
+)
 from repro.data.synthetic import KernelTask, make_kernel_dataset
 
 from .common import emit, timed
@@ -20,16 +26,29 @@ from .common import emit, timed
 
 def run(fast: bool = True):
     rows = []
-    task = KernelTask("conv", n=6000, d=8, task="regression", sigma=3.0,
-                      lam=0.0, num_centers=0, noise=0.05)
+    task = KernelTask(
+        "conv",
+        n=6000,
+        d=8,
+        task="regression",
+        sigma=3.0,
+        lam=0.0,
+        num_centers=0,
+        noise=0.05,
+    )
     X, y = make_kernel_dataset(jax.random.PRNGKey(0), task, n=6000)
 
     # --- cond(W) vs M (Thm 2) ---
     lam = 1e-4
     conds = {}
     for M in (25, 100, 400):
-        cfg = FalkonConfig(kernel="gaussian", kernel_params=(("sigma", 3.0),),
-                           lam=lam, num_centers=M, iterations=3)
+        cfg = FalkonConfig(
+            kernel="gaussian",
+            kernel_params=(("sigma", 3.0),),
+            lam=lam,
+            num_centers=M,
+            iterations=3,
+        )
         (_, st), _ = timed(lambda: falkon_fit(jax.random.PRNGKey(1), X, y, cfg))
         conds[M] = round(float(st.cond_estimate), 2)
     rows.append(dict(name="convergence/cond_vs_M", us_per_call="",
@@ -39,8 +58,9 @@ def run(fast: bool = True):
     # --- exponential decay in t (Thm 1) ---
     # fp64: the "exact Nystrom" REFERENCE needs it (the fp32 direct solve is
     # the unstable one — that is the paper's own point about conditioning)
-    kern = FalkonConfig(kernel="gaussian",
-                        kernel_params=(("sigma", 3.0),)).make_kernel()
+    kern = FalkonConfig(
+        kernel="gaussian", kernel_params=(("sigma", 3.0),)
+    ).make_kernel()
     with enable_x64(True):
         X64 = X.astype(jnp.float64)
         y64 = y.astype(jnp.float64)
@@ -55,8 +75,9 @@ def run(fast: bool = True):
             st = falkon_solve(X64, y64, sel.centers, pre, kern, lam, t)
             from repro.core import knm_apply
             p_f = knm_apply(probe, sel.centers, st.alpha, kern)
-            g = float(jnp.linalg.norm(p_f - p_ny) /
-                      jnp.maximum(jnp.linalg.norm(p_ny), 1e-12))
+            g = float(
+                jnp.linalg.norm(p_f - p_ny) / jnp.maximum(jnp.linalg.norm(p_ny), 1e-12)
+            )
             gaps[t] = max(g, 1e-12)
     # fitted rate: log gap ~ -nu t; Thm 1/2 predict nu >= 1/2
     ts = np.array(sorted(gaps))
@@ -71,8 +92,9 @@ def run(fast: bool = True):
     # source condition r=1/2 of Thm 3 holds exactly, so the minimax rate is
     # the right yardstick. Train/test share f*; test targets are noiseless.
     ns = [500, 1000, 2000, 4000] if fast else [1000, 2000, 4000, 8000, 16000]
-    kernf = FalkonConfig(kernel="gaussian",
-                         kernel_params=(("sigma", 3.0),)).make_kernel()
+    kernf = FalkonConfig(
+        kernel="gaussian", kernel_params=(("sigma", 3.0),)
+    ).make_kernel()
     kz, ka, kx, kxe, knz = jax.random.split(jax.random.PRNGKey(77), 5)
     d = 8
     z = jax.random.normal(kz, (32, d))
@@ -85,12 +107,14 @@ def run(fast: bool = True):
     errs = []
     for n in ns:
         Xn, yn = Xall[:n], yall[:n]
-        cfg = FalkonConfig(kernel="gaussian", kernel_params=(("sigma", 3.0),),
-                           lam=float(1 / np.sqrt(n)),
-                           num_centers=int(4 * np.sqrt(n)),
-                           iterations=max(8, int(np.log(n)) + 5))
-        (est, _), _ = timed(lambda: falkon_fit(jax.random.PRNGKey(3), Xn, yn,
-                                               cfg))
+        cfg = FalkonConfig(
+            kernel="gaussian",
+            kernel_params=(("sigma", 3.0),),
+            lam=float(1 / np.sqrt(n)),
+            num_centers=int(4 * np.sqrt(n)),
+            iterations=max(8, int(np.log(n)) + 5),
+        )
+        (est, _), _ = timed(lambda: falkon_fit(jax.random.PRNGKey(3), Xn, yn, cfg))
         errs.append(float(jnp.mean((est.predict(Xte) - yte_clean) ** 2)))
     slope = float(np.polyfit(np.log(ns), np.log(errs), 1)[0])
     rows.append(dict(name="convergence/rate_in_n", us_per_call="",

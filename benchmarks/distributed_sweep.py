@@ -37,13 +37,11 @@ import os
 # backend init. Respect an existing override (e.g. CI exporting 8 already).
 if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
     os.environ["XLA_FLAGS"] = (
-        os.environ.get("XLA_FLAGS", "")
-        + " --xla_force_host_platform_device_count=8"
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
     ).strip()
 
 import argparse
 import dataclasses
-import json
 
 import jax
 import jax.numpy as jnp
@@ -53,7 +51,7 @@ from jax.sharding import Mesh
 from repro.core import FalkonConfig, GaussianKernel, falkon_fit
 from repro.ops import CountingOps, DistributedOps, get_ops
 
-from .common import emit, timed_best
+from .common import emit, timed_best, write_payload
 
 FAST_POINTS = [(16384, 512, 32)]
 FULL_POINTS = FAST_POINTS + [(65536, 1024, 32)]
@@ -80,8 +78,8 @@ def _scaling_point(n: int, M: int, d: int) -> list[dict]:
 
     inner = get_ops("jnp", GaussianKernel(sigma=2.0), block_size=4096)
     ref, t_single = timed_best(
-        jax.jit(lambda X, C, u, v: inner.sweep(X, C, u, v)), X, C, u, v,
-        repeat=5)
+        jax.jit(lambda X, C, u, v: inner.sweep(X, C, u, v)), X, C, u, v, repeat=5
+    )
 
     records = []
     t_one = None
@@ -120,7 +118,11 @@ def _parity_point(impl: str, n: int, M: int, d: int) -> dict:
     ref = inner.sweep(X, C, u, v)
     got = dist.sweep(X, C, u, v)
     return dict(
-        impl=impl, n=n, M=M, d=d, devices=8,
+        impl=impl,
+        n=n,
+        M=M,
+        d=d,
+        devices=8,
         parity_rel=float(jnp.linalg.norm(got - ref) / jnp.linalg.norm(ref)),
         psums_per_sweep=dist.psums,
         comm_floats=dist.psum_floats,
@@ -134,9 +136,14 @@ def _fit_counting(n: int, M: int, d: int) -> dict:
     k1, k2 = jax.random.split(key)
     X = jax.random.normal(k1, (n, d))
     y = jnp.sin(X @ jax.random.normal(k2, (d,)))
-    cfg = FalkonConfig(kernel="gaussian", kernel_params=(("sigma", 2.0),),
-                       lam=1e-4, num_centers=M, iterations=10,
-                       block_size=1024)
+    cfg = FalkonConfig(
+        kernel="gaussian",
+        kernel_params=(("sigma", 2.0),),
+        lam=1e-4,
+        num_centers=M,
+        iterations=10,
+        block_size=1024,
+    )
     count_1 = CountingOps(get_ops("jnp", cfg.make_kernel(), block_size=1024))
     falkon_fit(jax.random.PRNGKey(1), X, y, cfg, ops=count_1)
     count_8 = CountingOps(get_ops("jnp", cfg.make_kernel(), block_size=1024))
@@ -146,9 +153,15 @@ def _fit_counting(n: int, M: int, d: int) -> dict:
     est_1, _ = falkon_fit(jax.random.PRNGKey(1), X, y, cfg)
     p1, p8 = est_1.predict(X), est_8.predict(X)
     return dict(
-        n=n, M=M, d=d, devices=8, iterations=cfg.iterations,
-        sweeps_single=count_1.sweeps, sweeps_dist=count_8.sweeps,
-        grams_single=count_1.grams, grams_dist=count_8.grams,
+        n=n,
+        M=M,
+        d=d,
+        devices=8,
+        iterations=cfg.iterations,
+        sweeps_single=count_1.sweeps,
+        sweeps_dist=count_8.sweeps,
+        grams_single=count_1.grams,
+        grams_dist=count_8.grams,
         psums=dist.psums,
         fit_parity_rel=float(jnp.linalg.norm(p8 - p1) / jnp.linalg.norm(p1)),
     )
@@ -157,8 +170,9 @@ def _fit_counting(n: int, M: int, d: int) -> dict:
 def run(fast: bool = True):
     points = FAST_POINTS if fast else FULL_POINTS
     scaling = [r for pt in points for r in _scaling_point(*pt)]
-    parity = [_parity_point("jnp", 8192, 256, 16),
-              _parity_point("pallas", 2048, 128, 16)]
+    parity = [
+        _parity_point("jnp", 8192, 256, 16), _parity_point("pallas", 2048, 128, 16)
+    ]
     counting = _fit_counting(4096, 256, 8)
 
     payload = {
@@ -173,9 +187,7 @@ def run(fast: bool = True):
                           "CG iteration, independent of n and devices",
         },
     }
-    out = os.environ.get("BENCH_DISTRIBUTED_JSON", "BENCH_distributed.json")
-    with open(out, "w") as f:
-        json.dump(payload, f, indent=2)
+    out = write_payload(payload, "BENCH_DISTRIBUTED_JSON", "BENCH_distributed.json")
 
     rows = []
     for r in scaling:

@@ -25,8 +25,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
-import os
 
 import jax
 import numpy as np
@@ -35,11 +33,11 @@ from repro.core import FalkonConfig, falkon_fit, falkon_fit_path
 from repro.ops import CountingOps, get_ops
 
 from .check_regression import _geomean
-from .common import emit, timed_best
+from .common import emit, timed_best, write_payload
 
 #: L, the grid size the acceptance criterion names.
 L = 8
-LAMS = tuple(float(10.0 ** e) for e in np.linspace(-4.0, -1.0, L))
+LAMS = tuple(float(10.0**e) for e in np.linspace(-4.0, -1.0, L))
 
 #: (n, M, d, t) benchmark points — in-core, planner keeps the jnp row sweep.
 FAST_POINTS = [(4096, 256, 16, 10)]
@@ -57,9 +55,15 @@ def _problem(n, d, seed=0):
 
 
 def _config(M, t):
-    return FalkonConfig(kernel_params=(("sigma", 1.0),), num_centers=M,
-                        iterations=t, block_size=1024, jitter=1e-5,
-                        ops_impl="jnp", estimate_cond=False)
+    return FalkonConfig(
+        kernel_params=(("sigma", 1.0),),
+        num_centers=M,
+        iterations=t,
+        block_size=1024,
+        jitter=1e-5,
+        ops_impl="jnp",
+        estimate_cond=False,
+    )
 
 
 def _count_sweeps(key, X, y, cfg):
@@ -93,10 +97,17 @@ def run(points, repeat=3):
         _, sec_seq = timed_best(fit_sequential, repeat=repeat)
         sweeps_path, sweeps_seq = _count_sweeps(key, X, y, cfg)
         rec = dict(
-            n=n, M=M, d=d, iterations=t, L=L, impl=cfg.ops_impl,
-            time_path_s=sec_path, time_seq_s=sec_seq,
+            n=n,
+            M=M,
+            d=d,
+            iterations=t,
+            L=L,
+            impl=cfg.ops_impl,
+            time_path_s=sec_path,
+            time_seq_s=sec_seq,
             speedup_vs_sequential=sec_seq / sec_path,
-            sweeps_path=sweeps_path, sweeps_seq=sweeps_seq,
+            sweeps_path=sweeps_path,
+            sweeps_seq=sweeps_seq,
         )
         records.append(rec)
         print(f"n={n} M={M} d={d} t={t}: path {sec_path * 1e3:.1f}ms, "
@@ -108,8 +119,7 @@ def run(points, repeat=3):
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true",
-                    help="CI points, fewer repeats")
+    ap.add_argument("--quick", action="store_true", help="CI points, fewer repeats")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args(argv)
     points = FULL_POINTS if args.full else FAST_POINTS
@@ -119,8 +129,7 @@ def main(argv=None):
     summary = dict(
         L=L,
         lams=list(LAMS),
-        speedup_geomean=_geomean([r["speedup_vs_sequential"]
-                                  for r in records]),
+        speedup_geomean=_geomean([r["speedup_vs_sequential"] for r in records]),
         sweep_ratio=records[0]["sweeps_seq"] / records[0]["sweeps_path"],
         speedup_floor=SPEEDUP_FLOOR,
     )
@@ -129,9 +138,7 @@ def main(argv=None):
         "records": records,
         "summary": summary,
     }
-    out = os.environ.get("BENCH_PATH_JSON", "BENCH_path.json")
-    with open(out, "w") as f:
-        json.dump(payload, f, indent=2)
+    out = write_payload(payload, "BENCH_PATH_JSON", "BENCH_path.json")
     print(f"wrote {out}: speedup geomean "
           f"{summary['speedup_geomean']:.2f}x over {len(records)} points, "
           f"sweep ratio {summary['sweep_ratio']:.0f} (= L)")

@@ -26,8 +26,6 @@ Three measurements, written to ``BENCH_precision.json`` (path override: env
 from __future__ import annotations
 
 import argparse
-import json
-import os
 
 import jax
 import jax.numpy as jnp
@@ -36,12 +34,11 @@ import numpy as np
 from repro.compat import enable_x64
 from repro.core import make_kernel, spec_of
 from repro.data import ArrayChunkSource, StreamingLoader, streaming_sweep
-from repro.kernels.kernel_matvec import (fused_sweep_pallas,
-                                         sharded_sweep_pallas)
+from repro.kernels.kernel_matvec import (fused_sweep_pallas, sharded_sweep_pallas)
 from repro.ops import get_ops
 
 from .check_regression import _geomean  # the gate's own aggregation
-from .common import emit, timed_best
+from .common import emit, timed_best, write_payload
 
 ERROR_BOUND = {"fp32": 1e-4, "bf16": 1e-2}
 
@@ -92,8 +89,7 @@ def _error_record(kernel_name: str, params: dict) -> dict:
     oracle = _oracle(kern, X, C, u, v)
     bf = jnp.bfloat16
     Xb, Cb, vb = X.astype(bf), C.astype(bf), v.astype(bf)
-    kw = dict(spec=spec_of(kern), block_m=64, compensated=True,
-              interpret=True)
+    kw = dict(spec=spec_of(kern), block_m=64, compensated=True, interpret=True)
     co = jnp.float32  # coefficient dtype (policy override): u in / w out
 
     err = {
@@ -113,11 +109,17 @@ def _error_record(kernel_name: str, params: dict) -> dict:
     loader = StreamingLoader(source, prefetch=0, dtype=bf)
     jops = get_ops("jnp", kern, block_size=128, precision="bf16")
     err["err_stream"] = _rel(
-        streaming_sweep(jops, loader, C, u, use_targets=True), oracle)
+        streaming_sweep(jops, loader, C, u, use_targets=True), oracle
+    )
     bf16_errs = [v_ for k, v_ in err.items() if k != "err_fp32"]
-    return dict(kernel=kernel_name, n=n, M=M, d=d,
-                **{k: round(v_, 8) for k, v_ in err.items()},
-                max_rel_err_bf16=round(max(bf16_errs), 8))
+    return dict(
+        kernel=kernel_name,
+        n=n,
+        M=M,
+        d=d,
+        **{k: round(v_, 8) for k, v_ in err.items()},
+        max_rel_err_bf16=round(max(bf16_errs), 8),
+    )
 
 
 def _throughput_record(n: int, M: int, d: int) -> dict:
@@ -141,18 +143,20 @@ def _plan_record(n: int, M: int, d: int) -> dict:
     rec = dict(n=n, M=M, d=d)
     hbm = {}
     for prec in ("fp32", "bf16"):
-        plan = get_ops("pallas", kern, block_size=2048,
-                       precision=prec).plan(n, M, d, 1)
+        plan = get_ops("pallas", kern, block_size=2048, precision=prec).plan(n, M, d, 1)
         hbm[prec] = plan.hbm_bytes
-        rec[prec] = dict(path=plan.path, shard_m=plan.shard_m,
-                         scratch_bytes=plan.scratch_bytes,
-                         io_bytes=plan.io_bytes,
-                         total_bytes=plan.total_bytes,
-                         hbm_bytes=plan.hbm_bytes,
-                         input_dtype=plan.input_dtype,
-                         vector_dtype=plan.vector_dtype,
-                         coeffs_dtype=plan.coeffs_dtype,
-                         compensated=plan.compensated)
+        rec[prec] = dict(
+            path=plan.path,
+            shard_m=plan.shard_m,
+            scratch_bytes=plan.scratch_bytes,
+            io_bytes=plan.io_bytes,
+            total_bytes=plan.total_bytes,
+            hbm_bytes=plan.hbm_bytes,
+            input_dtype=plan.input_dtype,
+            vector_dtype=plan.vector_dtype,
+            coeffs_dtype=plan.coeffs_dtype,
+            compensated=plan.compensated,
+        )
     rec["hbm_headroom"] = round(hbm["fp32"] / hbm["bf16"], 3)
     return rec
 
@@ -164,10 +168,8 @@ def run(fast: bool = True):
     plans = [_plan_record(*pt) for pt in PLAN_POINTS]
 
     summary = dict(
-        speedup_geomean=round(
-            _geomean([r["speedup_bf16"] for r in throughput]), 3),
-        hbm_headroom_geomean=round(
-            _geomean([p["hbm_headroom"] for p in plans]), 3),
+        speedup_geomean=round(_geomean([r["speedup_bf16"] for r in throughput]), 3),
+        hbm_headroom_geomean=round(_geomean([p["hbm_headroom"] for p in plans]), 3),
         max_rel_err=max(r["max_rel_err_bf16"] for r in errors),
         error_bound=ERROR_BOUND["bf16"],
         kernels=len(errors),
@@ -179,9 +181,7 @@ def run(fast: bool = True):
         "planner": plans,
         "summary": summary,
     }
-    out = os.environ.get("BENCH_PRECISION_JSON", "BENCH_precision.json")
-    with open(out, "w") as f:
-        json.dump(payload, f, indent=2)
+    out = write_payload(payload, "BENCH_PRECISION_JSON", "BENCH_precision.json")
 
     rows = []
     for r in errors:

@@ -27,8 +27,6 @@ half an hour of O(M^3) on one CPU core.
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import time
 
 import jax.numpy as jnp
@@ -37,7 +35,7 @@ import numpy as np
 from repro.kernels.blocked_cholesky import FactorStats, blocked_cholesky
 from repro.ops import plan_factor
 
-from .common import emit
+from .common import emit, write_payload
 
 QUICK_MS = (1024, 2048, 4096)
 FULL_MS = (4096, 16384, 32768)
@@ -97,8 +95,7 @@ def _point(M: int) -> dict:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true",
-                    help="CI-sized points (M <= 4096)")
+    ap.add_argument("--quick", action="store_true", help="CI-sized points (M <= 4096)")
     args = ap.parse_args(argv)
     Ms = QUICK_MS if args.quick else FULL_MS
 
@@ -113,9 +110,7 @@ def main(argv=None) -> int:
             "quick": bool(args.quick),
         },
     }
-    out = os.environ.get("BENCH_PRECOND_JSON", "BENCH_precond.json")
-    with open(out, "w") as f:
-        json.dump(payload, f, indent=2)
+    out = write_payload(payload, "BENCH_PRECOND_JSON", "BENCH_precond.json")
     print(f"wrote {out}")
 
     emit([dict(name=f"precond_blocked_M{r['M']}",

@@ -31,8 +31,9 @@ def to_markdown(cells: list[dict]) -> str:
     lines = []
     for c in cells:
         if c.get("status") != "ok":
-            lines.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
-                         f"ERROR | | | | | | |")
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | " f"ERROR | | | | | | |"
+            )
             continue
         r = c["roofline"]
         lines.append(
@@ -65,8 +66,7 @@ def run(fast: bool = True):
             gb_per_dev=c["bytes_per_device_gb"],
             fits=c["fits_hbm"]))
     if cells:
-        out = os.path.join(os.path.dirname(__file__), "..", "artifacts",
-                           "roofline.md")
+        out = os.path.join(os.path.dirname(__file__), "..", "artifacts", "roofline.md")
         with open(out, "w") as f:
             f.write(to_markdown(cells))
     emit(rows)

@@ -9,21 +9,30 @@ import sys
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true",
-                    help="paper-scale n (slower); default is CPU-fast")
-    ap.add_argument("--only", default=None,
-                    help="substring filter on module name")
+    ap.add_argument(
+        "--full",
+        action="store_true",
+        help="paper-scale n (slower); default is CPU-fast",
+    )
+    ap.add_argument("--only", default=None, help="substring filter on module name")
     args = ap.parse_args()
 
-    from . import (convergence, roofline_report, sweep_fusion,
-                   table1_complexity, table2_regression,
-                   table3_classification)
-    mods = [("table1_complexity", table1_complexity),
-            ("table2_regression", table2_regression),
-            ("table3_classification", table3_classification),
-            ("convergence", convergence),
-            ("sweep_fusion", sweep_fusion),
-            ("roofline_report", roofline_report)]
+    from .import (
+        convergence,
+        roofline_report,
+        sweep_fusion,
+        table1_complexity,
+        table2_regression,
+        table3_classification,
+    )
+    mods = [
+        ("table1_complexity", table1_complexity),
+        ("table2_regression", table2_regression),
+        ("table3_classification", table3_classification),
+        ("convergence", convergence),
+        ("sweep_fusion", sweep_fusion),
+        ("roofline_report", roofline_report),
+    ]
     print("name,us_per_call,derived")
     for name, mod in mods:
         if args.only and args.only not in name:
@@ -32,5 +41,5 @@ def main() -> None:
         mod.run(fast=not args.full)
 
 
-if __name__ == '__main__':
+if __name__ == "__main__":
     main()

@@ -32,8 +32,6 @@ would measure the emulator.
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import time
 
 import jax
@@ -44,7 +42,7 @@ from repro.core import FalkonConfig, falkon_fit
 from repro.serve import CoalescingPredictServer
 
 from .check_regression import _geomean
-from .common import emit
+from .common import emit, write_payload
 
 #: (n, M, d, n_requests, max_batch) benchmark points.
 FAST_POINTS = [(4096, 256, 16, 150, 128)]
@@ -59,9 +57,15 @@ def _fit(n, M, d, seed=0):
     X = jax.random.normal(ks[0], (n, d))
     w = jax.random.normal(ks[1], (d,))
     y = jnp.sin(X @ w) + 0.05 * jax.random.normal(ks[2], (n,))
-    cfg = FalkonConfig(kernel_params=(("sigma", 2.0),), lam=1e-4,
-                       num_centers=M, iterations=10, block_size=256,
-                       ops_impl="jnp", estimate_cond=False)
+    cfg = FalkonConfig(
+        kernel_params=(("sigma", 2.0),),
+        lam=1e-4,
+        num_centers=M,
+        iterations=10,
+        block_size=256,
+        ops_impl="jnp",
+        estimate_cond=False,
+    )
     est, _ = falkon_fit(jax.random.PRNGKey(1), X, y, cfg)
     jax.block_until_ready(est.alpha)
     return est
@@ -70,8 +74,7 @@ def _fit(n, M, d, seed=0):
 def _trace(n_requests, max_batch, d, seed=0):
     rng = np.random.default_rng(seed)
     sizes = rng.integers(1, max_batch + 1, size=n_requests)
-    return [rng.standard_normal((int(s), d)).astype(np.float32)
-            for s in sizes]
+    return [rng.standard_normal((int(s), d)).astype(np.float32) for s in sizes]
 
 
 def _run_per_request(est, trace, d, *, warm_shapes):
@@ -105,7 +108,7 @@ def _run_coalesced(est, trace, max_batch):
     lat = []
     t0 = time.perf_counter()
     for w0 in range(0, len(trace), FLUSH_WINDOW):
-        window = trace[w0:w0 + FLUSH_WINDOW]
+        window = trace[w0 : w0 + FLUSH_WINDOW]
         t1 = time.perf_counter()
         for xb in window:
             server.submit(xb)
@@ -127,15 +130,19 @@ def run(points, *, max_requests=None):
         trace = _trace(n_requests, max_batch, d)
         rows = sum(b.shape[0] for b in trace)
 
-        sec_cold, lat_req = _run_per_request(est, trace, d,
-                                             warm_shapes={max_batch})
+        sec_cold, lat_req = _run_per_request(est, trace, d, warm_shapes={max_batch})
         warm = {b.shape[0] for b in trace}
         sec_warm, _ = _run_per_request(est, trace, d, warm_shapes=warm)
         sec_co, lat_co, server = _run_coalesced(est, trace, max_batch)
 
         rec = dict(
-            n=n, M=M, d=d, n_requests=n_requests, max_batch=max_batch,
-            rows=rows, impl="jnp",
+            n=n,
+            M=M,
+            d=d,
+            n_requests=n_requests,
+            max_batch=max_batch,
+            rows=rows,
+            impl="jnp",
             ladder=list(server.ladder),
             rows_per_s_coalesced=rows / sec_co,
             rows_per_s_per_request=rows / sec_cold,
@@ -165,9 +172,11 @@ def run(points, *, max_requests=None):
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true",
-                    help="CI mode: fast point set, trace capped at 100 "
-                         "requests")
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="CI mode: fast point set, trace capped at 100 " "requests",
+    )
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args(argv)
     points = FULL_POINTS if args.full else FAST_POINTS
@@ -182,11 +191,8 @@ def main(argv=None):
                                   for r in records),
         speedup_floor=SPEEDUP_FLOOR,
     )
-    payload = {"benchmark": "serve_coalesce", "records": records,
-               "summary": summary}
-    out = os.environ.get("BENCH_SERVE_JSON", "BENCH_serve.json")
-    with open(out, "w") as f:
-        json.dump(payload, f, indent=2)
+    payload = {"benchmark": "serve_coalesce", "records": records, "summary": summary}
+    out = write_payload(payload, "BENCH_SERVE_JSON", "BENCH_serve.json")
     print(f"wrote {out}: coalesced speedup geomean "
           f"{summary['speedup_geomean']:.1f}x (warm-baseline "
           f"{summary['speedup_warm_geomean']:.1f}x) over {len(records)} "

@@ -24,8 +24,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
-import os
 import resource
 
 import jax
@@ -36,7 +34,7 @@ from repro.data import ArrayChunkSource, StreamingLoader, streaming_sweep
 from repro.data.streaming import JittedOps
 from repro.ops import get_ops
 
-from .common import emit, timed_best
+from .common import emit, timed_best, write_payload
 
 FAST_POINTS = [(16384, 512, 32), (32768, 1024, 32)]
 FULL_POINTS = FAST_POINTS + [(131072, 2048, 32), (262144, 2048, 64)]
@@ -114,9 +112,7 @@ def run(fast: bool = True):
         "records": records,
         "sweep_plans": plans,
     }
-    out = os.environ.get("BENCH_STREAMING_JSON", "BENCH_streaming.json")
-    with open(out, "w") as f:
-        json.dump(payload, f, indent=2)
+    out = write_payload(payload, "BENCH_STREAMING_JSON", "BENCH_streaming.json")
 
     rows = []
     for r in records:

@@ -22,8 +22,6 @@ metric. Results go to stdout as CSV rows (benchmarks/run.py contract) and to
 from __future__ import annotations
 
 import argparse
-import json
-import os
 
 import jax
 
@@ -32,7 +30,7 @@ from repro.kernels.kernel_matvec import fused_sweep_pallas, sweep_tile_grid
 from repro.kernels.ops import two_pass_knm_matvec
 from repro.ops import get_ops
 
-from .common import emit, timed_best
+from .common import emit, timed_best, write_payload
 
 FAST_POINTS = [(2048, 256, 16), (2048, 512, 32), (4096, 512, 16)]
 FULL_POINTS = [(65536, 1024, 32), (131072, 2048, 64), (262144, 4096, 32)]
@@ -60,8 +58,9 @@ def run(fast: bool = True):
         fused = jax.jit(lambda X, C, u, v: fused_sweep_pallas(
             X, C, u, v, spec=spec_of(kern), block_m=block_m, block_n=block_n,
             interpret=interpret))
-        two = jax.jit(lambda X, C, u, v: two_pass_knm_matvec(
-            X, C, u, v, kern, block_size=block_m))
+        two = jax.jit(
+            lambda X, C, u, v: two_pass_knm_matvec(X, C, u, v, kern, block_size=block_m)
+        )
         jops = get_ops("jnp", kern, block_size=2048)
         jref = jax.jit(lambda X, C, u, v: jops.sweep(X, C, u, v))
 
@@ -73,31 +72,46 @@ def run(fast: bool = True):
         _, t_jnp = timed_best(jref, X, C, u, v, repeat=5)
 
         # counter cross-check: the kernel reports one eval per tile
-        _, cnt = fused_sweep_pallas(X, C, u, v, spec=spec_of(kern),
-                                    block_m=block_m, block_n=block_n,
-                                    interpret=interpret,
-                                    return_tile_count=True)
+        _, cnt = fused_sweep_pallas(
+            X,
+            C,
+            u,
+            v,
+            spec=spec_of(kern),
+            block_m=block_m,
+            block_n=block_n,
+            interpret=interpret,
+            return_tile_count=True,
+        )
         evals_fused, evals_two = _tile_counts(n, M, block_m, block_n)
         assert int(cnt) == evals_fused, (int(cnt), evals_fused)
 
-        rec = dict(n=n, M=M, d=d, block_m=block_m, block_n=block_n,
-                   backend=jax.default_backend(), interpret=interpret,
-                   us_fused=round(t_fused * 1e6, 1),
-                   us_two_pass=round(t_two * 1e6, 1),
-                   us_jnp=round(t_jnp * 1e6, 1),
-                   speedup_vs_two_pass=round(t_two / t_fused, 3),
-                   tile_evals_fused=evals_fused,
-                   tile_evals_two_pass=evals_two)
+        rec = dict(
+            n=n,
+            M=M,
+            d=d,
+            block_m=block_m,
+            block_n=block_n,
+            backend=jax.default_backend(),
+            interpret=interpret,
+            us_fused=round(t_fused * 1e6, 1),
+            us_two_pass=round(t_two * 1e6, 1),
+            us_jnp=round(t_jnp * 1e6, 1),
+            speedup_vs_two_pass=round(t_two / t_fused, 3),
+            tile_evals_fused=evals_fused,
+            tile_evals_two_pass=evals_two,
+        )
         records.append(rec)
         rows.append(dict(name=f"sweep_fusion/n{n}_M{M}_d{d}",
                          us_per_call=rec["us_fused"],
                          **{k: v for k, v in rec.items()
                             if k not in ("n", "M", "d", "us_fused")}))
 
-    out = os.environ.get("BENCH_SWEEP_JSON", "BENCH_sweep.json")
-    with open(out, "w") as f:
-        json.dump({"benchmark": "sweep_fusion", "records": records}, f,
-                  indent=2)
+    write_payload(
+        {"benchmark": "sweep_fusion", "records": records},
+        "BENCH_SWEEP_JSON",
+        "BENCH_sweep.json",
+    )
     emit(rows)
     return rows
 

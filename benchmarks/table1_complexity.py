@@ -11,8 +11,9 @@ from __future__ import annotations
 import numpy as np
 import jax
 
-from repro.core import (FalkonConfig, falkon_fit, krr_direct, krr_gradient,
-                        nystrom_direct)
+from repro.core import (
+    FalkonConfig, falkon_fit, krr_direct, krr_gradient, nystrom_direct
+)
 from repro.data.synthetic import KernelTask, make_kernel_dataset
 
 from .common import emit, mse, timed
@@ -24,8 +25,9 @@ def _fit_exponent(ns, ts):
 
 def run(fast: bool = True):
     ns = [2000, 8000, 24000] if fast else [4000, 16000, 64000]
-    task = KernelTask("scaling", n=max(ns), d=10, task="regression",
-                      sigma=3.0, lam=0.0, num_centers=0)
+    task = KernelTask(
+        "scaling", n=max(ns), d=10, task="regression", sigma=3.0, lam=0.0, num_centers=0
+    )
     key = jax.random.PRNGKey(0)
     Xa, ya = make_kernel_dataset(key, task)
     Xte, yte = make_kernel_dataset(jax.random.PRNGKey(9), task, n=1000)
@@ -34,27 +36,31 @@ def run(fast: bool = True):
     jit_fit = jax.jit(falkon_fit, static_argnames=("config",))
 
     rows = []
-    times = {m: [] for m in ("falkon", "nystrom_direct", "krr_direct",
-                             "krr_gradient")}
-    opcounts = {m: [] for m in ("falkon", "nystrom_direct", "krr_direct",
-                                "krr_gradient")}
+    times = {m: [] for m in ("falkon", "nystrom_direct", "krr_direct", "krr_gradient")}
+    opcounts = {
+        m: [] for m in ("falkon", "nystrom_direct", "krr_direct", "krr_gradient")
+    }
     for n in ns:
         X, y = Xa[:n], ya[:n]
         lam = 1.0 / np.sqrt(n)
         M = int(3 * np.sqrt(n))
         t_iter = max(8, int(np.log(n)) + 5)
 
-        cfg = FalkonConfig(kernel="gaussian", kernel_params=(("sigma", 3.0),),
-                           lam=lam, num_centers=M, iterations=t_iter,
-                           block_size=2048)
-        (est, _), dt = timed(lambda: jit_fit(jax.random.PRNGKey(1), X, y,
-                                             config=cfg))
+        cfg = FalkonConfig(
+            kernel="gaussian",
+            kernel_params=(("sigma", 3.0),),
+            lam=lam,
+            num_centers=M,
+            iterations=t_iter,
+            block_size=2048,
+        )
+        (est, _), dt = timed(lambda: jit_fit(jax.random.PRNGKey(1), X, y, config=cfg))
         times["falkon"].append(dt)
         # kernel-evaluation counts (the paper's accounting unit):
-        opcounts["falkon"].append(n * M * (t_iter + 2) + M ** 3 / 3)
-        opcounts["nystrom_direct"].append(n * M * 2 + n * M ** 2 + M ** 3 / 3)
-        opcounts["krr_direct"].append(n ** 3 / 3 + n ** 2)
-        opcounts["krr_gradient"].append(n ** 2 * int(np.sqrt(n)))
+        opcounts["falkon"].append(n * M * (t_iter + 2) + M**3 / 3)
+        opcounts["nystrom_direct"].append(n * M * 2 + n * M**2 + M**3 / 3)
+        opcounts["krr_direct"].append(n**3 / 3 + n**2)
+        opcounts["krr_gradient"].append(n**2 * int(np.sqrt(n)))
         err_f = mse(est.predict(Xte), yte)
 
         kern = cfg.make_kernel()
@@ -67,8 +73,7 @@ def run(fast: bool = True):
             (kr), dt = timed(lambda: krr_direct(X, y, kern, lam))
             times["krr_direct"].append(dt)
             err_kr = mse(kr.predict(Xte), yte)
-            (kg), dt = timed(lambda: krr_gradient(X, y, kern, lam,
-                                                  t=int(np.sqrt(n))))
+            (kg), dt = timed(lambda: krr_gradient(X, y, kern, lam, t=int(np.sqrt(n))))
             times["krr_gradient"].append(dt)
             err_kg = mse(kg.predict(Xte), yte)
         else:
@@ -85,8 +90,9 @@ def run(fast: bool = True):
                          mse_falkon=round(err_f, 4), mse_nystrom=round(err_ny, 4),
                          mse_krr=round(err_kr, 4), mse_krr_grad=round(err_kg, 4)))
 
-    paper_exp = {"falkon": 1.5, "nystrom_direct": 2.0, "krr_direct": 3.0,
-                 "krr_gradient": 2.5}
+    paper_exp = {
+        "falkon": 1.5, "nystrom_direct": 2.0, "krr_direct": 3.0, "krr_gradient": 2.5
+    }
     for m, ts in times.items():
         nsub = ns[:len(ts)]
         rows.append(dict(

@@ -31,13 +31,17 @@ def run(fast: bool = True):
     n = int(task.n * scale)
     X, y = make_kernel_dataset(jax.random.PRNGKey(0), task, n=n)
     Xtr, ytr, Xte, yte = _split(X, y)
-    cfg = FalkonConfig(kernel="gaussian", kernel_params=(("sigma", task.sigma),),
-                       lam=task.lam, num_centers=task.num_centers,
-                       iterations=20)
-    (est, st), t_f = timed(lambda: falkon_fit(jax.random.PRNGKey(1), Xtr, ytr,
-                                              cfg))
-    ny, t_ny = timed(lambda: nystrom_direct(Xtr, ytr, est.centers,
-                                            cfg.make_kernel(), cfg.lam))
+    cfg = FalkonConfig(
+        kernel="gaussian",
+        kernel_params=(("sigma", task.sigma),),
+        lam=task.lam,
+        num_centers=task.num_centers,
+        iterations=20,
+    )
+    (est, st), t_f = timed(lambda: falkon_fit(jax.random.PRNGKey(1), Xtr, ytr, cfg))
+    ny, t_ny = timed(
+        lambda: nystrom_direct(Xtr, ytr, est.centers, cfg.make_kernel(), cfg.lam)
+    )
     rows.append(dict(name="table2/millionsongs",
                      us_per_call=round(t_f * 1e6),
                      falkon_mse=round(mse(est.predict(Xte), yte), 4),
@@ -53,11 +57,14 @@ def run(fast: bool = True):
     # sparse-ish binary features like 3-gram indicators
     X = (X > 1.0).astype(jnp.float32)
     Xtr, ytr, Xte, yte = _split(X, y)
-    cfg = FalkonConfig(kernel="linear", kernel_params=(("scale", 8.0),),
-                       lam=task.lam, num_centers=task.num_centers,
-                       iterations=20)
-    (est, _), t_f = timed(lambda: falkon_fit(jax.random.PRNGKey(3), Xtr, ytr,
-                                             cfg))
+    cfg = FalkonConfig(
+        kernel="linear",
+        kernel_params=(("scale", 8.0),),
+        lam=task.lam,
+        num_centers=task.num_centers,
+        iterations=20,
+    )
+    (est, _), t_f = timed(lambda: falkon_fit(jax.random.PRNGKey(3), Xtr, ytr, cfg))
     rows.append(dict(name="table2/yelp", us_per_call=round(t_f * 1e6),
                      falkon_rmse=round(rmse(est.predict(Xte), yte), 4),
                      baseline_rmse=round(rmse(jnp.zeros_like(yte) +
@@ -71,13 +78,17 @@ def run(fast: bool = True):
     Y = jax.nn.one_hot(labels, task.n_classes)
     Xtr, Ytr, Xte, Yte = _split(X, Y)
     ltr, lte = jnp.argmax(Ytr, -1), jnp.argmax(Yte, -1)
-    cfg = FalkonConfig(kernel="gaussian",
-                       kernel_params=(("sigma", task.sigma),),
-                       lam=1e-6, num_centers=task.num_centers, iterations=20)
-    (est, _), t_f = timed(lambda: falkon_fit(jax.random.PRNGKey(5), Xtr, Ytr,
-                                             cfg))
-    ny, _ = timed(lambda: nystrom_direct(Xtr, Ytr, est.centers,
-                                         cfg.make_kernel(), cfg.lam))
+    cfg = FalkonConfig(
+        kernel="gaussian",
+        kernel_params=(("sigma", task.sigma),),
+        lam=1e-6,
+        num_centers=task.num_centers,
+        iterations=20,
+    )
+    (est, _), t_f = timed(lambda: falkon_fit(jax.random.PRNGKey(5), Xtr, Ytr, cfg))
+    ny, _ = timed(
+        lambda: nystrom_direct(Xtr, Ytr, est.centers, cfg.make_kernel(), cfg.lam)
+    )
     rows.append(dict(name="table2/timit", us_per_call=round(t_f * 1e6),
                      falkon_cerr=round(c_err(est.predict(Xte), lte), 4),
                      nystrom_cerr=round(c_err(ny.predict(Xte), lte), 4),

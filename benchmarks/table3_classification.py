@@ -30,14 +30,19 @@ def run(fast: bool = True):
         n = int(task.n * scale)
         X, y = make_kernel_dataset(jax.random.PRNGKey(key_i), task, n=n)
         Xtr, ytr, Xte, yte = _split(X, y)
-        cfg = FalkonConfig(kernel="gaussian",
-                           kernel_params=(("sigma", task.sigma),),
-                           lam=task.lam, num_centers=task.num_centers,
-                           iterations=20)
-        (est, _), t_f = timed(lambda: falkon_fit(jax.random.PRNGKey(key_i + 1),
-                                                 Xtr, ytr, cfg))
-        ny, _ = timed(lambda: nystrom_direct(Xtr, ytr, est.centers,
-                                             cfg.make_kernel(), cfg.lam))
+        cfg = FalkonConfig(
+            kernel="gaussian",
+            kernel_params=(("sigma", task.sigma),),
+            lam=task.lam,
+            num_centers=task.num_centers,
+            iterations=20,
+        )
+        (est, _), t_f = timed(
+            lambda: falkon_fit(jax.random.PRNGKey(key_i + 1), Xtr, ytr, cfg)
+        )
+        ny, _ = timed(
+            lambda: nystrom_direct(Xtr, ytr, est.centers, cfg.make_kernel(), cfg.lam)
+        )
         sc_f, sc_n = est.predict(Xte), ny.predict(Xte)
         rows.append(dict(name=f"table3/{tname}", us_per_call=round(t_f * 1e6),
                          falkon_auc=round(auc(sc_f, yte), 4),
@@ -53,10 +58,14 @@ def run(fast: bool = True):
     Y = jax.nn.one_hot(labels, task.n_classes)
     Xtr, Ytr, Xte, Yte = _split(X, Y)
     lte = jnp.argmax(Yte, -1)
-    cfg = FalkonConfig(kernel="gaussian", kernel_params=(("sigma", task.sigma),),
-                       lam=1e-8, num_centers=task.num_centers, iterations=20)
-    (est, _), t_f = timed(lambda: falkon_fit(jax.random.PRNGKey(7), Xtr, Ytr,
-                                             cfg))
+    cfg = FalkonConfig(
+        kernel="gaussian",
+        kernel_params=(("sigma", task.sigma),),
+        lam=1e-8,
+        num_centers=task.num_centers,
+        iterations=20,
+    )
+    (est, _), t_f = timed(lambda: falkon_fit(jax.random.PRNGKey(7), Xtr, Ytr, cfg))
     rows.append(dict(name="table3/imagenet", us_per_call=round(t_f * 1e6),
                      falkon_cerr=round(c_err(est.predict(Xte), lte), 4),
                      chance=round(1 - 1 / task.n_classes, 3),

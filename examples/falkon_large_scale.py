@@ -30,16 +30,24 @@ def main():
     ap.add_argument("--centers", type=int, default=0, help="0 = 3*sqrt(n)")
     ap.add_argument("--iters", type=int, default=15)
     ap.add_argument("--mesh", default=None, help="e.g. 8 or 4x2")
-    ap.add_argument("--pallas", action="store_true",
-                    help="use the fused single-pass Pallas sweep backend")
-    ap.add_argument("--precision", default="fp32", choices=("fp32", "bf16"),
-                    help="bf16 = bf16 inputs / fp32 accumulation")
+    ap.add_argument(
+        "--pallas",
+        action="store_true",
+        help="use the fused single-pass Pallas sweep backend",
+    )
+    ap.add_argument(
+        "--precision",
+        default="fp32",
+        choices=("fp32", "bf16"),
+        help="bf16 = bf16 inputs / fp32 accumulation",
+    )
     args = ap.parse_args()
 
     n = args.n
-    M = args.centers or int(3 * n ** 0.5)
-    task = KernelTask("big", n=n, d=args.d, task="regression", sigma=4.0,
-                      lam=0.0, num_centers=0)
+    M = args.centers or int(3 * n**0.5)
+    task = KernelTask(
+        "big", n=n, d=args.d, task="regression", sigma=4.0, lam=0.0, num_centers=0
+    )
     X, y = make_kernel_dataset(jax.random.PRNGKey(0), task)
     Xte, yte = make_kernel_dataset(jax.random.PRNGKey(1), task, n=5000)
 
@@ -53,10 +61,16 @@ def main():
         print(f"mesh: {dict(zip(axes, dims))} over {len(jax.devices())} devices")
 
     cfg = FalkonConfig(
-        kernel="gaussian", kernel_params=(("sigma", 4.0),),
-        lam=float(1 / n ** 0.5), num_centers=M, iterations=args.iters,
-        block_size=4096, ops_impl="pallas" if args.pallas else "jnp",
-        precision=args.precision, mesh=mesh, data_axes=data_axes,
+        kernel="gaussian",
+        kernel_params=(("sigma", 4.0),),
+        lam=float(1 / n**0.5),
+        num_centers=M,
+        iterations=args.iters,
+        block_size=4096,
+        ops_impl="pallas" if args.pallas else "jnp",
+        precision=args.precision,
+        mesh=mesh,
+        data_axes=data_axes,
     )
     print(f"n={n} d={args.d} M={M} t={args.iters} lam={cfg.lam:.2e} "
           f"impl={cfg.impl} precision={cfg.precision}")

@@ -19,9 +19,11 @@ def main():
 
     # paper hyperparameters: lam = 1/sqrt(n), M = O(sqrt(n)), t = O(log n)
     cfg = FalkonConfig(
-        kernel="gaussian", kernel_params=(("sigma", 3.0),),
+        kernel="gaussian",
+        kernel_params=(("sigma", 3.0),),
         lam=float(1 / jnp.sqrt(len(Xtr))),
-        num_centers=300, iterations=15,
+        num_centers=300,
+        iterations=15,
     )
     est, state = falkon_fit(jax.random.PRNGKey(1), Xtr, ytr, cfg)
 

@@ -34,7 +34,8 @@ def main():
     batch = {"tokens": prompts}
     if cfg.frontend == "tokens+vision":
         batch["vision_embeds"] = jax.random.normal(
-            jax.random.PRNGKey(2), (B, cfg.n_image_tokens, cfg.d_vision)) * 0.05
+            jax.random.PRNGKey(2), (B, cfg.n_image_tokens, cfg.d_vision)
+        ) * 0.05
 
     logits, cache = prefill(params, cfg, batch, S_max=P + G)
     print(f"{args.arch}: prefill of {B}x{P} tokens done "
@@ -49,8 +50,7 @@ def main():
         generated.append(tok)
     out = jnp.stack(generated, 1)
     assert out.shape == (B, G) and bool(jnp.all(out >= 0))
-    print(f"generated {G} tokens per request; first row: "
-          f"{out[0, :12].tolist()}...")
+    print(f"generated {G} tokens per request; first row: " f"{out[0, :12].tolist()}...")
 
 
 if __name__ == "__main__":

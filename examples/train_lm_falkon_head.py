@@ -24,11 +24,19 @@ from repro.train import TrainConfig, Trainer, TrainerConfig
 
 def make_lm(d_model: int, layers: int, vocab: int) -> ModelConfig:
     return ModelConfig(
-        name=f"lm-{d_model}x{layers}", family="dense",
-        n_layers=layers, d_model=d_model, n_heads=max(4, d_model // 64),
-        n_kv_heads=max(2, d_model // 128), d_head=64,
-        d_ff=4 * d_model, vocab=vocab, vocab_pad_multiple=64,
-        dtype="float32", remat="none", dense_attn_max_seq=4096,
+        name=f"lm-{d_model}x{layers}",
+        family="dense",
+        n_layers=layers,
+        d_model=d_model,
+        n_heads=max(4, d_model // 64),
+        n_kv_heads=max(2, d_model // 128),
+        d_head=64,
+        d_ff=4 * d_model,
+        vocab=vocab,
+        vocab_pad_multiple=64,
+        dtype="float32",
+        remat="none",
+        dense_attn_max_seq=4096,
     )
 
 
@@ -46,13 +54,13 @@ def main():
     n_params = cfg.param_count()
     print(f"model: {cfg.name}  ({n_params/1e6:.1f}M params)")
 
-    tcfg = TrainConfig(learning_rate=3e-4, warmup_steps=20,
-                       total_steps=args.steps)
+    tcfg = TrainConfig(learning_rate=3e-4, warmup_steps=20, total_steps=args.steps)
     with tempfile.TemporaryDirectory() as ckpt_dir:
         rcfg = TrainerConfig(ckpt_dir=ckpt_dir, ckpt_every=100)
         trainer = Trainer(cfg, tcfg, rcfg)
-        stream = token_stream(TokenStreamConfig(vocab=vocab, seq_len=args.seq,
-                                                batch=args.batch))
+        stream = token_stream(
+            TokenStreamConfig(vocab=vocab, seq_len=args.seq, batch=args.batch)
+        )
         hist = trainer.fit(stream, steps=args.steps)
         first, last = hist[0]["loss"], hist[-1]["loss"]
         print(f"train loss: {first:.3f} -> {last:.3f} over {len(hist)} steps "
@@ -62,8 +70,9 @@ def main():
 
     # ---- FALKON head on frozen features (paper Sect. 5, IMAGENET setup) ----
     # task: predict next-token top-class family from the hidden state.
-    stream = token_stream(TokenStreamConfig(vocab=vocab, seq_len=args.seq,
-                                            batch=args.batch), seed=7)
+    stream = token_stream(
+        TokenStreamConfig(vocab=vocab, seq_len=args.seq, batch=args.batch), seed=7
+    )
     feats, targets = [], []
     for _ in range(8):
         b = next(stream)
@@ -75,8 +84,13 @@ def main():
     Y = jax.nn.one_hot(ylab, 8)
     ntr = int(0.8 * X.shape[0])
 
-    fcfg = FalkonConfig(kernel="gaussian", kernel_params=(("sigma", 4.0),),
-                        lam=1e-6, num_centers=512, iterations=15)
+    fcfg = FalkonConfig(
+        kernel="gaussian",
+        kernel_params=(("sigma", 4.0),),
+        lam=1e-6,
+        num_centers=512,
+        iterations=15,
+    )
     est, state = falkon_fit(jax.random.PRNGKey(0), X[:ntr], Y[:ntr], fcfg)
     pred = jnp.argmax(est.predict(X[ntr:]), -1)
     acc = float(jnp.mean(pred == ylab[ntr:]))

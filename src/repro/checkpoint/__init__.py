@@ -1,2 +1,1 @@
-from .checkpoint import (latest_step, load_checkpoint, save_checkpoint,
-                         step_dir)
+from .checkpoint import (latest_step, load_checkpoint, save_checkpoint, step_dir)

@@ -44,8 +44,9 @@ def _flatten(tree) -> tuple[dict[str, Any], Any]:
     return {f"leaf_{i:05d}": l for i, l in enumerate(leaves)}, treedef
 
 
-def save_checkpoint(path: str, tree, step: int, *, blocking: bool = True,
-                    extra: dict | None = None) -> threading.Thread | None:
+def save_checkpoint(
+    path: str, tree, step: int, *, blocking: bool = True, extra: dict | None = None
+) -> threading.Thread | None:
     """Save ``tree`` under ``path`` (dir). Atomic via tmp + rename."""
     named, treedef = _flatten(tree)
     # pull to host before returning control (device buffers may be donated)
@@ -61,8 +62,9 @@ def save_checkpoint(path: str, tree, step: int, *, blocking: bool = True,
         codec = "zstd" if zstd is not None else "raw"
         ext = ".npy.zst" if zstd is not None else ".npy.raw"
         cctx = zstd.ZstdCompressor(level=3) if zstd is not None else None
-        manifest = {"step": int(step), "extra": extra or {}, "codec": codec,
-                    "leaves": {}}
+        manifest = {
+            "step": int(step), "extra": extra or {}, "codec": codec, "leaves": {}
+        }
         for k, arr in host.items():
             raw = arr.tobytes()
             with open(os.path.join(tmp, k + ext), "wb") as f:
@@ -118,11 +120,11 @@ def load_checkpoint(path: str, like_tree, shardings=None) -> tuple[Any, int]:
         arr = np.frombuffer(raw, dtype=meta["dtype"]).reshape(meta["shape"])
         exp_shape = tuple(getattr(like, "shape", ()) or ())
         if tuple(arr.shape) != exp_shape:
-            raise ValueError(f"shape mismatch for {k}: ckpt {arr.shape} vs "
-                             f"model {exp_shape}")
+            raise ValueError(
+                f"shape mismatch for {k}: ckpt {arr.shape} vs " f"model {exp_shape}"
+            )
         sh = shard_leaves[i]
-        out.append(jax.device_put(arr, sh) if sh is not None
-                   else jnp.asarray(arr))
+        out.append(jax.device_put(arr, sh) if sh is not None else jnp.asarray(arr))
     return jax.tree.unflatten(treedef, out), manifest["step"]
 
 

@@ -73,7 +73,8 @@ def _accepts_kwarg(fn, name: str) -> bool:
         return False
     p = params.get(name)
     return p is not None and p.kind in (
-        inspect.Parameter.POSITIONAL_OR_KEYWORD, inspect.Parameter.KEYWORD_ONLY)
+        inspect.Parameter.POSITIONAL_OR_KEYWORD, inspect.Parameter.KEYWORD_ONLY
+    )
 
 
 def cost_analysis_dict(compiled) -> dict:

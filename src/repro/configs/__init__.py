@@ -10,9 +10,18 @@ import dataclasses
 
 from .base import LayerSpec, ModelConfig, SHAPES, ShapeCell, input_specs, batch_sample
 
-from . import (gemma3_1b, gemma3_4b, granite_moe_3b_a800m,
-               jamba_1_5_large_398b, kimi_k2_1t_a32b, llama_3_2_vision_90b,
-               mamba2_370m, minicpm3_4b, musicgen_large, qwen2_72b)
+from .import (
+    gemma3_1b,
+    gemma3_4b,
+    granite_moe_3b_a800m,
+    jamba_1_5_large_398b,
+    kimi_k2_1t_a32b,
+    llama_3_2_vision_90b,
+    mamba2_370m,
+    minicpm3_4b,
+    musicgen_large,
+    qwen2_72b,
+)
 
 _MODULES = {
     "granite-moe-3b-a800m": granite_moe_3b_a800m,

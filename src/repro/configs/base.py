@@ -25,10 +25,10 @@ class ShapeCell:
 
 
 SHAPES: dict[str, ShapeCell] = {
-    "train_4k":    ShapeCell("train_4k", 4_096, 256, "train"),
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
     "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
-    "decode_32k":  ShapeCell("decode_32k", 32_768, 128, "decode"),
-    "long_500k":   ShapeCell("long_500k", 524_288, 1, "decode"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
 }
 
 
@@ -96,8 +96,8 @@ class ModelConfig:
     def __post_init__(self):
         if not self.layer_pattern:
             object.__setattr__(
-                self, "layer_pattern",
-                tuple(LayerSpec() for _ in range(self.n_layers)))
+                self, "layer_pattern", tuple(LayerSpec() for _ in range(self.n_layers))
+            )
         assert len(self.layer_pattern) == self.n_layers
 
     @property
@@ -157,8 +157,9 @@ class ModelConfig:
                 n += self.d_model * self.q_lora_rank
                 n += self.q_lora_rank * self.n_heads * qd
                 n += self.d_model * (self.kv_lora_rank + self.qk_rope_dim)
-                n += self.kv_lora_rank * self.n_heads * (self.qk_nope_dim +
-                                                         self.v_head_dim)
+                n += self.kv_lora_rank * self.n_heads * (
+                    self.qk_nope_dim + self.v_head_dim
+                )
                 n += self.n_heads * self.v_head_dim * self.d_model
             else:
                 n += self.d_model * self.n_heads * self.d_head      # q
@@ -199,7 +200,8 @@ def input_specs(cfg: ModelConfig, shape: str) -> dict[str, jax.ShapeDtypeStruct]
             }
         if cfg.frontend == "tokens+vision":
             specs["vision_embeds"] = jax.ShapeDtypeStruct(
-                (B, cfg.n_image_tokens, cfg.d_vision), f)
+                (B, cfg.n_image_tokens, cfg.d_vision), f
+            )
         return specs
 
     # decode: one new token + a pre-filled cache of S tokens (cache specs are

@@ -6,10 +6,20 @@ from .base import ModelConfig
 
 def get_config() -> ModelConfig:
     return ModelConfig(
-        name="minicpm3-4b", family="dense",
-        n_layers=62, d_model=2560, n_heads=40, n_kv_heads=40, d_head=64,
-        d_ff=6400, vocab=73448,
-        use_mla=True, q_lora_rank=768, kv_lora_rank=256,
-        qk_nope_dim=64, qk_rope_dim=32, v_head_dim=64,
+        name="minicpm3-4b",
+        family="dense",
+        n_layers=62,
+        d_model=2560,
+        n_heads=40,
+        n_kv_heads=40,
+        d_head=64,
+        d_ff=6400,
+        vocab=73448,
+        use_mla=True,
+        q_lora_rank=768,
+        kv_lora_rank=256,
+        qk_nope_dim=64,
+        qk_rope_dim=32,
+        v_head_dim=64,
         skip_shapes=("long_500k",),
     )

@@ -9,9 +9,17 @@ from .base import ModelConfig
 
 def get_config() -> ModelConfig:
     return ModelConfig(
-        name="musicgen-large", family="audio",
-        n_layers=48, d_model=2048, n_heads=32, n_kv_heads=32, d_head=64,
-        d_ff=8192, vocab=2048, n_codebooks=4,
-        frontend="embeds", act="gelu",
+        name="musicgen-large",
+        family="audio",
+        n_layers=48,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=32,
+        d_head=64,
+        d_ff=8192,
+        vocab=2048,
+        n_codebooks=4,
+        frontend="embeds",
+        act="gelu",
         skip_shapes=("long_500k",),
     )

@@ -6,9 +6,17 @@ from .base import ModelConfig
 
 def get_config() -> ModelConfig:
     return ModelConfig(
-        name="qwen2-72b", family="dense",
-        n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, d_head=128,
-        d_ff=29568, vocab=152064, qkv_bias=True,
-        fsdp=True, optimizer="adafactor",
+        name="qwen2-72b",
+        family="dense",
+        n_layers=80,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_head=128,
+        d_ff=29568,
+        vocab=152064,
+        qkv_bias=True,
+        fsdp=True,
+        optimizer="adafactor",
         skip_shapes=("long_500k",),
     )

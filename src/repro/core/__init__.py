@@ -6,6 +6,11 @@ Public API:
     falkon_fit_path, falkon_solve_path, FalkonPathResult,
     falkon_fit_path_streaming, falkon_solve_path_streaming
         (lam-path: one data sweep serves every regularizer)
+    falkon_fit_minibatch, falkon_fit_minibatch_streaming,
+    MinibatchConfig, MinibatchResult, MinibatchState,
+    minibatch_solve, minibatch_solve_stream
+        (delayed-projection stochastic solve; FalkonEstimator.partial_fit
+        warm-starts it from a deployed model at chunk-sweep cost)
     make_preconditioner, Preconditioner
     make_preconditioner_path, PreconditionerPath   (batched (L,q,q) A stack)
     conjugate_gradient, conjugate_gradient_host
@@ -24,24 +29,59 @@ Public API:
 Kernel compute is pluggable: the ``repro.ops`` KernelOps registry ("jnp"
 reference / "pallas" fused) backs every sweep, apply and gram above.
 """
-from .baselines import (krr_direct, krr_gradient, nystrom_direct,
-                        nystrom_gradient)
-from .cg import CGResult, conjugate_gradient, conjugate_gradient_host
-from .falkon import (FalkonConfig, FalkonEstimator, FalkonPathResult,
-                     FalkonPathState, FalkonState, falkon_fit,
-                     falkon_fit_path, falkon_fit_path_streaming,
-                     falkon_fit_streaming, falkon_solve, falkon_solve_path,
-                     falkon_solve_path_streaming, falkon_solve_streaming)
-from .kernels import (GaussianKernel, KernelFn, KernelSpec, LaplacianKernel,
-                      LinearKernel, Matern32Kernel, PolynomialKernel,
-                      available_kernels, make_kernel, spec_of)
-from .matvec import (knm_apply, knm_matvec, streaming_knm_apply,
-                     streaming_knm_matvec)
-from .nystrom import (LeveragePilot, NystromCenters,
-                      approximate_leverage_scores,
-                      approximate_leverage_scores_path, build_leverage_pilot,
-                      exact_leverage_scores, leverage_score_centers,
-                      leverage_scores_from_pilot, select_centers,
-                      uniform_centers)
-from .preconditioner import (Preconditioner, PreconditionerPath,
-                             make_preconditioner, make_preconditioner_path)
+from .baselines import (krr_direct, krr_gradient, nystrom_direct, nystrom_gradient)
+from .cg import (
+    CGResult, active_columns, col_dot, conjugate_gradient, conjugate_gradient_host
+)
+from .falkon import (
+    FalkonConfig,
+    FalkonEstimator,
+    FalkonPathResult,
+    FalkonPathState,
+    FalkonState,
+    falkon_fit,
+    falkon_fit_minibatch,
+    falkon_fit_minibatch_streaming,
+    falkon_fit_path,
+    falkon_fit_path_streaming,
+    falkon_fit_streaming,
+    falkon_solve,
+    falkon_solve_path,
+    falkon_solve_path_streaming,
+    falkon_solve_streaming,
+)
+from .minibatch import (
+    MinibatchConfig,
+    MinibatchResult,
+    MinibatchState,
+    minibatch_solve,
+    minibatch_solve_stream,
+)
+from .kernels import (
+    GaussianKernel,
+    KernelFn,
+    KernelSpec,
+    LaplacianKernel,
+    LinearKernel,
+    Matern32Kernel,
+    PolynomialKernel,
+    available_kernels,
+    make_kernel,
+    spec_of,
+)
+from .matvec import (knm_apply, knm_matvec, streaming_knm_apply, streaming_knm_matvec)
+from .nystrom import (
+    LeveragePilot,
+    NystromCenters,
+    approximate_leverage_scores,
+    approximate_leverage_scores_path,
+    build_leverage_pilot,
+    exact_leverage_scores,
+    leverage_score_centers,
+    leverage_scores_from_pilot,
+    select_centers,
+    uniform_centers,
+)
+from .preconditioner import (
+    Preconditioner, PreconditionerPath, make_preconditioner, make_preconditioner_path
+)

@@ -29,8 +29,9 @@ class KernelPredictor(NamedTuple):
     kernel: KernelFn
 
     def predict(self, X: Array, block_size: int = 2048) -> Array:
-        return knm_apply(X, self.centers, self.alpha, self.kernel,
-                         block_size=block_size)
+        return knm_apply(
+            X, self.centers, self.alpha, self.kernel, block_size=block_size
+        )
 
 
 def krr_direct(X: Array, y: Array, kernel: KernelFn, lam: float) -> KernelPredictor:
@@ -40,8 +41,9 @@ def krr_direct(X: Array, y: Array, kernel: KernelFn, lam: float) -> KernelPredic
     return KernelPredictor(centers=X, alpha=alpha, kernel=kernel)
 
 
-def krr_gradient(X: Array, y: Array, kernel: KernelFn, lam: float,
-                 t: int, tau: float | None = None) -> KernelPredictor:
+def krr_gradient(
+    X: Array, y: Array, kernel: KernelFn, lam: float, t: int, tau: float | None = None
+) -> KernelPredictor:
     """Eq. (6): a_{k} = a_{k-1} - tau/n [ (K a - y) + lam n a ]."""
     n = X.shape[0]
     Knn = kernel(X, X)
@@ -58,8 +60,14 @@ def krr_gradient(X: Array, y: Array, kernel: KernelFn, lam: float,
     return KernelPredictor(centers=X, alpha=a, kernel=kernel)
 
 
-def nystrom_direct(X: Array, y: Array, centers: Array, kernel: KernelFn,
-                   lam: float, jitter: float = 1e-9) -> KernelPredictor:
+def nystrom_direct(
+    X: Array,
+    y: Array,
+    centers: Array,
+    kernel: KernelFn,
+    lam: float,
+    jitter: float = 1e-9,
+) -> KernelPredictor:
     """Eq. (8): (K_nM^T K_nM + lam n K_MM) a = K_nM^T y, dense direct solve."""
     n = X.shape[0]
     KnM = kernel(X, centers)
@@ -73,24 +81,33 @@ def nystrom_direct(X: Array, y: Array, centers: Array, kernel: KernelFn,
     return KernelPredictor(centers=centers, alpha=alpha, kernel=kernel)
 
 
-def nystrom_gradient(X: Array, y: Array, centers: Array, kernel: KernelFn,
-                     lam: float, t: int, block_size: int = 2048) -> KernelPredictor:
+def nystrom_gradient(
+    X: Array,
+    y: Array,
+    centers: Array,
+    kernel: KernelFn,
+    lam: float,
+    t: int,
+    block_size: int = 2048,
+) -> KernelPredictor:
     """NYTRO-like: plain gradient descent on the (unpreconditioned) Nystrom
     objective. Needs O(cond(H)) iterations — the gap FALKON closes."""
     n = X.shape[0]
     M = centers.shape[0]
     KMM = kernel(centers, centers)
     # crude step size from H's norm upper bound
-    KnM_norm_sq = knm_matvec(X, centers, jnp.ones((M,), X.dtype) / M, None,
-                             kernel, block_size=block_size)
+    KnM_norm_sq = knm_matvec(
+        X, centers, jnp.ones((M,), X.dtype) / M, None, kernel, block_size=block_size
+    )
     op_bound = jnp.linalg.norm(KnM_norm_sq) * M / n + lam * jnp.linalg.norm(KMM, ord=2)
     tau = 1.0 / jnp.maximum(op_bound, 1e-30)
 
     def step(a, _):
         Ha = knm_matvec(X, centers, a, None, kernel, block_size=block_size) / n \
             + lam * (KMM @ a)
-        z = knm_matvec(X, centers, jnp.zeros_like(a), y, kernel,
-                       block_size=block_size) / n
+        z = knm_matvec(
+            X, centers, jnp.zeros_like(a), y, kernel, block_size=block_size
+        ) / n
         return a - tau * (Ha - z), None
 
     a, _ = jax.lax.scan(step, jnp.zeros((M,) + y.shape[1:], X.dtype), None, length=t)

@@ -50,8 +50,30 @@ class CGResult(NamedTuple):
     iterations: Array      # scalar int: iterations actually applied (tol-aware)
 
 
-def _col_dot(u, v):
-    return jnp.sum(u * v, axis=0)  # per-column inner products
+def col_dot(u, v):
+    """Per-column inner products: (q,) -> scalar, (q, p) -> (p,).
+
+    The reduction every per-column scalar of the CG recurrence is built
+    from; the mini-batch solver reuses it for its per-projection gradient
+    norms so the two solvers share one definition of "column magnitude".
+    """
+    return jnp.sum(u * v, axis=0)
+
+
+_col_dot = col_dot  # internal alias kept for call-site symmetry below
+
+
+def active_columns(rs, tol_sq):
+    """The per-column "still iterating" mask both solvers share.
+
+    A column whose squared residual/gradient norm ``rs`` has dropped to
+    ``tol_sq`` (floored at 1e-30 so a tol of 0 still masks exact zeros,
+    whose rs/denom ratios would otherwise overflow) is DONE: CG turns its
+    update into a masked no-op (``_masked_cg_update``), and the mini-batch
+    projection freezes its beta/velocity the same way — converged columns
+    of a multi-rhs block must not keep taking noisy stochastic steps.
+    """
+    return rs > jnp.maximum(tol_sq, 1e-30)
 
 
 def _masked_cg_update(x, r, p, rs, Ap, tol_sq, storage=None):
@@ -73,18 +95,16 @@ def _masked_cg_update(x, r, p, rs, Ap, tol_sq, storage=None):
         f32 = jnp.float32
         x, r, p, Ap = (a.astype(f32) for a in (x, r, p, Ap))
         rs = rs.astype(f32)
-    active = rs > jnp.maximum(tol_sq, 1e-30)
+    active = active_columns(rs, tol_sq)
     denom = _col_dot(p, Ap)
-    a = jnp.where(active & (denom > 1e-38),
-                  rs / jnp.maximum(denom, 1e-38), 0.0)
+    a = jnp.where(active & (denom > 1e-38), rs / jnp.maximum(denom, 1e-38), 0.0)
     x_new = x + a * p
     r_new = r - a * Ap
     rs_new = _col_dot(r_new, r_new)
     beta = jnp.where(active, rs_new / jnp.maximum(rs, 1e-38), 0.0)
     p_new = r_new + beta * p
     sel = lambda new, old: jnp.where(active, new, old)
-    x, r, p, rs = (sel(x_new, x), sel(r_new, r), sel(p_new, p),
-                   sel(rs_new, rs))
+    x, r, p, rs = (sel(x_new, x), sel(r_new, r), sel(p_new, p), sel(rs_new, rs))
     if storage is not None:
         x, r, p = (a.astype(storage) for a in (x, r, p))
     return x, r, p, rs, active
@@ -113,17 +133,18 @@ def _scan_driver(matvec, state, t, tol_sq, storage, res0):
     def step(carry, _):
         x, r, p, rs, it = carry
         Ap = matvec(p)
-        x, r, p, rs, active = _masked_cg_update(x, r, p, rs, Ap, tol_sq,
-                                                storage=storage)
+        x, r, p, rs, active = _masked_cg_update(
+            x, r, p, rs, Ap, tol_sq, storage=storage
+        )
         carry = (x, r, p, rs, it + jnp.any(active).astype(jnp.int32))
         return carry, jnp.sqrt(jnp.maximum(rs, 0.0))
 
     (x, r, p, rs, it), res_hist = jax.lax.scan(
         step, state + (jnp.asarray(0, jnp.int32),), None, length=t
     )
-    return CGResult(x=x,
-                    residual_norms=jnp.concatenate([res0, res_hist], axis=0),
-                    iterations=it)
+    return CGResult(
+        x=x, residual_norms=jnp.concatenate([res0, res_hist], axis=0), iterations=it
+    )
 
 
 def _host_driver(matvec, state, t, tol_sq, storage, res0):
@@ -134,16 +155,17 @@ def _host_driver(matvec, state, t, tol_sq, storage, res0):
     residuals = [res0]
     it = 0
     for _ in range(t):
-        if not bool(jnp.any(rs > jnp.maximum(tol_sq, 1e-30))):
+        if not bool(jnp.any(active_columns(rs, tol_sq))):
             break  # every column converged — skip the remaining data passes
         Ap = matvec(p)
-        x, r, p, rs, _ = _masked_cg_update(x, r, p, rs, Ap, tol_sq,
-                                           storage=storage)
+        x, r, p, rs, _ = _masked_cg_update(x, r, p, rs, Ap, tol_sq, storage=storage)
         residuals.append(jnp.sqrt(jnp.maximum(rs, 0.0))[None])
         it += 1
-    return CGResult(x=x,
-                    residual_norms=jnp.concatenate(residuals, axis=0),
-                    iterations=jnp.asarray(it, jnp.int32))
+    return CGResult(
+        x=x,
+        residual_norms=jnp.concatenate(residuals, axis=0),
+        iterations=jnp.asarray(it, jnp.int32),
+    )
 
 
 def _cg_solve(matvec, b, t, tol, x0, storage_dtype, driver):

@@ -49,14 +49,19 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from repro.ops import (DistributedOps, KernelOps, available_ops, get_ops,
-                       resolve_precision)
+from repro.ops import (
+    DistributedOps, KernelOps, available_ops, get_ops, resolve_precision
+)
 
 from .cg import conjugate_gradient, conjugate_gradient_host
 from .kernels import KernelFn, make_kernel
+from .minibatch import (
+    MinibatchConfig, MinibatchResult, minibatch_solve, minibatch_solve_stream
+)
 from .nystrom import NystromCenters, select_centers
-from .preconditioner import (Preconditioner, PreconditionerPath,
-                             make_preconditioner, make_preconditioner_path)
+from .preconditioner import (
+    Preconditioner, PreconditionerPath, make_preconditioner, make_preconditioner_path
+)
 
 Array = jax.Array
 
@@ -97,8 +102,7 @@ class FalkonConfig:
         """Fail on an unknown backend/policy/scheme at CONFIG time, naming
         the options — not deep inside ``get_ops`` at solve time."""
         if self.matvec_impl is not None:
-            warnings.warn(_MATVEC_IMPL_DEPRECATION, DeprecationWarning,
-                          stacklevel=3)
+            warnings.warn(_MATVEC_IMPL_DEPRECATION, DeprecationWarning, stacklevel=3)
         if self.impl not in available_ops():
             raise ValueError(
                 f"unknown ops_impl {self.impl!r}; registered KernelOps "
@@ -112,8 +116,8 @@ class FalkonConfig:
             missing = [a for a in self.data_axes if a not in self.mesh.shape]
             if missing:
                 raise ValueError(
-                    f"data_axes {missing} not in mesh axes "
-                    f"{tuple(self.mesh.shape)}")
+                    f"data_axes {missing} not in mesh axes " f"{tuple(self.mesh.shape)}"
+                )
 
     @property
     def impl(self) -> str:
@@ -127,9 +131,12 @@ class FalkonConfig:
         """The backend every stage of a fit runs on — wrapped in
         :class:`DistributedOps` when a ``mesh`` is configured, so sharding
         is decided here once and inherited by every fit/predict path."""
-        ops = get_ops(self.impl, kernel if kernel is not None
-                      else self.make_kernel(),
-                      block_size=self.block_size, precision=self.precision)
+        ops = get_ops(
+            self.impl,
+            kernel if kernel is not None else self.make_kernel(),
+            block_size=self.block_size,
+            precision=self.precision,
+        )
         if self.mesh is not None:
             ops = DistributedOps(ops, self.mesh, self.data_axes)
         return ops
@@ -164,6 +171,11 @@ class FalkonEstimator:
     block_size: int = dataclasses.field(metadata=dict(static=True), default=2048)
     ops_impl: str = dataclasses.field(metadata=dict(static=True), default="jnp")
     precision: str = dataclasses.field(metadata=dict(static=True), default="fp32")
+    # Fit-time state the incremental path needs: the factored preconditioner
+    # and its lam. None on estimators built before PR 8 / by hand — predict
+    # works regardless; partial_fit refuses with guidance.
+    precond: Preconditioner | None = None
+    lam: float | None = dataclasses.field(metadata=dict(static=True), default=None)
 
     @functools.cached_property
     def _ops(self) -> KernelOps:
@@ -172,8 +184,12 @@ class FalkonEstimator:
         # backend + resolved precision policy are built ONCE, not rebuilt
         # via get_ops on every predict() call. Both predict paths and the
         # serving layer route through this one object.
-        return get_ops(self.ops_impl, self.kernel, block_size=self.block_size,
-                       precision=self.precision)
+        return get_ops(
+            self.ops_impl,
+            self.kernel,
+            block_size=self.block_size,
+            precision=self.precision,
+        )
 
     def predict(self, X: Array) -> Array:
         return self._ops.apply(X, self.centers, self.alpha)
@@ -190,8 +206,67 @@ class FalkonEstimator:
         — X need never be device-resident at once (see repro.data.streaming).
         """
         from repro.data.streaming import streaming_apply
-        return streaming_apply(self._jitted_ops, loader, self.centers,
-                               self.alpha)
+        return streaming_apply(self._jitted_ops, loader, self.centers, self.alpha)
+
+    def partial_fit(
+        self,
+        X_tail: Array,
+        y_tail: Array,
+        minibatch: "MinibatchConfig | None" = None,
+        *,
+        key: Array | None = None,
+    ) -> "FalkonEstimator":
+        """Refresh the model from a data tail WITHOUT a full refit.
+
+        The production scenario the exact solver can't touch: a serving
+        model absorbing a live-traffic tail. Everything O(M^3)/O(nM) that a
+        refit would redo is REUSED — the Nystrom centers, the factored
+        preconditioner (its ``FactorPlan`` routing was decided at fit time)
+        and the deployed alpha, pulled back to the preconditioned space via
+        ``Preconditioner.beta_of_coeffs`` as the warm start. The tail then
+        trains with the delayed-projection mini-batch rule at chunk-sweep
+        cost per step.
+
+        Returns a NEW estimator (this class is a frozen pytree): same
+        centers object, same alpha shape/dtype — so a serving tier that
+        swaps it behind compiled applies sees ZERO retraces by construction
+        (asserted via the serve trace counter in tests/test_minibatch.py).
+        """
+        if self.precond is None or self.lam is None:
+            raise ValueError(
+                "partial_fit needs the fit-time preconditioner, but this "
+                "estimator does not carry one (it was built by hand or by a "
+                "pre-partial_fit fit). Refit with falkon_fit / "
+                "falkon_fit_minibatch / falkon_fit_streaming, which attach "
+                "precond and lam to the estimator."
+            )
+        mb = minibatch if minibatch is not None else MinibatchConfig()
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        dt = self.centers.dtype
+        X_tail = jnp.asarray(X_tail, dt)
+        y_tail = jnp.asarray(y_tail, dt)
+        want = (self.precond.q,) + y_tail.shape[1:]
+        beta0 = self.precond.beta_of_coeffs(self.alpha)
+        if beta0.shape != want:
+            raise ValueError(
+                f"y_tail implies a {want} iterate but the deployed alpha "
+                f"warm-starts a {beta0.shape} one — the tail's output width "
+                f"must match the fitted model's"
+            )
+        result = minibatch_solve(
+            X_tail,
+            y_tail,
+            self.centers,
+            self.precond,
+            self.lam,
+            mb,
+            ops=self._ops,
+            key=key,
+            beta0=beta0.astype(dt),
+        )
+        alpha = result.alpha.astype(self.alpha.dtype)
+        return dataclasses.replace(self, alpha=alpha)
 
     def __call__(self, X: Array) -> Array:
         return self.predict(X)
@@ -282,8 +357,7 @@ def falkon_solve(
     n = X.shape[0]
     if ops is None:
         if matvec_impl is not None:
-            warnings.warn(_MATVEC_IMPL_DEPRECATION, DeprecationWarning,
-                          stacklevel=2)
+            warnings.warn(_MATVEC_IMPL_DEPRECATION, DeprecationWarning, stacklevel=2)
         impl = matvec_impl if matvec_impl is not None else ops_impl
         ops = get_ops(impl, kernel, block_size=block_size, precision=precision)
 
@@ -297,14 +371,18 @@ def falkon_solve(
     W = _falkon_operator(matvec, precond, lam, n)
     b = precond.left(rhs_sweep() / n)             # r = B^T z / n (Alg. 1)
 
-    cg = conjugate_gradient(W, b, t, tol=tol,
-                            storage_dtype=_cg_storage(ops))
+    cg = conjugate_gradient(W, b, t, tol=tol, storage_dtype=_cg_storage(ops))
     alpha = precond.coeffs(cg.x)
 
     if not estimate_cond:
-        return FalkonState(centers=centers, precond=precond, beta=cg.x,
-                           alpha=alpha, residual_norms=cg.residual_norms,
-                           cond_estimate=jnp.zeros((), X.dtype))
+        return FalkonState(
+            centers=centers,
+            precond=precond,
+            beta=cg.x,
+            alpha=alpha,
+            residual_norms=cg.residual_norms,
+            cond_estimate=jnp.zeros((), X.dtype),
+        )
 
     # Power-iteration estimate of cond(W) — cheap diagnostic for Thm 2.
     def power(mv, q, iters=12):
@@ -322,8 +400,14 @@ def falkon_solve(
     )
     cond = jnp.abs(lam_max) / jnp.maximum(jnp.abs(lam_min), 1e-30)
 
-    return FalkonState(centers=centers, precond=precond, beta=cg.x, alpha=alpha,
-                       residual_norms=cg.residual_norms, cond_estimate=cond)
+    return FalkonState(
+        centers=centers,
+        precond=precond,
+        beta=cg.x,
+        alpha=alpha,
+        residual_norms=cg.residual_norms,
+        cond_estimate=cond,
+    )
 
 
 def _solve_path_core(
@@ -379,14 +463,19 @@ def falkon_solve_path(
         return ops.sweep(X, centers, zeros, y)
 
     cg, alpha_flat = _solve_path_core(
-        matvec, rhs_sweep, precond, n, t, tol=tol,
-        storage=_cg_storage(ops), host=False)
+        matvec, rhs_sweep, precond, n, t, tol=tol, storage=_cg_storage(ops), host=False
+    )
     alphas = precond.split(alpha_flat)            # (L, M, p)
     if y.ndim == 1:
         alphas = alphas[..., 0]
-    return FalkonPathState(centers=centers, precond=precond, beta=cg.x,
-                           alphas=alphas, residual_norms=cg.residual_norms,
-                           lams=precond.lams)
+    return FalkonPathState(
+        centers=centers,
+        precond=precond,
+        beta=cg.x,
+        alphas=alphas,
+        residual_norms=cg.residual_norms,
+        lams=precond.lams,
+    )
 
 
 # ----------------------------------------------------------------------------
@@ -403,10 +492,15 @@ def _stage_select(
     """Stage 1 — Nystrom center selection. ``lam`` overrides ``config.lam``
     for leverage scoring (the path fit scores at a grid-reference lam)."""
     M = min(config.num_centers, X.shape[0])
-    return select_centers(key, X, M, kernel=kernel,
-                          lam=config.lam if lam is None else lam,
-                          scheme=config.center_selection,
-                          pilot_size=config.pilot_size)
+    return select_centers(
+        key,
+        X,
+        M,
+        kernel=kernel,
+        lam=config.lam if lam is None else lam,
+        scheme=config.center_selection,
+        pilot_size=config.pilot_size,
+    )
 
 
 def _stage_gram(ops: KernelOps, centers: Array) -> Array:
@@ -425,10 +519,10 @@ def _stage_precondition(
     """Stage 3 — factorization. A scalar ``lam`` builds the single
     :class:`Preconditioner`; a grid builds the batched
     :class:`PreconditionerPath` (shared T/Q/D, (L, q, q) A stack)."""
-    build = make_preconditioner if jnp.ndim(lam) == 0 else \
-        make_preconditioner_path
-    return build(KMM, lam, n, D=D, jitter=config.jitter,
-                 rank_deficient=config.rank_deficient)
+    build = make_preconditioner if jnp.ndim(lam) == 0 else make_preconditioner_path
+    return build(
+        KMM, lam, n, D=D, jitter=config.jitter, rank_deficient=config.rank_deficient
+    )
 
 
 def _resolve_ops(
@@ -472,11 +566,26 @@ def _stage_wrap(
     alpha: Array,
     kernel: KernelFn,
     config: FalkonConfig,
+    *,
+    precond: Preconditioner | None = None,
+    lam: float | None = None,
 ) -> FalkonEstimator:
-    """Stage 5 — bind coefficients + backend knobs into the estimator."""
-    return FalkonEstimator(centers=centers, alpha=alpha, kernel=kernel,
-                           block_size=config.block_size, ops_impl=config.impl,
-                           precision=config.precision)
+    """Stage 5 — bind coefficients + backend knobs into the estimator.
+
+    ``precond``/``lam`` attach the fit-time factorization so the estimator
+    can ``partial_fit`` later; every fit variant passes them (the path fit
+    passes each system's single-lam view). Omitting them still yields a
+    fully serving-capable estimator."""
+    return FalkonEstimator(
+        centers=centers,
+        alpha=alpha,
+        kernel=kernel,
+        block_size=config.block_size,
+        ops_impl=config.impl,
+        precision=config.precision,
+        precond=precond,
+        lam=None if lam is None else float(lam),
+    )
 
 
 def falkon_fit(
@@ -501,8 +610,7 @@ def falkon_fit(
     when given (the instrumentation seam: e.g. ``repro.ops.CountingOps``).
     """
     if mesh is not None:
-        config = dataclasses.replace(config, mesh=mesh,
-                                     data_axes=tuple(data_axes))
+        config = dataclasses.replace(config, mesh=mesh, data_axes=tuple(data_axes))
     kernel = config.make_kernel()
     ops = _resolve_ops(config, kernel, ops)
     dt = jnp.dtype(config.dtype)
@@ -515,11 +623,21 @@ def falkon_fit(
     precond = _stage_precondition(KMM, config.lam, n, config, D=sel.D)
 
     state = falkon_solve(
-        X, y, sel.centers, precond, kernel, config.lam, config.iterations,
-        block_size=config.block_size, tol=config.tol,
-        estimate_cond=config.estimate_cond, ops=ops,
+        X,
+        y,
+        sel.centers,
+        precond,
+        kernel,
+        config.lam,
+        config.iterations,
+        block_size=config.block_size,
+        tol=config.tol,
+        estimate_cond=config.estimate_cond,
+        ops=ops,
     )
-    est = _stage_wrap(sel.centers, state.alpha, kernel, config)
+    est = _stage_wrap(
+        sel.centers, state.alpha, kernel, config, precond=precond, lam=config.lam
+    )
     return est, state
 
 
@@ -601,22 +719,29 @@ def falkon_fit_path(
     lam_ref = float(jnp.exp(log_mean))
     sel = _stage_select(key, X, config, kernel, lam=lam_ref)
     KMM = _stage_gram(ops, sel.centers)
-    precond = _stage_precondition(KMM, jnp.asarray(lam_vals, dt), n, config,
-                                  D=sel.D)
+    precond = _stage_precondition(KMM, jnp.asarray(lam_vals, dt), n, config, D=sel.D)
 
-    state = falkon_solve_path(X, y, sel.centers, precond, config.iterations,
-                              ops=ops, tol=config.tol)
-    ests = tuple(_stage_wrap(sel.centers, state.alphas[i], kernel, config)
+    state = falkon_solve_path(
+        X, y, sel.centers, precond, config.iterations, ops=ops, tol=config.tol
+    )
+    ests = tuple(_stage_wrap(sel.centers, state.alphas[i], kernel, config,
+                             precond=precond.system(i), lam=lam_vals[i])
                  for i in range(len(lam_vals)))
 
     val_scores = best = None
     if (X_val is None) != (y_val is None):
         raise ValueError("X_val and y_val must be given together")
     if X_val is not None:
-        val_scores, best = _score_path(ops, sel.centers, state.alphas,
-                                       X_val.astype(dt), y_val.astype(dt))
-    return FalkonPathResult(estimators=ests, state=state, lams=lam_vals,
-                            val_scores=val_scores, best_index=best)
+        val_scores, best = _score_path(
+            ops, sel.centers, state.alphas, X_val.astype(dt), y_val.astype(dt)
+        )
+    return FalkonPathResult(
+        estimators=ests,
+        state=state,
+        lams=lam_vals,
+        val_scores=val_scores,
+        best_index=best,
+    )
 
 
 # ----------------------------------------------------------------------------
@@ -659,12 +784,16 @@ def falkon_solve_streaming(
 
     W = _falkon_operator(matvec, precond, lam, n)
     b = precond.left(rhs_sweep() / n)
-    cg = conjugate_gradient_host(W, b, t, tol=tol,
-                                 storage_dtype=_cg_storage(ops))
+    cg = conjugate_gradient_host(W, b, t, tol=tol, storage_dtype=_cg_storage(ops))
     alpha = precond.coeffs(cg.x)
-    return FalkonState(centers=centers, precond=precond, beta=cg.x,
-                       alpha=alpha, residual_norms=cg.residual_norms,
-                       cond_estimate=jnp.zeros((), b.dtype))
+    return FalkonState(
+        centers=centers,
+        precond=precond,
+        beta=cg.x,
+        alpha=alpha,
+        residual_norms=cg.residual_norms,
+        cond_estimate=jnp.zeros((), b.dtype),
+    )
 
 
 def falkon_solve_path_streaming(
@@ -699,14 +828,19 @@ def falkon_solve_path_streaming(
         return streaming_sweep(jops, loader, centers, zeros, use_targets=True)
 
     cg, alpha_flat = _solve_path_core(
-        matvec, rhs_sweep, precond, n, t, tol=tol,
-        storage=_cg_storage(ops), host=True)
+        matvec, rhs_sweep, precond, n, t, tol=tol, storage=_cg_storage(ops), host=True
+    )
     alphas = precond.split(alpha_flat)
     if not tuple(out_dim):
         alphas = alphas[..., 0]
-    return FalkonPathState(centers=centers, precond=precond, beta=cg.x,
-                           alphas=alphas, residual_norms=cg.residual_norms,
-                           lams=precond.lams)
+    return FalkonPathState(
+        centers=centers,
+        precond=precond,
+        beta=cg.x,
+        alphas=alphas,
+        residual_norms=cg.residual_norms,
+        lams=precond.lams,
+    )
 
 
 def _streaming_setup(
@@ -749,8 +883,9 @@ def _streaming_setup(
     # storage width — half the PCIe/DMA traffic of an fp32 stream; the
     # backend would only re-quantize an fp32 chunk on arrival anyway.
     pol = getattr(ops, "policy", None)
-    loader_dt = (jnp.dtype(pol.storage)
-                 if pol is not None and pol.storage != "float32" else dt)
+    loader_dt = (
+        jnp.dtype(pol.storage) if pol is not None and pol.storage != "float32" else dt
+    )
     loader = StreamingLoader(source, prefetch=prefetch, dtype=loader_dt)
     # y's trailing shape from one peeked chunk (hosts only, no transfer)
     out_dim: tuple = ()
@@ -786,15 +921,24 @@ def falkon_fit_streaming(
     compute.
     """
     kernel, ops, centers, loader, out_dim, n = _streaming_setup(
-        key, source, config, prefetch=prefetch, centers=centers, ops=ops)
+        key, source, config, prefetch=prefetch, centers=centers, ops=ops
+    )
     KMM = _stage_gram(ops, centers)
     precond = _stage_precondition(KMM, config.lam, n, config)
 
     state = falkon_solve_streaming(
-        loader, centers, precond, config.lam, config.iterations,
-        ops=ops, out_dim=out_dim, tol=config.tol,
+        loader,
+        centers,
+        precond,
+        config.lam,
+        config.iterations,
+        ops=ops,
+        out_dim=out_dim,
+        tol=config.tol,
     )
-    est = _stage_wrap(centers, state.alpha, kernel, config)
+    est = _stage_wrap(
+        centers, state.alpha, kernel, config, precond=precond, lam=config.lam
+    )
     return est, state
 
 
@@ -818,16 +962,137 @@ def falkon_fit_path_streaming(
     """
     lam_vals = _check_lams(lams)
     kernel, ops, centers, loader, out_dim, n = _streaming_setup(
-        key, source, config, prefetch=prefetch, centers=centers, ops=ops)
+        key, source, config, prefetch=prefetch, centers=centers, ops=ops
+    )
     dt = jnp.dtype(config.dtype)
     KMM = _stage_gram(ops, centers)
     precond = _stage_precondition(KMM, jnp.asarray(lam_vals, dt), n, config)
 
     state = falkon_solve_path_streaming(
-        loader, centers, precond, config.iterations,
-        ops=ops, out_dim=out_dim, tol=config.tol,
+        loader,
+        centers,
+        precond,
+        config.iterations,
+        ops=ops,
+        out_dim=out_dim,
+        tol=config.tol,
     )
-    ests = tuple(_stage_wrap(centers, state.alphas[i], kernel, config)
+    ests = tuple(_stage_wrap(centers, state.alphas[i], kernel, config,
+                             precond=precond.system(i), lam=lam_vals[i])
                  for i in range(len(lam_vals)))
-    return FalkonPathResult(estimators=ests, state=state, lams=lam_vals,
-                            val_scores=None, best_index=None)
+    return FalkonPathResult(
+        estimators=ests, state=state, lams=lam_vals, val_scores=None, best_index=None
+    )
+
+
+# ----------------------------------------------------------------------------
+# Mini-batch fit: delayed-projection stochastic solve (see core/minibatch.py)
+# ----------------------------------------------------------------------------
+def falkon_fit_minibatch(
+    key: Array,
+    X: Array,
+    y: Array,
+    config: FalkonConfig,
+    minibatch: MinibatchConfig | None = None,
+    *,
+    centers: Array | None = None,
+    ops: KernelOps | None = None,
+    beta0: Array | None = None,
+) -> tuple[FalkonEstimator, MinibatchResult]:
+    """Fit by stochastic preconditioned sweeps with delayed projections.
+
+    Same select -> gram -> precondition pipeline as ``falkon_fit`` — the
+    preconditioner is factored ONCE (through the same ``FactorPlan``
+    in-core/blocked routing) and reused by every projection — but the solve
+    stage is the mini-batch driver: per step one chunk-sized sweep (not a
+    full O(nM) pass), a projection every ``minibatch.project_every`` steps,
+    epoch reshuffling, tail averaging. ``config.iterations``/``config.tol``
+    are CG knobs and are ignored here; the budget lives in ``minibatch``
+    (``epochs`` x ``chunk_rows`` x ``project_every``). ``centers`` overrides
+    selection (parity tests / shared-center comparisons), ``ops`` is the
+    instrumentation seam, ``beta0`` warm-starts (what ``partial_fit``
+    passes). Prefer this over full CG when epochs-to-target-MSE x n is
+    smaller than (iterations + 1) x n — see README's step-cost model.
+    """
+    mb = minibatch if minibatch is not None else MinibatchConfig()
+    kernel = config.make_kernel()
+    ops = _resolve_ops(config, kernel, ops)
+    dt = jnp.dtype(config.dtype)
+    X = X.astype(dt)
+    y = y.astype(dt)
+    n = X.shape[0]
+
+    key_sel, key_shuffle = jax.random.split(key)
+    if centers is None:
+        sel = _stage_select(key_sel, X, config, kernel)
+        centers_arr, D = sel.centers, sel.D
+    else:
+        centers_arr, D = jnp.asarray(centers, dt), None
+    KMM = _stage_gram(ops, centers_arr)
+    precond = _stage_precondition(KMM, config.lam, n, config, D=D)
+
+    result = minibatch_solve(
+        X,
+        y,
+        centers_arr,
+        precond,
+        config.lam,
+        mb,
+        ops=ops,
+        key=key_shuffle,
+        beta0=beta0,
+    )
+    est = _stage_wrap(
+        centers_arr, result.alpha, kernel, config, precond=precond, lam=config.lam
+    )
+    return est, result
+
+
+def falkon_fit_minibatch_streaming(
+    key: Array,
+    source,
+    config: FalkonConfig,
+    minibatch: MinibatchConfig | None = None,
+    *,
+    prefetch: int | None = None,
+    centers: Array | None = None,
+    ops: KernelOps | None = None,
+    beta0: Array | None = None,
+) -> tuple[FalkonEstimator, MinibatchResult]:
+    """``falkon_fit_minibatch`` for a host-streamed ``ChunkSource``.
+
+    The out-of-core twin: the same front half as ``falkon_fit_streaming``
+    (uniform centers in one host pass, in-core M x M preconditioner), then
+    the host-driven mini-batch loop. With ``minibatch.shuffle`` the source
+    is wrapped in :class:`repro.data.ShuffledChunkSource`, whose every pass
+    (= every epoch) draws a fresh windowed shuffle of the chunk order plus
+    in-chunk row shuffles — epoch reshuffling without materializing n rows.
+    Unlike full streaming CG (one full pass per iteration), each update here
+    costs ``project_every`` chunk transfers + sweeps.
+    """
+    mb = minibatch if minibatch is not None else MinibatchConfig()
+    if mb.shuffle:
+        from repro.data.streaming import ShuffledChunkSource
+
+        seed = int(jax.random.randint(jax.random.fold_in(key, 7), (), 0, 2**31 - 1))
+        source = ShuffledChunkSource(source, seed=seed)
+    kernel, ops, centers, loader, out_dim, n = _streaming_setup(
+        key, source, config, prefetch=prefetch, centers=centers, ops=ops
+    )
+    KMM = _stage_gram(ops, centers)
+    precond = _stage_precondition(KMM, config.lam, n, config)
+
+    result = minibatch_solve_stream(
+        loader,
+        centers,
+        precond,
+        config.lam,
+        mb,
+        ops=ops,
+        out_dim=out_dim,
+        beta0=beta0,
+    )
+    est = _stage_wrap(
+        centers, result.alpha, kernel, config, precond=precond, lam=config.lam
+    )
+    return est, result

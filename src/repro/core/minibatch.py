@@ -1,0 +1,528 @@
+"""Mini-batch FALKON with delayed projections — past the one-sweep-per-step wall.
+
+Exact FALKON pays one full O(nM) data sweep per CG iteration; that sweep IS
+the paper's complexity budget, and it is also the wall: at large enough n
+even a single pass per update is too expensive. "Fast training of large
+kernel models with delayed projections" (PAPERS.md) shows the fix — run the
+PRECONDITIONED iteration stochastically over mini-batches and only project
+back through the preconditioner every few steps. This module implements that
+update rule on the existing `KernelOps` seam:
+
+* **One chunk-sized sweep per stochastic step.** A step over chunk
+  ``(X_c, y_c)`` costs exactly ``ops.sweep(X_c, C, gamma, -y_c)`` =
+  ``K_cM^T (K_cM gamma - y_c)`` — the v-term trick folds the residual into
+  the same fused pass, so the per-step cost is ONE chunk sweep, not a full
+  pass and not two chunk passes (`CountingOps`-pinned in the benchmark).
+  Ragged chunks ride the `row_mask` zero-contribution contract: pad rows
+  add exactly zero to the accumulator and are excluded from the row count
+  that normalizes the gradient, so the stochastic gradient is exact over
+  the valid rows.
+* **Delayed projection.** The expensive part of the preconditioned operator
+  is not the triangular solves (O(M^2), invisible next to O(nM) sweeps at
+  production chunk sizes) — it is that the textbook iteration re-projects
+  ``gamma = right(beta)`` after EVERY step. Here gamma is held fixed
+  (deliberately stale) for ``project_every`` chunks while chunk sweeps
+  accumulate; one projection then applies the preconditioned gradient
+  ``g = left(acc)/rows + lam * ridge(beta)``, a heavy-ball update, tail
+  averaging, and a single gamma refresh. ``project_every=1`` degenerates to
+  per-chunk preconditioned SGD; ``project_every * chunk_rows >= n`` to full
+  preconditioned gradient descent (the gradient is then exact — the
+  fixed-point property `partial_fit` tests pin).
+* **State is a pytree.** `MinibatchState` carries beta / velocity / the
+  tail-average / the sweep accumulator / gamma, so the in-core driver is
+  one nested `lax.scan` (epochs -> projection periods -> chunks) and the
+  streaming driver is the same update functions host-driven over a
+  `ChunkSource` (epoch reshuffling via `repro.data.ShuffledChunkSource`).
+* **Step size is preconditioning's reward.** W = B^T H B has cond O(1)
+  (paper Lemma 5 / Thm 2), so a fixed step near 1/lam_max(W) converges
+  geometrically; ``step_size=None`` estimates lam_max by power iteration on
+  a pilot chunk (``power_iters`` extra chunk-sized sweeps, Python-loop eager
+  so instrumentation counts them) and takes ``step_safety / lam_max``.
+
+Per-column convergence masking reuses the CG core's helpers (`col_dot`,
+`active_columns` from `repro.core.cg`): a converged column of a multi-rhs
+block stops taking noisy stochastic steps while the rest keep training.
+
+`falkon_fit_minibatch` / `falkon_fit_minibatch_streaming` in
+`repro.core.falkon` compose these drivers with the standard select ->
+gram -> precondition pipeline (the preconditioner is factored ONCE, through
+the same `FactorPlan` in-core/blocked routing as every other fit, and
+reused across all steps); `FalkonEstimator.partial_fit` warm-starts them
+from a deployed alpha via `Preconditioner.beta_of_coeffs`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .cg import active_columns, col_dot
+from .preconditioner import Preconditioner
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MinibatchConfig:
+    """Knobs of the delayed-projection update rule.
+
+    ``chunk_rows`` rows per stochastic step; ``project_every`` steps between
+    projections (the delay); ``epochs`` passes over the data. ``step_size``
+    of None auto-estimates ``step_safety / lam_max(W)`` by ``power_iters``
+    pilot-chunk power iterations. ``momentum`` is the heavy-ball
+    coefficient; ``avg_start`` the fraction of projections after which tail
+    averaging begins (averaging from the start would drag the warmup
+    transient into the solution). ``tol`` freezes a column once its
+    projected-gradient norm drops below ``tol`` times its first value.
+    ``shuffle`` reshuffles the chunk/row order every epoch (a fresh
+    permutation in-core, a `ShuffledChunkSource` pass under streaming).
+    """
+
+    chunk_rows: int = 2048
+    project_every: int = 4
+    epochs: int = 2
+    step_size: float | None = None
+    step_safety: float = 0.95
+    power_iters: int = 8
+    momentum: float = 0.8
+    avg_start: float = 0.9
+    tol: float = 0.0
+    shuffle: bool = True
+
+    def __post_init__(self):
+        if self.chunk_rows <= 0:
+            raise ValueError(f"chunk_rows must be positive, got {self.chunk_rows}")
+        if self.project_every <= 0:
+            raise ValueError(
+                f"project_every must be positive, got {self.project_every}"
+            )
+        if self.epochs <= 0:
+            raise ValueError(f"epochs must be positive, got {self.epochs}")
+        if self.step_size is not None and not self.step_size > 0.0:
+            raise ValueError(
+                f"step_size must be positive (or None to auto-estimate), "
+                f"got {self.step_size}"
+            )
+        if not 0.0 < self.step_safety <= 2.0:
+            raise ValueError(
+                f"step_safety must be in (0, 2] (gradient descent diverges "
+                f"past 2/lam_max), got {self.step_safety}"
+            )
+        if self.power_iters <= 0:
+            raise ValueError(f"power_iters must be positive, got {self.power_iters}")
+        if not 0.0 <= self.momentum < 1.0:
+            raise ValueError(f"momentum must be in [0, 1), got {self.momentum}")
+        if not 0.0 <= self.avg_start <= 1.0:
+            raise ValueError(f"avg_start must be in [0, 1], got {self.avg_start}")
+        if self.tol < 0.0:
+            raise ValueError(f"tol must be >= 0, got {self.tol}")
+
+
+class MinibatchState(NamedTuple):
+    """The delayed-projection iteration state — a pytree, so the whole loop
+    lax.scans in-core and the same functions drive the streaming host loop.
+
+    ``beta`` lives in the preconditioned space (like the CG iterate);
+    ``gamma = right(beta)`` is the kernel-space coefficient vector the chunk
+    sweeps read — refreshed only at projections, deliberately stale in
+    between. ``acc``/``acc_rows`` accumulate the chunk sweeps (and their
+    valid-row counts) since the last projection. ``g0_sq`` is the first
+    projection's per-column gradient norm^2, the reference the relative
+    ``tol`` masks against (negative until the first projection sets it).
+    """
+
+    beta: Array  # (q,) or (q, p) preconditioned iterate
+    velocity: Array  # heavy-ball momentum buffer, like beta
+    beta_bar: Array  # tail average of beta, like beta
+    num_avg: Array  # scalar f32: projections averaged so far
+    gamma: Array  # (M,...) = right(beta), refreshed at projections
+    acc: Array  # (M,...) sum of chunk sweeps at the stale gamma
+    acc_rows: Array  # scalar f32: valid rows behind ``acc``
+    g0_sq: Array  # per-column reference ||g||^2 for tol masking
+    step: Array  # int32 chunk steps taken
+    projections: Array  # int32 projections applied
+
+
+class MinibatchResult(NamedTuple):
+    """What a mini-batch solve returns alongside the estimator."""
+
+    state: MinibatchState
+    alpha: Array  # coeffs(solution): tail-averaged beta when averaging ran
+    grad_norms: Array  # (projections,) or (projections, p) per-column ||g||
+    step_size: Array  # the step size actually used (auto-estimated or given)
+    pilot_sweeps: int  # chunk-sized sweeps spent estimating the step size
+    rows_swept: float  # total rows through sweeps (pads + pilot included)
+
+
+def minibatch_init(precond: Preconditioner, beta0: Array) -> MinibatchState:
+    """Fresh state at ``beta0`` (zeros for a cold start, or
+    ``precond.beta_of_coeffs(alpha)`` to warm-start from a deployed model)."""
+    gamma = precond.right(beta0)
+    f32 = jnp.float32
+    return MinibatchState(
+        beta=beta0,
+        velocity=jnp.zeros_like(beta0),
+        beta_bar=jnp.zeros_like(beta0),
+        num_avg=jnp.zeros((), f32),
+        gamma=gamma,
+        acc=jnp.zeros_like(gamma),
+        acc_rows=jnp.zeros((), f32),
+        g0_sq=-jnp.ones(beta0.shape[1:], f32),
+        step=jnp.zeros((), jnp.int32),
+        projections=jnp.zeros((), jnp.int32),
+    )
+
+
+def minibatch_step(
+    ops,
+    centers: Array,
+    state: MinibatchState,
+    xc: Array,
+    yc: Array,
+    row_mask: Array | None = None,
+) -> MinibatchState:
+    """One stochastic step == ONE chunk-sized sweep (the pinned invariant).
+
+    ``sweep(X_c, C, gamma, -y_c) = K_cM^T (K_cM gamma - y_c)`` — the fused
+    v-term computes the chunk's residual inside the same pass that applies
+    the kernel, so there is no separate apply. The result is only
+    ACCUMULATED here; all O(M^2) preconditioner work waits for the
+    projection. ``row_mask`` rows at 0 contribute exactly zero and are
+    excluded from the normalizing row count (the streaming pad contract).
+    """
+    wc = ops.sweep(xc, centers, state.gamma, -yc, row_mask=row_mask)
+    if row_mask is None:
+        rows = jnp.asarray(float(xc.shape[0]), jnp.float32)
+    else:
+        rows = jnp.sum(row_mask).astype(jnp.float32)
+    return state._replace(
+        acc=state.acc + wc.astype(state.acc.dtype),
+        acc_rows=state.acc_rows + rows,
+        step=state.step + 1,
+    )
+
+
+def minibatch_project(
+    precond: Preconditioner,
+    lam,
+    state: MinibatchState,
+    *,
+    step_size,
+    momentum: float,
+    avg_after: int,
+    tol: float,
+) -> tuple[MinibatchState, Array]:
+    """The delayed projection: turn the accumulated sweeps into one update.
+
+    ``g = left(acc)/rows + ridge(beta, lam)`` is exactly the preconditioned
+    operator residual ``W beta - b`` evaluated on the rows behind ``acc``
+    (when a period covers the whole dataset this is the full-batch gradient
+    — the degenerate case equals preconditioned gradient descent). Then a
+    heavy-ball step, per-column tol masking via the CG helpers, tail
+    averaging once ``projections >= avg_after``, and the single gamma
+    refresh that ends the staleness window. Returns (state, per-column
+    ||g||) — the gradient-norm history is the solver's residual trace.
+    """
+    denom = jnp.maximum(state.acc_rows, 1.0)
+    g = precond.left(state.acc) / denom + precond.ridge(state.beta, lam)
+    rs = col_dot(g, g)
+    ref = jnp.where(state.g0_sq < 0.0, rs, state.g0_sq)
+    active = active_columns(rs, (tol * tol) * ref)
+
+    vel_new = momentum * state.velocity - step_size * g
+    beta_new = state.beta + vel_new
+    beta = jnp.where(active, beta_new, state.beta)
+    velocity = jnp.where(active, vel_new, state.velocity)
+
+    take = (state.projections >= avg_after).astype(jnp.float32)
+    num = state.num_avg + take
+    beta_bar = jnp.where(
+        take > 0.0,
+        (state.beta_bar * state.num_avg + beta) / jnp.maximum(num, 1.0),
+        state.beta_bar,
+    )
+    new_state = state._replace(
+        beta=beta,
+        velocity=velocity,
+        beta_bar=beta_bar,
+        num_avg=num,
+        gamma=precond.right(beta),
+        acc=jnp.zeros_like(state.acc),
+        acc_rows=jnp.zeros_like(state.acc_rows),
+        g0_sq=ref,
+        projections=state.projections + 1,
+    )
+    return new_state, jnp.sqrt(rs)
+
+
+def minibatch_solution(state: MinibatchState) -> Array:
+    """The iterate to read out: the tail average when averaging ran, else
+    the last beta (short runs whose avg window never opened)."""
+    return jnp.where(state.num_avg > 0.0, state.beta_bar, state.beta)
+
+
+def estimate_step_size(
+    ops,
+    centers: Array,
+    precond: Preconditioner,
+    lam,
+    xc: Array,
+    row_mask: Array | None,
+    *,
+    iters: int = 8,
+    safety: float = 0.95,
+) -> Array:
+    """``safety / lam_max(W_pilot)`` by power iteration on ONE pilot chunk.
+
+    ``W_pilot`` is the same preconditioned operator the projection descends,
+    with the data term subsampled to the pilot chunk — preconditioning makes
+    lam_max(W) ~ 1 + lam-scale (cond O(1), paper Lemma 5), so a chunk-sized
+    estimate is plenty. Cost: ``iters`` chunk-sized sweeps, run as an EAGER
+    Python loop so `CountingOps` sees every one (the benchmark's sweep
+    accounting stays exact). lam_max is read off the last iterate's norm
+    growth, so no extra sweep is spent on a final Rayleigh quotient.
+    """
+    if row_mask is None:
+        rows = jnp.asarray(float(xc.shape[0]), jnp.float32)
+    else:
+        rows = jnp.maximum(jnp.sum(row_mask).astype(jnp.float32), 1.0)
+
+    def w_pilot(u):
+        w = ops.sweep(xc, centers, precond.right(u), None, row_mask=row_mask)
+        return precond.left(w) / rows + precond.ridge(u, lam)
+
+    q = precond.q
+    v = jnp.ones((q,), centers.dtype) / jnp.sqrt(float(q))
+    lam_max = jnp.asarray(1.0, centers.dtype)
+    for _ in range(iters):
+        w = w_pilot(v)
+        lam_max = jnp.maximum(jnp.linalg.norm(w), 1e-30)
+        v = w / lam_max
+    return jnp.asarray(safety, centers.dtype) / lam_max
+
+
+def _pad_to(a: Array, rows: int) -> Array:
+    return jnp.pad(a, ((0, rows - a.shape[0]),) + ((0, 0),) * (a.ndim - 1))
+
+
+def minibatch_solve(
+    X: Array,
+    y: Array,
+    centers: Array,
+    precond: Preconditioner,
+    lam,
+    mb: MinibatchConfig,
+    *,
+    ops,
+    key: Array,
+    beta0: Array | None = None,
+) -> MinibatchResult:
+    """In-core driver: the whole epoch loop is nested ``lax.scan``s.
+
+    X/y are zero-padded to a whole number of projection periods and the pad
+    rows masked out (exactly zero contribution, excluded from the gradient
+    normalization), so every chunk of every epoch shares one static sweep
+    shape. Each epoch draws a fresh row permutation (``mb.shuffle``; pad
+    rows travel with their mask entries). Scan nesting is epochs ->
+    projection periods (project at period end — no lax.cond in the hot
+    body) -> chunks.
+    """
+    n = X.shape[0]
+    if y.shape[0] != n:
+        raise ValueError(f"X has {n} rows but y has {y.shape[0]}")
+    c = min(mb.chunk_rows, n)
+    k = max(1, min(mb.project_every, -(-n // c)))
+    period = k * c
+    periods = -(-n // period)
+    n_pad = periods * period
+
+    X_pad = _pad_to(X, n_pad)
+    y_pad = _pad_to(y, n_pad)
+    mask = (jnp.arange(n_pad) < n).astype(jnp.float32)
+
+    if beta0 is None:
+        beta0 = jnp.zeros((precond.q,) + y.shape[1:], X.dtype)
+    state0 = minibatch_init(precond, beta0)
+
+    pilot_sweeps = 0
+    if mb.step_size is None:
+        eta = estimate_step_size(
+            ops,
+            centers,
+            precond,
+            lam,
+            X_pad[:c],
+            mask[:c],
+            iters=mb.power_iters,
+            safety=mb.step_safety,
+        )
+        pilot_sweeps = mb.power_iters
+    else:
+        eta = jnp.asarray(mb.step_size, X.dtype)
+
+    total_proj = mb.epochs * periods
+    avg_after = int(mb.avg_start * total_proj)
+
+    def chunk_body(state, chunk):
+        xcc, ycc, mcc = chunk
+        return minibatch_step(ops, centers, state, xcc, ycc, row_mask=mcc), None
+
+    def period_body(state, blk):
+        state, _ = jax.lax.scan(chunk_body, state, blk)
+        state, gnorm = minibatch_project(
+            precond,
+            lam,
+            state,
+            step_size=eta,
+            momentum=mb.momentum,
+            avg_after=avg_after,
+            tol=mb.tol,
+        )
+        return state, gnorm
+
+    def epoch_body(state, epoch_key):
+        if mb.shuffle:
+            perm = jax.random.permutation(epoch_key, n_pad)
+        else:
+            perm = jnp.arange(n_pad)
+        xe = X_pad[perm].reshape((periods, k, c) + X.shape[1:])
+        ye = y_pad[perm].reshape((periods, k, c) + y.shape[1:])
+        me = mask[perm].reshape(periods, k, c)
+        return jax.lax.scan(period_body, state, (xe, ye, me))
+
+    state, gnorms = jax.lax.scan(epoch_body, state0, jax.random.split(key, mb.epochs))
+    grad_norms = gnorms.reshape((total_proj,) + gnorms.shape[2:])
+    beta = minibatch_solution(state)
+    return MinibatchResult(
+        state=state,
+        alpha=precond.coeffs(beta),
+        grad_norms=grad_norms,
+        step_size=eta,
+        pilot_sweeps=pilot_sweeps,
+        rows_swept=float(mb.epochs * n_pad + pilot_sweeps * c),
+    )
+
+
+def minibatch_solve_stream(
+    loader,
+    centers: Array,
+    precond: Preconditioner,
+    lam,
+    mb: MinibatchConfig,
+    *,
+    ops,
+    out_dim: tuple = (),
+    beta0: Array | None = None,
+    jit_update: bool = True,
+) -> MinibatchResult:
+    """Streaming driver: the same update functions, host-driven over chunks.
+
+    ``loader`` is a re-iterable of (X_chunk, y_chunk) device pairs (a
+    `StreamingLoader`; wrap the source in `repro.data.ShuffledChunkSource`
+    for epoch reshuffling — `falkon_fit_minibatch_streaming` does). Ragged
+    tails are padded to the loader's declared ``chunk_rows`` under the
+    `row_mask` contract so every step shares one compiled sweep shape. The
+    per-chunk cost invariant is host-visible here: with ``jit_update=False``
+    every step is an eager `ops.sweep` call, which is how the benchmark's
+    `CountingOps` proves one-chunk-sweep-per-step EXACTLY (the jitted
+    default trades that visibility for compile-once speed).
+    """
+    n = loader.n_rows
+    chunk_rows = loader.chunk_rows
+    if not chunk_rows:
+        raise ValueError(
+            "minibatch_solve_stream needs the loader's source to declare "
+            "chunk_rows (the one compiled sweep shape every step shares)"
+        )
+    num_chunks = -(-n // chunk_rows)
+    k = max(1, min(mb.project_every, num_chunks))
+    proj_per_epoch = -(-num_chunks // k)
+    total_proj = mb.epochs * proj_per_epoch
+    avg_after = int(mb.avg_start * total_proj)
+
+    if beta0 is None:
+        beta0 = jnp.zeros((precond.q,) + tuple(out_dim), centers.dtype)
+    state = minibatch_init(precond, beta0)
+
+    def step_fn(state, xc, yc, mask):
+        return minibatch_step(ops, centers, state, xc, yc, row_mask=mask)
+
+    def project_fn(state, eta):
+        return minibatch_project(
+            precond,
+            lam,
+            state,
+            step_size=eta,
+            momentum=mb.momentum,
+            avg_after=avg_after,
+            tol=mb.tol,
+        )
+
+    if jit_update:
+        step_fn = jax.jit(step_fn)
+        project_fn = jax.jit(project_fn)
+
+    full_mask = jnp.ones((chunk_rows,), jnp.float32)
+
+    def padded(xc, yc):
+        nc = xc.shape[0]
+        if nc == chunk_rows:
+            return xc, yc, full_mask
+        return (
+            _pad_to(xc, chunk_rows),
+            _pad_to(yc, chunk_rows),
+            (jnp.arange(chunk_rows) < nc).astype(jnp.float32),
+        )
+
+    pilot_sweeps = 0
+    if mb.step_size is None:
+        for xc, yc in loader:
+            if yc is None:
+                raise ValueError("minibatch_solve_stream needs targets in the source")
+            xp, _, mp = padded(xc, yc)
+            eta = estimate_step_size(
+                ops,
+                centers,
+                precond,
+                lam,
+                xp,
+                mp,
+                iters=mb.power_iters,
+                safety=mb.step_safety,
+            )
+            pilot_sweeps = mb.power_iters
+            break
+    else:
+        eta = jnp.asarray(mb.step_size, centers.dtype)
+
+    gnorms = []
+    rows_swept = float(pilot_sweeps * chunk_rows)
+    for _ in range(mb.epochs):
+        in_period = 0
+        for xc, yc in loader:
+            if yc is None:
+                raise ValueError("minibatch_solve_stream needs targets in the source")
+            xp, yp, mp = padded(xc, yc)
+            state = step_fn(state, xp, yp, mp)
+            rows_swept += float(chunk_rows)
+            in_period += 1
+            if in_period == k:
+                state, gn = project_fn(state, eta)
+                gnorms.append(gn)
+                in_period = 0
+        if in_period:
+            state, gn = project_fn(state, eta)
+            gnorms.append(gn)
+
+    beta = minibatch_solution(state)
+    return MinibatchResult(
+        state=state,
+        alpha=precond.coeffs(beta),
+        grad_norms=jnp.stack(gnorms),
+        step_size=eta,
+        pilot_sweeps=pilot_sweeps,
+        rows_swept=rows_swept,
+    )

@@ -163,10 +163,10 @@ def approximate_leverage_scores(
     The single-lambda composition of ``build_leverage_pilot`` and
     ``leverage_scores_from_pilot``.
     """
-    pilot = build_leverage_pilot(key, X, kernel, pilot_size=pilot_size,
-                                 block_size=block_size)
-    return leverage_scores_from_pilot(pilot, X, kernel, lam,
-                                      block_size=block_size)
+    pilot = build_leverage_pilot(
+        key, X, kernel, pilot_size=pilot_size, block_size=block_size
+    )
+    return leverage_scores_from_pilot(pilot, X, kernel, lam, block_size=block_size)
 
 
 def approximate_leverage_scores_path(
@@ -184,8 +184,9 @@ def approximate_leverage_scores_path(
     G-Cholesky and scoring pass — the sampling-diagnostics twin of the
     shared-sweep path solve.
     """
-    pilot = build_leverage_pilot(key, X, kernel, pilot_size=pilot_size,
-                                 block_size=block_size)
+    pilot = build_leverage_pilot(
+        key, X, kernel, pilot_size=pilot_size, block_size=block_size
+    )
     return jnp.stack([
         leverage_scores_from_pilot(pilot, X, kernel, float(lam),
                                    block_size=block_size)
@@ -231,7 +232,6 @@ def select_centers(
     if scheme == "leverage":
         assert kernel is not None and lam is not None
         k1, k2 = jax.random.split(key)
-        scores = approximate_leverage_scores(k1, X, kernel, lam,
-                                             pilot_size=pilot_size)
+        scores = approximate_leverage_scores(k1, X, kernel, lam, pilot_size=pilot_size)
         return leverage_score_centers(k2, X, M, scores)
     raise ValueError(f"unknown center-selection scheme {scheme!r}")

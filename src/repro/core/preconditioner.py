@@ -138,6 +138,29 @@ class Preconditioner:
         """alpha = D Q T^{-1} A^{-1} beta (Alg. 1's ``alpha = T\\(A\\beta)``)."""
         return self.right(beta)
 
+    def beta_of_coeffs(self, alpha: Array) -> Array:
+        """Inverse of ``coeffs``: beta = A T Q^T D^{-1} alpha, (M,...) -> (q,...).
+
+        The warm-start map for ``partial_fit``: a deployed estimator stores
+        alpha (the kernel-space coefficients), but the mini-batch iteration
+        lives in the preconditioned space, so resuming from a served model
+        means pulling alpha back through the factors. Triangular/diagonal
+        MULTIPLIES, not solves — exact for the full-rank path
+        (``coeffs(beta_of_coeffs(a)) == a``); in the rank-deficient eig path
+        ``Q^T`` is the least-squares pullback onto the kept eigenspace, which
+        is the only part of alpha the solver ever produced.
+        """
+        v = alpha
+        if self.D is not None:
+            v = v / _bcast(self.D, v)
+        if self.Q is not None:
+            v = self.Q.T @ v
+        if self.diag_T:
+            v = _bcast(jnp.diagonal(self.T), v) * v
+        else:
+            v = self.T @ v
+        return self.A @ v
+
     def ridge(self, u: Array, lam) -> Array:
         """lam * A^{-T} A^{-1} u — the regularization term of W = B^T H B.
 
@@ -228,7 +251,7 @@ class PreconditionerPath:
         del lams  # the grid is part of the factorization; kept for the
         # _falkon_operator calling convention shared with Preconditioner
         v = self.solve_A(self.solve_A(U), trans=True)
-        return v * self.col_lams(U)[None, :]
+        return v * self.col_lams(U)[None,:]
 
     def expand_rhs(self, w: Array) -> Array:
         """The lam-independent RHS ``w = K_nM^T y / n`` (M, p) expanded to
@@ -255,8 +278,9 @@ class PreconditionerPath:
 
     def system(self, index: int) -> Preconditioner:
         """The single-lam :class:`Preconditioner` for system ``index``."""
-        return Preconditioner(T=self.T, A=self.A[index], Q=self.Q, D=self.D,
-                              n=self.n, diag_T=self.diag_T)
+        return Preconditioner(
+            T=self.T, A=self.A[index], Q=self.Q, D=self.D, n=self.n, diag_T=self.diag_T
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -274,8 +298,7 @@ def _resolve_factor_plan(KMM: Array, factor_plan, rank_deficient: bool):
     """
     # Lazy import: repro.ops.__init__ constructs backends that reach into
     # repro.core, so a module-level import here would be a cycle.
-    from repro.ops.base import FACTOR_PATHS, FactorPlan, FactorPlanWarning, \
-        plan_factor
+    from repro.ops.base import FACTOR_PATHS, FactorPlan, FactorPlanWarning, plan_factor
 
     M = KMM.shape[0]
     itemsize = max(jnp.dtype(KMM.dtype).itemsize, 4)
@@ -287,9 +310,11 @@ def _resolve_factor_plan(KMM: Array, factor_plan, rank_deficient: bool):
         # Force the named path by planning against a budget the dense
         # factor trivially fits (incore) or trivially exceeds (blocked).
         dense = M * M * itemsize
-        plan = plan_factor(M, itemsize=itemsize,
-                           factor_budget=dense if factor_plan == "incore"
-                           else dense - 1)
+        plan = plan_factor(
+            M,
+            itemsize=itemsize,
+            factor_budget=dense if factor_plan == "incore" else dense - 1,
+        )
     else:
         raise ValueError(
             f"factor_plan must be None, a FactorPlan, or one of "
@@ -299,8 +324,7 @@ def _resolve_factor_plan(KMM: Array, factor_plan, rank_deficient: bool):
         if isinstance(KMM, jax.core.Tracer):
             # Can't leave the device under a trace — quietly keep the
             # traced program on the historical in-core path.
-            return plan_factor(M, itemsize=itemsize,
-                               factor_budget=M * M * itemsize)
+            return plan_factor(M, itemsize=itemsize, factor_budget=M * M * itemsize)
         if rank_deficient:
             raise ValueError(
                 "rank_deficient=True is not supported on the blocked factor "
@@ -338,13 +362,12 @@ def _shared_factor(
     dt = KMM.dtype
 
     if plan is not None and plan.path == "blocked" and not rank_deficient:
-        from repro.kernels.blocked_cholesky import blocked_cholesky, \
-            blocked_syrk_tt
+        from repro.kernels.blocked_cholesky import blocked_cholesky, blocked_syrk_tt
         Kh = np.array(KMM)                     # host working copy
         if D is not None:
             Dh = np.array(D, dtype=Kh.dtype)
             Kh *= Dh[:, None]
-            Kh *= Dh[None, :]
+            Kh *= Dh[None,:]
         eps = jitter if jitter is not None else float(jnp.finfo(dt).eps) * M
         Kh.flat[:: M + 1] += np.asarray(eps, Kh.dtype)
         Th = blocked_cholesky(Kh, plan.block)
@@ -352,7 +375,7 @@ def _shared_factor(
         return jnp.asarray(Th, dt), None, jnp.asarray(TTth, dt), False
 
     if D is not None:
-        KMM = KMM * D[:, None] * D[None, :]
+        KMM = KMM * D[:, None] * D[None,:]
 
     if rank_deficient:
         # Appendix A Example 2 (eigendecomposition). Static shapes: rank-q
@@ -360,11 +383,11 @@ def _shared_factor(
         # guarding the inverses, so q == M structurally.
         s, U = jnp.linalg.eigh(KMM)                       # ascending
         s = s[::-1]
-        U = U[:, ::-1]
+        U = U[:,::-1]
         keep = s > (rank_tol * jnp.maximum(s[0], 1e-30))
         s_safe = jnp.where(keep, s, 1.0)
         T = jnp.diag(jnp.sqrt(s_safe))
-        Q = U * keep[None, :].astype(dt)
+        Q = U * keep[None,:].astype(dt)
         TTt = jnp.diag(jnp.where(keep, s_safe, 0.0))
         return T, Q, TTt, True
 
@@ -421,11 +444,11 @@ def make_preconditioner(
     M = KMM.shape[0]
     dt = KMM.dtype
     plan = _resolve_factor_plan(KMM, factor_plan, rank_deficient)
-    T, Q, TTt, diag_T = _shared_factor(KMM, D, jitter, rank_deficient,
-                                       rank_tol, plan=plan)
+    T, Q, TTt, diag_T = _shared_factor(
+        KMM, D, jitter, rank_deficient, rank_tol, plan=plan
+    )
     A = _lam_factor(TTt, lam, M, plan=plan)
-    return Preconditioner(T=T, A=A, Q=Q, D=D, n=jnp.asarray(n, dt),
-                          diag_T=diag_T)
+    return Preconditioner(T=T, A=A, Q=Q, D=D, n=jnp.asarray(n, dt), diag_T=diag_T)
 
 
 def make_preconditioner_path(
@@ -458,23 +481,26 @@ def make_preconditioner_path(
     dt = KMM.dtype
     lams = jnp.asarray(lams, dt)
     if lams.ndim != 1 or lams.shape[0] < 1:
-        raise ValueError(f"lams must be a non-empty 1-D grid, got shape "
-                         f"{lams.shape}")
+        raise ValueError(
+            f"lams must be a non-empty 1-D grid, got shape " f"{lams.shape}"
+        )
     if not isinstance(lams, jax.core.Tracer) and bool(jnp.any(lams <= 0.0)):
         # a non-positive ridge makes TT^T/M + lam I indefinite and the
         # batched Cholesky returns silent NaNs, not an error — fail here
         # (concrete grids only; traced grids keep the builder jittable)
         raise ValueError(
-            f"every lam in the path must be > 0, got {tuple(map(float, lams))}")
+            f"every lam in the path must be > 0, got {tuple(map(float, lams))}"
+        )
     plan = _resolve_factor_plan(KMM, factor_plan, rank_deficient)
-    T, Q, TTt, diag_T = _shared_factor(KMM, D, jitter, rank_deficient,
-                                       rank_tol, plan=plan)
+    T, Q, TTt, diag_T = _shared_factor(
+        KMM, D, jitter, rank_deficient, rank_tol, plan=plan
+    )
     if plan.path == "blocked" and not isinstance(lams, jax.core.Tracer):
         # The host-blocked factorization cannot run under vmap; build the
         # (L, q, q) stack one out-of-core Cholesky at a time.
-        A = jnp.stack([_lam_factor(TTt, lam, M, plan=plan)
-                       for lam in np.asarray(lams)])
+        A = jnp.stack([_lam_factor(TTt, lam, M, plan=plan) for lam in np.asarray(lams)])
     else:
         A = jax.vmap(lambda lam: _lam_factor(TTt, lam, M))(lams)
-    return PreconditionerPath(T=T, A=A, Q=Q, D=D, lams=lams,
-                              n=jnp.asarray(n, dt), diag_T=diag_T)
+    return PreconditionerPath(
+        T=T, A=A, Q=Q, D=D, lams=lams, n=jnp.asarray(n, dt), diag_T=diag_T
+    )

@@ -1,7 +1,16 @@
 from .pipeline import ShardedLoader
-from .streaming import (ArrayChunkSource, ChunkSource, JittedOps,
-                        ShardedChunkSource, StreamingLoader,
-                        shard_chunk_sources, streaming_apply,
-                        streaming_sweep, streaming_uniform_centers)
-from .synthetic import (PAPER_TASKS, KernelTask, TokenStreamConfig,
-                        make_kernel_dataset, token_stream)
+from .streaming import (
+    ArrayChunkSource,
+    ChunkSource,
+    JittedOps,
+    ShardedChunkSource,
+    ShuffledChunkSource,
+    StreamingLoader,
+    shard_chunk_sources,
+    streaming_apply,
+    streaming_sweep,
+    streaming_uniform_centers,
+)
+from .synthetic import (
+    PAPER_TASKS, KernelTask, TokenStreamConfig, make_kernel_dataset, token_stream
+)

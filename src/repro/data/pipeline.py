@@ -18,8 +18,7 @@ from repro.distributed.mesh import data_axes
 
 
 class ShardedLoader:
-    def __init__(self, it: Iterator[dict], mesh: Mesh | None = None,
-                 prefetch: int = 2):
+    def __init__(self, it: Iterator[dict], mesh: Mesh | None = None, prefetch: int = 2):
         self._it = it
         self._mesh = mesh
         self._q: queue.Queue = queue.Queue(maxsize=prefetch)
@@ -33,13 +32,15 @@ class ShardedLoader:
         dp = data_axes(self._mesh)
         out = {}
         for k, v in batch.items():
-            if hasattr(v, "ndim") and v.ndim >= 1 and \
-                    v.shape[0] % max(1, self._mesh.shape[dp[0]]) == 0:
+            if hasattr(v, "ndim") and v.ndim >= 1 and v.shape[0] % max(
+                1, self._mesh.shape[dp[0]]
+            ) == 0:
                 spec = P(dp)
             else:
                 spec = P()
-            out[k] = jax.device_put(v, NamedSharding(self._mesh, spec)) \
-                if hasattr(v, "ndim") else v
+            out[k] = jax.device_put(v, NamedSharding(self._mesh, spec)) if hasattr(
+                v, "ndim"
+            ) else v
         return out
 
     def _work(self):

@@ -118,8 +118,7 @@ class ShardedChunkSource(ChunkSource):
         if not 0 < num_shards:
             raise ValueError(f"num_shards must be positive, got {num_shards}")
         if not 0 <= index < num_shards:
-            raise ValueError(
-                f"shard index must be in [0, {num_shards}), got {index}")
+            raise ValueError(f"shard index must be in [0, {num_shards}), got {index}")
         self.source = source
         self.index = index
         self.num_shards = num_shards
@@ -142,11 +141,73 @@ class ShardedChunkSource(ChunkSource):
                 return
 
 
-def shard_chunk_sources(source: ChunkSource,
-                        num_shards: int) -> tuple[ShardedChunkSource, ...]:
+def shard_chunk_sources(
+    source: ChunkSource, num_shards: int
+) -> tuple[ShardedChunkSource, ...]:
     """All ``num_shards`` row-range views of ``source``, in shard order."""
-    return tuple(ShardedChunkSource(source, i, num_shards)
-                 for i in range(num_shards))
+    return tuple(ShardedChunkSource(source, i, num_shards) for i in range(num_shards))
+
+
+class ShuffledChunkSource(ChunkSource):
+    """Epoch-reshuffling view over any ``ChunkSource``.
+
+    The mini-batch solver wants a DIFFERENT data order every epoch, but a
+    chunk source streams host (or disk) data that can't be globally permuted
+    without materializing all n rows. This wrapper gives the streaming
+    approximation SGD practice uses: a **windowed shuffle** — up to
+    ``buffer_chunks`` chunks are buffered and emitted in uniformly random
+    order (exact global chunk-order shuffle whenever ``buffer_chunks >=
+    num_chunks``; a locality-bounded one otherwise), and each emitted
+    chunk's ROWS are permuted in place (``shuffle_rows``), which breaks
+    intra-chunk ordering exactly.
+
+    Every ``chunks()`` call is a fresh pass with a fresh order: an internal
+    pass counter is folded into ``seed``, so epoch k and epoch k+1 of the
+    same solve draw different permutations while two sources built with the
+    same seed replay identically (deterministic tests). Memory: at most
+    ``buffer_chunks + 1`` chunks of host rows alive at once; ``chunk_rows``
+    and the row/dim geometry are the parent's (the sweep's one-compiled-
+    shape contract is unaffected).
+    """
+
+    def __init__(
+        self,
+        source: ChunkSource,
+        *,
+        seed: int = 0,
+        buffer_chunks: int = 8,
+        shuffle_rows: bool = True,
+    ):
+        if buffer_chunks < 1:
+            raise ValueError(f"buffer_chunks must be >= 1, got {buffer_chunks}")
+        self.source = source
+        self.seed = int(seed)
+        self.buffer_chunks = int(buffer_chunks)
+        self.shuffle_rows = shuffle_rows
+        self.n_rows = source.n_rows
+        self.dim = source.dim
+        self.chunk_rows = source.chunk_rows
+        self._passes = 0
+
+    def chunks(self) -> Iterator[tuple[np.ndarray, np.ndarray | None]]:
+        rng = np.random.default_rng((self.seed, self._passes))
+        self._passes += 1
+
+        def emit(chunk):
+            xc, yc = chunk
+            if self.shuffle_rows and xc.shape[0] > 1:
+                perm = rng.permutation(xc.shape[0])
+                xc = np.asarray(xc)[perm]
+                yc = None if yc is None else np.asarray(yc)[perm]
+            return xc, yc
+
+        buf: list = []
+        for chunk in self.source.chunks():
+            buf.append(chunk)
+            if len(buf) > self.buffer_chunks:
+                yield emit(buf.pop(int(rng.integers(len(buf)))))
+        while buf:
+            yield emit(buf.pop(int(rng.integers(len(buf)))))
 
 
 class StreamingLoader:
@@ -278,8 +339,9 @@ def _pad_rows(a: Array, rows: int) -> Array:
     return jnp.pad(a, ((0, rows - a.shape[0]),) + ((0, 0),) * (a.ndim - 1))
 
 
-def streaming_sweep(ops, loader, C: Array, u: Array, *, use_targets=True,
-                    pad_ragged: bool = True):
+def streaming_sweep(
+    ops, loader, C: Array, u: Array, *, use_targets=True, pad_ragged: bool = True
+):
     """``K(X,C)^T (K(X,C) u + v)`` accumulated over streamed chunks of X.
 
     The sweep is additive over row chunks, so the chunked sum equals the
@@ -339,8 +401,9 @@ def streaming_sweep(ops, loader, C: Array, u: Array, *, use_targets=True,
     return w.astype(out_dtype)
 
 
-def streaming_apply(ops, loader, C: Array, u: Array, *,
-                    pad_ragged: bool = True) -> Array:
+def streaming_apply(
+    ops, loader, C: Array, u: Array, *, pad_ragged: bool = True
+) -> Array:
     """``K(X,C) u`` over streamed chunks of X, concatenated in order.
 
     Predictions never read targets, so target transfer is skipped when the

@@ -56,8 +56,13 @@ PAPER_TASKS = {
 }
 
 
-def make_kernel_dataset(key: Array, task: KernelTask, n: int | None = None,
-                        fn_key: Array | None = None, return_clean: bool = False):
+def make_kernel_dataset(
+    key: Array,
+    task: KernelTask,
+    n: int | None = None,
+    fn_key: Array | None = None,
+    return_clean: bool = False,
+):
     """X ~ N(0, I_d); f* = random Fourier feature mixture (RKHS member for the
     Gaussian kernel => the source condition of Thm 3 holds).
 
@@ -108,8 +113,7 @@ class TokenStreamConfig:
 def token_stream(cfg: TokenStreamConfig, seed: int = 0) -> Iterator[dict]:
     """Deterministic, restartable synthetic LM stream (markov chain)."""
     rng = np.random.default_rng(seed)
-    trans = rng.dirichlet(np.ones(cfg.vocab) * 0.05,
-                          size=cfg.vocab).astype(np.float32)
+    trans = rng.dirichlet(np.ones(cfg.vocab) * 0.05, size=cfg.vocab).astype(np.float32)
     step = 0
     while True:
         g = np.random.default_rng(seed * 1_000_003 + step)
@@ -120,7 +124,9 @@ def token_stream(cfg: TokenStreamConfig, seed: int = 0) -> Iterator[dict]:
             c = p.cumsum(axis=1)
             u = g.random((cfg.batch, 1), np.float32)
             toks[:, t] = (u < c).argmax(axis=1)
-        yield {"tokens": jnp.asarray(toks[:, :-1]),
-               "labels": jnp.asarray(toks[:, 1:]),
-               "step": step}
+        yield {
+            "tokens": jnp.asarray(toks[:,:-1]),
+            "labels": jnp.asarray(toks[:, 1:]),
+            "step": step,
+        }
         step += 1

@@ -20,8 +20,7 @@ Array = jax.Array
 def quantize_int8(x: Array) -> tuple[Array, Array]:
     scale = jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0
     scale = jnp.maximum(scale, 1e-30)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
-                 ).astype(jnp.int8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
     return q, scale
 
 
@@ -38,8 +37,7 @@ def compress_tree(grads, residuals):
         return (q, s), acc - deq
 
     pairs = jax.tree.map(one, grads, residuals)
-    is_pair = lambda x: isinstance(x, tuple) and len(x) == 2 and \
-        isinstance(x[0], tuple)
+    is_pair = lambda x: isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple)
     qs = jax.tree.map(lambda t: t[0], pairs, is_leaf=is_pair)
     new_res = jax.tree.map(lambda t: t[1], pairs, is_leaf=is_pair)
     return qs, new_res
@@ -47,8 +45,7 @@ def compress_tree(grads, residuals):
 
 def decompress_tree(qs, dtype=jnp.float32):
     is_q = lambda x: isinstance(x, tuple) and len(x) == 2
-    return jax.tree.map(lambda t: dequantize_int8(t[0], t[1], dtype), qs,
-                        is_leaf=is_q)
+    return jax.tree.map(lambda t: dequantize_int8(t[0], t[1], dtype), qs, is_leaf=is_q)
 
 
 def init_residuals(params):

@@ -50,8 +50,14 @@ FSDP_EXTRA: dict[str, tuple] = {
 # Resolution priority: lower resolves first (greedy mesh-axis allocation).
 _PRIORITY = {
     "batch": 0,
-    "heads": 1, "kv_heads": 1, "ff": 1, "experts": 1, "vocab": 1,
-    "kv_seq": 2, "cache_seq": 2, "expert_cap": 2,
+    "heads": 1,
+    "kv_heads": 1,
+    "ff": 1,
+    "experts": 1,
+    "vocab": 1,
+    "kv_seq": 2,
+    "cache_seq": 2,
+    "expert_cap": 2,
     "fsdp": 3,
     "embed": 4,
 }
@@ -60,7 +66,9 @@ _PRIORITY = {
 @dataclasses.dataclass(frozen=True)
 class AxisRules:
     mesh: Mesh | None
-    rules: dict[str, tuple] = dataclasses.field(default_factory=lambda: dict(DEFAULT_RULES))
+    rules: dict[str, tuple] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_RULES)
+    )
     fsdp: bool = False
 
     def axis_size(self, names: Sequence[str]) -> int:
@@ -82,8 +90,7 @@ class AxisRules:
         if self.fsdp:
             for k, v in FSDP_EXTRA.items():
                 rules[k] = v + rules.get(k, ())
-        order = sorted(range(len(dims)),
-                       key=lambda i: _PRIORITY.get(axes[i] or "", 9))
+        order = sorted(range(len(dims)), key=lambda i: _PRIORITY.get(axes[i] or "", 9))
         used: set[str] = set()
         out: list = [None] * len(dims)
         for i in order:
@@ -134,8 +141,7 @@ def lshard(x: Array, axes: Sequence[str | None]) -> Array:
     if rules.mesh is None:
         return x
     spec = rules.spec_for(x.shape, axes)
-    return jax.lax.with_sharding_constraint(
-        x, NamedSharding(rules.mesh, spec))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
 
 
 def data_axes(mesh: Mesh) -> tuple[str, ...]:

@@ -9,5 +9,10 @@ ref.py           — pure-jnp oracles
 The user-facing entry point is the ``repro.ops`` backend layer (KernelOps),
 which selects between these kernels and the jnp reference path by name.
 """
-from .ops import (fused_knm_matvec, kernel_matmul, pairwise_kernel,
-                  sharded_knm_matvec, two_pass_knm_matvec)
+from .ops import (
+    fused_knm_matvec,
+    kernel_matmul,
+    pairwise_kernel,
+    sharded_knm_matvec,
+    two_pass_knm_matvec,
+)

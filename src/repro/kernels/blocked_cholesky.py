@@ -68,8 +68,7 @@ def _interpret() -> bool:
 def resolve_tile_impl(tile_impl: str) -> str:
     """Resolve ``"auto"`` to the per-backend default engine."""
     if tile_impl not in TILE_IMPLS:
-        raise ValueError(
-            f"unknown tile_impl {tile_impl!r}; supported: {TILE_IMPLS}")
+        raise ValueError(f"unknown tile_impl {tile_impl!r}; supported: {TILE_IMPLS}")
     if tile_impl == "auto":
         return "pallas" if jax.default_backend() == "tpu" else "jnp"
     return tile_impl
@@ -98,8 +97,7 @@ class FactorStats:
     def alloc(self, nbytes: int) -> None:
         self.current_device_bytes += nbytes
         self.bytes_transferred += nbytes
-        self.peak_device_bytes = max(self.peak_device_bytes,
-                                     self.current_device_bytes)
+        self.peak_device_bytes = max(self.peak_device_bytes, self.current_device_bytes)
 
     def free(self, nbytes: int) -> None:
         self.current_device_bytes -= nbytes
@@ -158,8 +156,7 @@ def _potrf_kernel(a_ref, o_ref):
         # in-core jnp.linalg.cholesky path's, rather than clamping to a
         # finite garbage factor.
         d = jnp.sqrt(jnp.where(d > 0, d, jnp.nan))
-        colv = jnp.where(rows[:, :1] == j, d,
-                         jnp.where(rows[:, :1] > j, v / d, 0.0))
+        colv = jnp.where(rows[:,:1] == j, d, jnp.where(rows[:,:1] > j, v / d, 0.0))
         return jnp.where(cols == j, colv, L)
 
     o_ref[...] = jax.lax.fori_loop(0, b, body, jnp.zeros_like(A))
@@ -192,8 +189,11 @@ def _trsm_kernel(l_ref, a_ref, o_ref):
 def _update_kernel(c_ref, p_ref, q_ref, o_ref):
     """One (bt, b) tile of the trailing update  C - P Q^T  (SYRK/GEMM)."""
     o_ref[...] = c_ref[...] - jax.lax.dot_general(
-        p_ref[...], q_ref[...], (((1,), (1,)), ((), ())),
-        preferred_element_type=c_ref.dtype)
+        p_ref[...],
+        q_ref[...],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=c_ref.dtype,
+    )
 
 
 def _pad_identity(A: jax.Array, bp: int) -> jax.Array:
@@ -218,7 +218,7 @@ def _pallas_potrf(A, *, interpret: bool):
         out_shape=jax.ShapeDtypeStruct((bp, bp), A.dtype),
         interpret=interpret,
     )(Ap)
-    return L[:b, :b]
+    return L[:b,:b]
 
 
 @partial(jax.jit, static_argnames=("interpret",))
@@ -239,7 +239,7 @@ def _pallas_trsm(L, A, *, interpret: bool):
         out_shape=jax.ShapeDtypeStruct((rp, bp), A.dtype),
         interpret=interpret,
     )(Lp, Ap)
-    return X[:r, :b]
+    return X[:r,:b]
 
 
 @partial(jax.jit, static_argnames=("interpret",))
@@ -268,7 +268,7 @@ def _pallas_update(C, P, Q, *, interpret: bool):
         out_shape=jax.ShapeDtypeStruct((rp, bp), C.dtype),
         interpret=interpret,
     )(Cp, Pp, Qp)
-    return O[:r, :b]
+    return O[:r,:b]
 
 
 # ---------------------------------------------------------------------------
@@ -287,7 +287,8 @@ def _jnp_trsm(L, A):
 @jax.jit
 def _jnp_update(C, P, Q):
     return C - jax.lax.dot_general(
-        P, Q, (((1,), (1,)), ((), ())), preferred_element_type=C.dtype)
+        P, Q, (((1,), (1,)), ((), ())), preferred_element_type=C.dtype
+    )
 
 
 def _engine(tile_impl: str):
@@ -295,9 +296,11 @@ def _engine(tile_impl: str):
     if impl == "jnp":
         return _jnp_potrf, _jnp_trsm, _jnp_update
     interp = _interpret()
-    return (partial(_pallas_potrf, interpret=interp),
-            partial(_pallas_trsm, interpret=interp),
-            partial(_pallas_update, interpret=interp))
+    return (
+        partial(_pallas_potrf, interpret=interp),
+        partial(_pallas_trsm, interpret=interp),
+        partial(_pallas_update, interpret=interp),
+    )
 
 
 def _host_compute_dtypes(K) -> tuple[np.dtype, jnp.dtype]:
@@ -317,7 +320,9 @@ def _host_compute_dtypes(K) -> tuple[np.dtype, jnp.dtype]:
 # The host-blocked driver
 # ---------------------------------------------------------------------------
 def blocked_cholesky(
-    K, block: int = 1024, *,
+    K,
+    block: int = 1024,
+    *,
     tile_impl: str = "auto",
     stats: FactorStats | None = None,
     on_step=None,
@@ -395,8 +400,9 @@ def blocked_cholesky(
     return np.ascontiguousarray(np.tril(W).T)
 
 
-def blocked_syrk_tt(T: np.ndarray, block: int = 1024, *,
-                    stats: FactorStats | None = None) -> np.ndarray:
+def blocked_syrk_tt(
+    T: np.ndarray, block: int = 1024, *, stats: FactorStats | None = None
+) -> np.ndarray:
     """Host-blocked  T T^T  for an UPPER-triangular host factor T.
 
     The lambda-independent half of the preconditioner's second stage
@@ -419,7 +425,8 @@ def blocked_syrk_tt(T: np.ndarray, block: int = 1024, *,
             j0, j1 = j * block, min((j + 1) * block, M)
             S = _put(stats, T[j0:j1, i0:], dev_dt)
             D = jax.lax.dot_general(
-                R, S, (((1,), (1,)), ((), ())), preferred_element_type=dev_dt)
+                R, S, (((1,), (1,)), ((), ())), preferred_element_type=dev_dt
+            )
             D.block_until_ready()
             stats.alloc(D.nbytes)
             _drop(stats, S)

@@ -75,8 +75,7 @@ def _as_spec(kind: str, scale: float, spec: KernelSpec | None) -> KernelSpec:
         f"pass spec=KernelSpec(...) for {kind!r}")
 
 
-def sweep_block_dims(n: int, M: int, block_m: int, block_n: int
-                     ) -> tuple[int, int]:
+def sweep_block_dims(n: int, M: int, block_m: int, block_n: int) -> tuple[int, int]:
     """(bm, bn) the fused sweep actually tiles with — the single source of
     the rounding policy, used by ``fused_sweep_pallas`` itself and by the
     grid/count derivations below."""
@@ -85,8 +84,7 @@ def sweep_block_dims(n: int, M: int, block_m: int, block_n: int
     return bm, bn
 
 
-def sweep_tile_grid(n: int, M: int, block_m: int, block_n: int
-                    ) -> tuple[int, int]:
+def sweep_tile_grid(n: int, M: int, block_m: int, block_n: int) -> tuple[int, int]:
     """(nbi, nbj) tile grid the fused sweep runs over for these shapes —
     benchmarks and tests derive expected Gram-tile evaluation counts from
     this: one per tile."""
@@ -121,9 +119,18 @@ def _tile(a, b, spec: KernelSpec) -> Array:
 # ---------------------------------------------------------------------------
 # kernel matmul: out = K(A, B) @ V
 # ---------------------------------------------------------------------------
-def _kernel_matmul_kernel(a_ref, b_ref, v_ref, *rest,
-                          spec: KernelSpec, n_valid: int, bn: int, nbj: int,
-                          has_add: bool, compensated: bool):
+def _kernel_matmul_kernel(
+    a_ref,
+    b_ref,
+    v_ref,
+    *rest,
+    spec: KernelSpec,
+    n_valid: int,
+    bn: int,
+    nbj: int,
+    has_add: bool,
+    compensated: bool,
+):
     """One (i, j) grid step: acc_i += K(A_i, B_j) @ V_j (+ add_i at init).
 
     With ``compensated`` the j-loop reduction runs through a Kahan carry
@@ -155,8 +162,7 @@ def _kernel_matmul_kernel(a_ref, b_ref, v_ref, *rest,
     delta = jax.lax.dot_general(                               # (bm, p) MXU
         k, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
     if compensated:
-        acc_ref[...], comp_ref[...] = _two_sum(acc_ref[...], comp_ref[...],
-                                               delta)
+        acc_ref[...], comp_ref[...] = _two_sum(acc_ref[...], comp_ref[...], delta)
     else:
         acc_ref[...] += delta
 
@@ -166,11 +172,16 @@ def _kernel_matmul_kernel(a_ref, b_ref, v_ref, *rest,
 
 
 def kernel_matmul_pallas(
-    A: Array, B: Array, V: Array, *,
-    kind: str = "gaussian", scale: float = 1.0,
+    A: Array,
+    B: Array,
+    V: Array,
+    *,
+    kind: str = "gaussian",
+    scale: float = 1.0,
     spec: KernelSpec | None = None,
     add: Array | None = None,
-    block_m: int = 256, block_n: int = 512,
+    block_m: int = 256,
+    block_n: int = 512,
     compensated: bool = False,
     out_dtype=None,
     interpret: bool = True,
@@ -237,17 +248,28 @@ def kernel_matmul_pallas(
         scratch_shapes=scratch,
         interpret=interpret,
     )(*operands)
-    return out[:m, :p]
+    return out[:m,:p]
 
 
 # ---------------------------------------------------------------------------
 # fused sweep: w = K(X, C)^T (K(X, C) u + v) in ONE pass over X
 # ---------------------------------------------------------------------------
-def _fused_sweep_kernel(x_ref, c_ref, u_ref, *rest,
-                        spec: KernelSpec, has_v: bool, has_mask: bool,
-                        compensated: bool,
-                        n_valid: int, m_valid: int,
-                        bm: int, bn: int, nbi: int, nbj: int):
+def _fused_sweep_kernel(
+    x_ref,
+    c_ref,
+    u_ref,
+    *rest,
+    spec: KernelSpec,
+    has_v: bool,
+    has_mask: bool,
+    compensated: bool,
+    n_valid: int,
+    m_valid: int,
+    bm: int,
+    bn: int,
+    nbi: int,
+    nbj: int,
+):
     """One (i, j) grid step of the single-pass sweep.
 
     Per step: the Gram tile K_ij is computed ONCE, staged into the row-strip
@@ -317,15 +339,14 @@ def _fused_sweep_kernel(x_ref, c_ref, u_ref, *rest,
         if has_mask:
             # caller-supplied row mask (lane-padded; column 0 is the mask):
             # zeroing t_i zeroes the masked rows' K^T t contribution EXACTLY
-            t = t * mask_ref[...][:, :1]
+            t = t * mask_ref[...][:,:1]
 
         def body(jj, _):
             delta = jax.lax.dot_general(                       # (bn, p) MXU
                 strip_ref[jj], t, (((0,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32)
             if compensated:
-                w_ref[jj], wc_ref[jj] = _two_sum(w_ref[jj], wc_ref[jj],
-                                                 delta)
+                w_ref[jj], wc_ref[jj] = _two_sum(w_ref[jj], wc_ref[jj], delta)
             else:
                 w_ref[jj] += delta
             return 0
@@ -338,10 +359,15 @@ def _fused_sweep_kernel(x_ref, c_ref, u_ref, *rest,
 
 
 def fused_sweep_pallas(
-    X: Array, C: Array, u: Array, v: Array | None, *,
+    X: Array,
+    C: Array,
+    u: Array,
+    v: Array | None,
+    *,
     spec: KernelSpec,
     row_mask: Array | None = None,
-    block_m: int = 256, block_n: int = 512,
+    block_m: int = 256,
+    block_n: int = 512,
     compensated: bool = False,
     interpret: bool = True,
     return_tile_count: bool = False,
@@ -434,7 +460,7 @@ def fused_sweep_pallas(
         interpret=interpret,
     )(*operands)
 
-    w = out.reshape(Mpad, pp)[:M, :p]
+    w = out.reshape(Mpad, pp)[:M,:p]
     if squeeze:
         w = w[:, 0]
     if return_tile_count:
@@ -446,11 +472,16 @@ def fused_sweep_pallas(
 # j-sharded sweep: out-of-core M — Gram never resident, t spilled to HBM
 # ---------------------------------------------------------------------------
 def sharded_sweep_pallas(
-    X: Array, C: Array, u: Array, v: Array | None, *,
+    X: Array,
+    C: Array,
+    u: Array,
+    v: Array | None,
+    *,
     spec: KernelSpec,
     row_mask: Array | None = None,
     shard_m: int = 8192,
-    block_m: int = 256, block_n: int = 512,
+    block_m: int = 256,
+    block_n: int = 512,
     compensated: bool = False,
     t_dtype=None,
     out_dtype=None,
@@ -489,10 +520,18 @@ def sharded_sweep_pallas(
     u2 = u[:, None] if squeeze else u
     v2 = None if v is None else (v[:, None] if squeeze else v)
 
-    t = kernel_matmul_pallas(X, C, u2, spec=spec, add=v2,
-                             block_m=block_m, block_n=block_n,
-                             compensated=compensated, out_dtype=t_dtype,
-                             interpret=interpret)
+    t = kernel_matmul_pallas(
+        X,
+        C,
+        u2,
+        spec=spec,
+        add=v2,
+        block_m=block_m,
+        block_n=block_n,
+        compensated=compensated,
+        out_dtype=t_dtype,
+        interpret=interpret,
+    )
     if row_mask is not None:
         # zeroing masked rows of the HBM-spilled t zeroes their K^T t
         # contribution EXACTLY (the transpose phase only ever reads t)
@@ -518,9 +557,15 @@ def _pairwise_kernel(a_ref, b_ref, o_ref, *, spec: KernelSpec):
 
 
 def pairwise_kernel_pallas(
-    A: Array, B: Array, *, kind: str = "gaussian", scale: float = 1.0,
+    A: Array,
+    B: Array,
+    *,
+    kind: str = "gaussian",
+    scale: float = 1.0,
     spec: KernelSpec | None = None,
-    block_m: int = 256, block_n: int = 256, interpret: bool = True,
+    block_m: int = 256,
+    block_n: int = 256,
+    interpret: bool = True,
 ) -> Array:
     """Materialize K(A, B) tile-by-tile (used to build K_MM for the
     preconditioner). Grid (i, j) with one output tile per step."""
@@ -546,4 +591,4 @@ def pairwise_kernel_pallas(
         out_shape=jax.ShapeDtypeStruct((mp, np_), A.dtype),
         interpret=interpret,
     )(Ap, Bp)
-    return out[:m, :n]
+    return out[:m,:n]

@@ -26,14 +26,14 @@ def kernel_tile(A: Array, B: Array, kind: str, scale: float) -> Array:
     return tile_eval(_spec(kind, scale), A, B)
 
 
-def kernel_matmul_ref(A: Array, B: Array, V: Array, kind: str,
-                      scale: float) -> Array:
+def kernel_matmul_ref(A: Array, B: Array, V: Array, kind: str, scale: float) -> Array:
     """out = K(A, B) @ V  — the primitive both FALKON sweeps reduce to."""
     return kernel_tile(A, B, kind, scale) @ V
 
 
-def fused_knm_matvec_ref(X: Array, C: Array, u: Array, v: Array | None,
-                         kind: str, scale: float) -> Array:
+def fused_knm_matvec_ref(
+    X: Array, C: Array, u: Array, v: Array | None, kind: str, scale: float
+) -> Array:
     """w = K(X,C)^T (K(X,C) u + v) — one full FALKON CG sweep."""
     K = kernel_tile(X, C, kind, scale)
     t = K @ u if v is None else K @ u + v

@@ -30,24 +30,36 @@ from repro.configs.base import SHAPES, input_specs
 from repro.distributed.mesh import AxisRules, use_rules
 from repro.launch.mesh import make_production_mesh
 from repro.models import cache_pspecs, cache_specs
-from repro.roofline.analysis import (analytic_memory, decode_model_flops,
-                                     derive_roofline, memory_report,
-                                     train_model_flops)
-from repro.train.steps import (TrainConfig, batch_pspecs, make_serve_step,
-                               make_train_step, train_state_pspecs,
-                               train_state_structs)
+from repro.roofline.analysis import (
+    analytic_memory,
+    decode_model_flops,
+    derive_roofline,
+    memory_report,
+    train_model_flops,
+)
+from repro.train.steps import (
+    TrainConfig,
+    batch_pspecs,
+    make_serve_step,
+    make_train_step,
+    train_state_pspecs,
+    train_state_structs,
+)
 
-ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
-                       "artifacts", "dryrun")
+ART_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun"
+)
 
 
 def _named(mesh, spec_tree):
-    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
-                        is_leaf=lambda x: isinstance(x, P))
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
 
 
-def run_cell(arch: str, shape: str, multi_pod: bool, *,
-             overrides: dict | None = None) -> dict:
+def run_cell(
+    arch: str, shape: str, multi_pod: bool, *, overrides: dict | None = None
+) -> dict:
     cfg = get_config(arch)
     if overrides:
         import dataclasses
@@ -72,14 +84,14 @@ def run_cell(arch: str, shape: str, multi_pod: bool, *,
                 state_structs = train_state_structs(cfg, tcfg)
                 state_specs = train_state_pspecs(cfg, tcfg, rules)
                 step = make_train_step(
-                    cfg, tcfg,
-                    grad_shardings=_named(mesh, state_specs.params))
+                    cfg, tcfg, grad_shardings=_named(mesh, state_specs.params)
+                )
                 b_specs = batch_pspecs(cfg, specs, rules)
                 jitted = jax.jit(
                     step,
-                    in_shardings=(_named(mesh, state_specs),
-                                  _named(mesh, b_specs)),
-                    donate_argnums=(0,))
+                    in_shardings=(_named(mesh, state_specs), _named(mesh, b_specs)),
+                    donate_argnums=(0,),
+                )
                 lowered = jitted.lower(state_structs, specs)
                 tokens = cell.global_batch * cell.seq_len
                 model_flops = train_model_flops(cfg, tokens)
@@ -91,10 +103,12 @@ def run_cell(arch: str, shape: str, multi_pod: bool, *,
                 p_specs = model_param_pspecs(cfg, rules)
                 pre_specs = {k: v for k, v in specs.items() if k != "labels"}
                 b_specs = batch_pspecs(cfg, pre_specs, rules)
-                fn = lambda params, batch: prefill_fn(params, cfg, batch,
-                                                      S_max=cell.seq_len)
-                jitted = jax.jit(fn, in_shardings=(_named(mesh, p_specs),
-                                                   _named(mesh, b_specs)))
+                fn = lambda params, batch: prefill_fn(
+                    params, cfg, batch, S_max=cell.seq_len
+                )
+                jitted = jax.jit(
+                    fn, in_shardings=(_named(mesh, p_specs), _named(mesh, b_specs))
+                )
                 lowered = jitted.lower(p_structs, pre_specs)
                 tokens = cell.global_batch * cell.seq_len
                 n_act = cfg.param_count(active_only=bool(cfg.n_experts))
@@ -122,8 +136,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, *,
         print(compiled.memory_analysis())     # proves it fits (or not)
         from repro.compat import cost_analysis_dict
         cost = cost_analysis_dict(compiled)
-        print({k: v for k, v in cost.items()
-               if k in ("flops", "bytes accessed")})
+        print({k: v for k, v in cost.items() if k in ("flops", "bytes accessed")})
         roof = derive_roofline(compiled, chips=chips, model_flops=model_flops)
 
     hbm = 16e9  # v5e per-chip HBM
@@ -151,8 +164,13 @@ def run_cell(arch: str, shape: str, multi_pod: bool, *,
 FALKON_N, FALKON_D, FALKON_M, FALKON_T = 134_217_728, 90, 16_384, 20
 
 
-def run_falkon_cell(multi_pod: bool, *, block_size: int = 8192,
-                    impl: str = "jnp", full_mesh_data: bool = False) -> dict:
+def run_falkon_cell(
+    multi_pod: bool,
+    *,
+    block_size: int = 8192,
+    impl: str = "jnp",
+    full_mesh_data: bool = False,
+) -> dict:
     """Dry-run the paper's own solver on the production mesh: n=2M, d=90
     (MillionSongs-like), M=16384 centers, t=20 CG iterations, X/y sharded
     over the data axes, preconditioner replicated."""
@@ -174,15 +192,24 @@ def run_falkon_cell(multi_pod: bool, *, block_size: int = 8192,
         # so flatten the WHOLE mesh (incl. the idle "model" axis) into the
         # data sweep — 256/512-way instead of 16/32-way.
         dp = data_axes(mesh) + ("model",) if full_mesh_data else data_axes(mesh)
-        dops = DistributedOps(
-            get_ops(impl, kern, block_size=block_size), mesh, dp)
+        dops = DistributedOps(get_ops(impl, kern, block_size=block_size), mesh, dp)
 
         def solve(X, y, C, T, A):
-            pre = Preconditioner(T=T, A=A, Q=None, D=None,
-                                 n=jnp.asarray(n, f32), diag_T=False)
-            st = falkon_solve(X, y, C, pre, kern, 1e-6, t,
-                              block_size=block_size, ops=dops,
-                              estimate_cond=False)
+            pre = Preconditioner(
+                T=T, A=A, Q=None, D=None, n=jnp.asarray(n, f32), diag_T=False
+            )
+            st = falkon_solve(
+                X,
+                y,
+                C,
+                pre,
+                kern,
+                1e-6,
+                t,
+                block_size=block_size,
+                ops=dops,
+                estimate_cond=False,
+            )
             return st.alpha
 
         Xs = jax.ShapeDtypeStruct((n, d), f32)
@@ -201,13 +228,19 @@ def run_falkon_cell(multi_pod: bool, *, block_size: int = 8192,
         roof = derive_roofline(compiled, chips=chips, model_flops=model_flops)
 
     return {
-        "arch": "falkon-solver", "shape": f"n{n>>20}M_M{M}_t{t}",
-        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
-        "kind": "solve", "compile_s": round(time.time() - t0, 1),
-        "memory": mem, "fits_hbm": mem["total_per_device"] < 16e9,
+        "arch": "falkon-solver",
+        "shape": f"n{n>>20}M_M{M}_t{t}",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "kind": "solve",
+        "compile_s": round(time.time() - t0, 1),
+        "memory": mem,
+        "fits_hbm": mem["total_per_device"] < 16e9,
         "bytes_per_device_gb": round(mem["total_per_device"] / 1e9, 3),
-        "block_size": block_size, "impl": impl,
-        "roofline": roof.as_dict(), "status": "ok",
+        "block_size": block_size,
+        "impl": impl,
+        "roofline": roof.as_dict(),
+        "status": "ok",
     }
 
 
@@ -221,20 +254,21 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, choices=list(ARCH_IDS) + [None])
     ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
-    ap.add_argument("--mesh", default="both",
-                    choices=["single", "multi", "both"])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true")
-    ap.add_argument("--falkon", action="store_true",
-                    help="run the FALKON-solver cells only")
+    ap.add_argument(
+        "--falkon", action="store_true", help="run the FALKON-solver cells only"
+    )
     args = ap.parse_args()
 
     if args.falkon:
         import os as _os
         full = _os.environ.get("FALKON_FULL_MESH", "0") == "1"
         bs = int(_os.environ.get("FALKON_BLOCK", "8192"))
-        for mp in {"single": [False], "multi": [True],
-                   "both": [False, True]}[args.mesh]:
+        for mp in {"single": [False], "multi": [True], "both": [False, True]}[
+            args.mesh
+        ]:
             res = run_falkon_cell(mp, full_mesh_data=full, block_size=bs)
             path = cell_path("falkon-solver", "solve", mp)
             with open(path, "w") as f:
@@ -245,8 +279,7 @@ def main():
         return
 
     archs = list(ARCH_IDS) if (args.all or args.arch is None) else [args.arch]
-    meshes = {"single": [False], "multi": [True],
-              "both": [False, True]}[args.mesh]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
 
     failures = []
     for arch in archs:
@@ -269,9 +302,13 @@ def main():
                           f"bottleneck={res['roofline']['bottleneck']}")
                 except Exception as e:
                     traceback.print_exc()
-                    res = {"arch": arch, "shape": shape,
-                           "mesh": "multi" if mp else "single",
-                           "status": "error", "error": repr(e)}
+                    res = {
+                        "arch": arch,
+                        "shape": shape,
+                        "mesh": "multi" if mp else "single",
+                        "status": "error",
+                        "error": repr(e),
+                    }
                     failures.append(tag)
                 with open(path, "w") as f:
                     json.dump(res, f, indent=1)

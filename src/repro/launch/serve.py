@@ -54,11 +54,11 @@ def serve_lm(args) -> None:
     params = model_params(jax.random.PRNGKey(0), cfg)
 
     B, P, G = args.batch, args.prompt_len, args.gen
-    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
-                                          cfg.vocab)}
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, P), 0, cfg.vocab)}
     if cfg.frontend == "tokens+vision":
         batch["vision_embeds"] = jax.random.normal(
-            jax.random.PRNGKey(2), (B, cfg.n_image_tokens, cfg.d_vision)) * .05
+            jax.random.PRNGKey(2), (B, cfg.n_image_tokens, cfg.d_vision)
+        ) * .05
 
     t0 = time.perf_counter()
     logits, cache = prefill(params, cfg, batch, S_max=P + G)
@@ -78,11 +78,12 @@ def serve_lm(args) -> None:
     t_decode = (time.perf_counter() - t0) / max(G - 2, 1)
     print(f"{cfg.name}: prefill {B}x{P} in {t_prefill*1e3:.0f}ms; "
           f"decode {t_decode*1e3:.1f}ms/token/batch")
-    print("sample:", jnp.stack(out, 1)[0, :12].tolist())
+    print("sample:", jnp.stack(out, 1)[0,:12].tolist())
 
 
-def make_request_trace(key, n_requests: int, max_batch: int, d: int,
-                       seed: int = 0) -> list:
+def make_request_trace(
+    key, n_requests: int, max_batch: int, d: int, seed: int = 0
+) -> list:
     """Pre-generated ragged request batches (host arrays, sizes 1..max_batch).
 
     Generated BEFORE any serving timer starts: the old loop built each batch
@@ -111,18 +112,25 @@ def serve_falkon(args) -> None:
     w = jax.random.normal(k2, (d,))
     y = jnp.sin(X @ w) + 0.05 * jax.random.normal(k3, (n,))
 
-    cfg = FalkonConfig(kernel="gaussian", kernel_params=(("sigma", 2.0),),
-                       lam=1e-5, num_centers=args.centers, iterations=15,
-                       block_size=max(args.batch, 128),
-                       ops_impl=args.ops_impl, precision=args.precision)
+    cfg = FalkonConfig(
+        kernel="gaussian",
+        kernel_params=(("sigma", 2.0),),
+        lam=1e-5,
+        num_centers=args.centers,
+        iterations=15,
+        block_size=max(args.batch, 128),
+        ops_impl=args.ops_impl,
+        precision=args.precision,
+    )
     plan = cfg.make_ops().plan(n, min(args.centers, n), d)
     print(f"sweep plan: {plan.path} ({plan.reason})")
     t0 = time.perf_counter()
     if args.stream_chunk > 0:
         # out-of-core: X/y live on the host, chunks stream through a
         # double-buffered transfer (see repro.data.streaming)
-        src = ArrayChunkSource(jax.device_get(X), jax.device_get(y),
-                               chunk_rows=args.stream_chunk)
+        src = ArrayChunkSource(
+            jax.device_get(X), jax.device_get(y), chunk_rows=args.stream_chunk
+        )
         est, state = falkon_fit_streaming(jax.random.PRNGKey(1), src, cfg)
     else:
         est, state = falkon_fit(jax.random.PRNGKey(1), X, y, cfg)
@@ -131,16 +139,14 @@ def serve_falkon(args) -> None:
 
     # the streaming solve skips the power-iteration cond estimate (each
     # probe would cost a full data pass) — don't print a fabricated 0.0
-    cond = ("n/a" if args.stream_chunk > 0
-            else f"{float(state.cond_estimate):.1f}")
+    cond = ("n/a" if args.stream_chunk > 0 else f"{float(state.cond_estimate):.1f}")
     print(f"falkon[{cfg.impl}/{cfg.precision}]: fit n={n} "
           f"M={est.centers.shape[0]} in {t_fit:.2f}s; cond(W)={cond}")
 
     # The serving step is KernelOps.apply on the backend baked into the
     # estimator — per request one (batch, M) kernel matmul. The trace is
     # pre-generated so the timer below measures serving, not host RNG.
-    trace = make_request_trace(jax.random.PRNGKey(2), args.requests,
-                               args.batch, d)
+    trace = make_request_trace(jax.random.PRNGKey(2), args.requests, args.batch, d)
     rows = sum(b.shape[0] for b in trace)
     if args.per_request:
         # single-stream baseline: one dispatch per request, one XLA trace
@@ -175,16 +181,23 @@ def serve_falkon(args) -> None:
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--falkon", action="store_true",
-                    help="serve a FALKON predictor instead of an LM")
+    ap.add_argument(
+        "--falkon",
+        action="store_true",
+        help="serve a FALKON predictor instead of an LM",
+    )
     ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     # FALKON-mode knobs
-    ap.add_argument("--ops-impl", default="jnp", choices=("jnp", "pallas"),
-                    help="KernelOps backend for fit + serving")
+    ap.add_argument(
+        "--ops-impl",
+        default="jnp",
+        choices=("jnp", "pallas"),
+        help="KernelOps backend for fit + serving",
+    )
     ap.add_argument("--precision", default="fp32", choices=("fp32", "bf16"))
     ap.add_argument("--n", type=int, default=4096)
     ap.add_argument("--d", type=int, default=16)

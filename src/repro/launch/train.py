@@ -31,8 +31,9 @@ def main():
     ap.add_argument("--microbatch", type=int, default=0)
     ap.add_argument("--grad-compression", action="store_true")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
-    ap.add_argument("--mesh", default=None,
-                    help="e.g. 16x16 or 2x16x16 (None = single device)")
+    ap.add_argument(
+        "--mesh", default=None, help="e.g. 16x16 or 2x16x16 (None = single device)"
+    )
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -43,13 +44,24 @@ def main():
         mesh = jax.make_mesh(dims, axes)
         rules = AxisRules(mesh=mesh, fsdp=cfg.fsdp)
 
-    tcfg = TrainConfig(learning_rate=args.lr, warmup_steps=args.steps // 10,
-                       total_steps=args.steps, microbatch=args.microbatch,
-                       grad_compression=args.grad_compression)
+    tcfg = TrainConfig(
+        learning_rate=args.lr,
+        warmup_steps=args.steps // 10,
+        total_steps=args.steps,
+        microbatch=args.microbatch,
+        grad_compression=args.grad_compression,
+    )
     rcfg = TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=max(10, args.steps // 5))
-    trainer = Trainer(cfg, tcfg, rcfg, mesh=mesh, rules=rules,
-                      straggler_cb=lambda i, dt, z: print(
-                          f"[straggler] step {i}: {dt*1e3:.0f}ms (z={z:.1f})"))
+    trainer = Trainer(
+        cfg,
+        tcfg,
+        rcfg,
+        mesh=mesh,
+        rules=rules,
+        straggler_cb=lambda i,
+        dt,
+        z: print(f"[straggler] step {i}: {dt*1e3:.0f}ms (z={z:.1f})"),
+    )
     signal.signal(signal.SIGTERM, lambda *_: trainer.request_preemption())
 
     stream = token_stream(TokenStreamConfig(

@@ -1,4 +1,14 @@
 """Model zoo for the assigned architectures (see repro.configs)."""
-from .model import (cache_pspecs, cache_specs, decode_step, forward,
-                    init_cache, loss_fn, model_param_pspecs,
-                    model_param_structs, model_params, prefill, split_periods)
+from .model import (
+    cache_pspecs,
+    cache_specs,
+    decode_step,
+    forward,
+    init_cache,
+    loss_fn,
+    model_param_pspecs,
+    model_param_structs,
+    model_params,
+    prefill,
+    split_periods,
+)

@@ -46,9 +46,9 @@ def rope(x: Array, positions: Array, theta: float) -> Array:
     half = dh // 2
     freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
     ang = positions[:, None].astype(jnp.float32) * freqs            # (S, half)
-    ang = ang[None, :, None, :] if x.ndim == 4 else ang[None, :, :]
+    ang = ang[None,:, None,:] if x.ndim == 4 else ang[None,:,:]
     cos, sin = jnp.cos(ang), jnp.sin(ang)
-    x1, x2 = x[..., :half], x[..., half:]
+    x1, x2 = x[..., : half], x[..., half :]
     out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
     return out.astype(x.dtype)
 
@@ -115,8 +115,9 @@ def moe_apply(p: dict, x: Array, cfg: ModelConfig) -> Array:
     return _moe_local(p, x, cfg)
 
 
-def _moe_sharded(p: dict, x: Array, cfg: ModelConfig, mesh, mp: int,
-                 dp: tuple) -> Array:
+def _moe_sharded(
+    p: dict, x: Array, cfg: ModelConfig, mesh, mp: int, dp: tuple
+) -> Array:
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
@@ -131,8 +132,7 @@ def _moe_sharded(p: dict, x: Array, cfg: ModelConfig, mesh, mp: int,
         xf = x_loc.reshape(T, D)
         logits = (xf @ router).astype(jnp.float32)
         if E != cfg.n_experts:
-            logits = jnp.where(jnp.arange(E)[None, :] >= cfg.n_experts,
-                               -1e30, logits)
+            logits = jnp.where(jnp.arange(E)[None,:] >= cfg.n_experts, -1e30, logits)
         gate, eidx = jax.lax.top_k(jax.nn.softmax(logits, -1), K)
         gate = (gate / jnp.sum(gate, -1, keepdims=True)).astype(x_loc.dtype)
         e_flat = eidx.reshape(-1)
@@ -143,7 +143,8 @@ def _moe_sharded(p: dict, x: Array, cfg: ModelConfig, mesh, mp: int,
         slot = jnp.where(keep, e_flat * C + pos, E * C)
         x_rep = jnp.repeat(xf, K, axis=0)
         buf = jnp.zeros((E * C + 1, D), x_loc.dtype).at[slot].add(
-            x_rep * keep[:, None].astype(x_loc.dtype))
+            x_rep * keep[:, None].astype(x_loc.dtype)
+        )
         xe = buf[:-1].reshape(E, C, D)
         # expert all-to-all: (E, C, D) -> (E_loc, mp*C, D). Expert ids are
         # shard-major (expert = j*E_loc + e_loc, matching P("model") weight
@@ -152,8 +153,11 @@ def _moe_sharded(p: dict, x: Array, cfg: ModelConfig, mesh, mp: int,
         xe = jax.lax.all_to_all(xe.reshape(mp, E_loc, C, D), "model", 0, 0,
                                 tiled=False)          # (src_shard, E_loc, C, D)
         xe = xe.transpose(1, 0, 2, 3).reshape(E_loc, mp * C, D)
-        h = _act(cfg.act, jnp.einsum("ecd,edf->ecf", xe, wg),
-                 jnp.einsum("ecd,edf->ecf", xe, wu))
+        h = _act(
+            cfg.act,
+            jnp.einsum("ecd,edf->ecf", xe, wg),
+            jnp.einsum("ecd,edf->ecf", xe, wu),
+        )
         ye = jnp.einsum("ecf,efd->ecd", h, wd)       # (E_loc, mp*C, D)
         # inverse all-to-all: back to the (E, C, D) source-local layout
         ye = ye.reshape(E_loc, mp, C, D).transpose(1, 0, 2, 3)
@@ -180,8 +184,7 @@ def _moe_local(p: dict, x: Array, cfg: ModelConfig) -> Array:
     xf = x.reshape(T, D)
     logits = (xf @ p["router"]).astype(jnp.float32)          # (T, E_pad)
     if E != cfg.n_experts:   # mask padded experts out of the routing
-        logits = jnp.where(jnp.arange(E)[None, :] >= cfg.n_experts, -1e30,
-                           logits)
+        logits = jnp.where(jnp.arange(E)[None,:] >= cfg.n_experts, -1e30, logits)
     probs = jax.nn.softmax(logits, -1)
     gate, eidx = jax.lax.top_k(probs, K)                     # (T, K)
     gate = (gate / jnp.sum(gate, -1, keepdims=True)).astype(x.dtype)
@@ -196,13 +199,16 @@ def _moe_local(p: dict, x: Array, cfg: ModelConfig) -> Array:
 
     x_rep = jnp.repeat(xf, K, axis=0)                        # (T*K, D)
     buf = jnp.zeros((E * C + 1, D), x.dtype).at[slot].add(
-        x_rep * keep[:, None].astype(x.dtype))
+        x_rep * keep[:, None].astype(x.dtype)
+    )
     xe = buf[:-1].reshape(E, C, D)
     xe = lshard(xe, ("experts", "expert_cap", None))
 
-    h = _act(cfg.act,
-             jnp.einsum("ecd,edf->ecf", xe, p["w_gate"]),
-             jnp.einsum("ecd,edf->ecf", xe, p["w_up"]))
+    h = _act(
+        cfg.act,
+        jnp.einsum("ecd,edf->ecf", xe, p["w_gate"]),
+        jnp.einsum("ecd,edf->ecf", xe, p["w_up"]),
+    )
     ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
     ye = lshard(ye, ("experts", "expert_cap", None))
 
@@ -240,9 +246,9 @@ def _mask(si: Array, sj: Array, causal: bool, window: int) -> Array:
     """si: query positions (Sq,), sj: key positions (Sk,) -> bool (Sq, Sk)."""
     m = jnp.ones((si.shape[0], sj.shape[0]), bool)
     if causal:
-        m &= sj[None, :] <= si[:, None]
+        m &= sj[None,:] <= si[:, None]
     if window > 0:
-        m &= sj[None, :] > si[:, None] - window
+        m &= sj[None,:] > si[:, None] - window
     return m
 
 
@@ -284,9 +290,17 @@ def _sdpa(q: Array, k: Array, v: Array, mask: Array | None) -> Array:
     return jnp.einsum("bhqk,bkhd->bqhd", w, v)
 
 
-def _chunked_sdpa(q: Array, k: Array, v: Array, q_pos: Array, k_pos: Array,
-                  causal: bool, window: int, chunk: int,
-                  q_block: int = 2048) -> Array:
+def _chunked_sdpa(
+    q: Array,
+    k: Array,
+    v: Array,
+    q_pos: Array,
+    k_pos: Array,
+    causal: bool,
+    window: int,
+    chunk: int,
+    q_block: int = 2048,
+) -> Array:
     """Online-softmax attention: q processed in blocks (lax.map, rematted),
     kv scanned in chunks. Peak score tensor: (B, H, q_block, chunk) — capped
     even for archs whose few heads cannot shard over the model axis."""
@@ -298,17 +312,23 @@ def _chunked_sdpa(q: Array, k: Array, v: Array, q_pos: Array, k_pos: Array,
 
         def one(args):
             qi, pi = args
-            return _chunked_sdpa_core(qi, k, v, pi, k_pos, causal, window,
-                                      chunk)
+            return _chunked_sdpa_core(qi, k, v, pi, k_pos, causal, window, chunk)
 
         out = jax.lax.map(jax.checkpoint(one), (qb, pb))
         return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, v.shape[-1])
     return _chunked_sdpa_core(q, k, v, q_pos, k_pos, causal, window, chunk)
 
 
-def _chunked_sdpa_core(q: Array, k: Array, v: Array, q_pos: Array,
-                       k_pos: Array, causal: bool, window: int,
-                       chunk: int) -> Array:
+def _chunked_sdpa_core(
+    q: Array,
+    k: Array,
+    v: Array,
+    q_pos: Array,
+    k_pos: Array,
+    causal: bool,
+    window: int,
+    chunk: int,
+) -> Array:
     """KV-chunk online-softmax scan. q: (B,Sq,H,dh), k/v: (B,Sk,H,dh|dv)."""
     B, Sq, H, dh = q.shape
     dv = v.shape[-1]
@@ -327,7 +347,7 @@ def _chunked_sdpa_core(q: Array, k: Array, v: Array, q_pos: Array,
         m, l, acc = carry
         kb, vb, pb = inp
         s = jnp.einsum("bqhd,bkhd->bhqk", q, kb).astype(jnp.float32) * scale
-        msk = _mask(q_pos, pb, causal, window) & (pb[None, :] < Sk)
+        msk = _mask(q_pos, pb, causal, window) & (pb[None,:] < Sk)
         s = jnp.where(msk[None, None], s, -1e30)
         m_new = jnp.maximum(m, jnp.max(s, -1))
         p = jnp.exp(s - m_new[..., None])
@@ -342,15 +362,22 @@ def _chunked_sdpa_core(q: Array, k: Array, v: Array, q_pos: Array,
     a0 = jnp.zeros((B, H, Sq, dv), jnp.float32)
     # checkpointed body: the (B,H,Sq,chunk) score tensor is recomputed in
     # bwd instead of being saved per scan step (flash-attention-style memory)
-    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0),
-                                  (kc, vc, pc))
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0), (kc, vc, pc))
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     return out.transpose(0, 2, 1, 3).astype(q.dtype)        # (B,Sq,H,dv)
 
 
-def attn_apply(p: dict, x: Array, cfg: ModelConfig, spec: LayerSpec, *,
-               positions: Array, kv_x: Array | None = None,
-               cache: dict | None = None, pos_scalar: Array | None = None):
+def attn_apply(
+    p: dict,
+    x: Array,
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    *,
+    positions: Array,
+    kv_x: Array | None = None,
+    cache: dict | None = None,
+    pos_scalar: Array | None = None,
+):
     """Returns (out, new_cache).
 
     Modes:
@@ -396,14 +423,16 @@ def attn_apply(p: dict, x: Array, cfg: ModelConfig, spec: LayerSpec, *,
 
         if cache is not None and Sq > 1:
             # prefill: write the whole kv block at 0, attend over fresh kv
-            new_cache = {"k": _block_write(cache["k"], k),
-                         "v": _block_write(cache["v"], v)}
+            new_cache = {
+                "k": _block_write(cache["k"], k), "v": _block_write(cache["v"], v)
+            }
             kf, vf = _expand_kv(k, G), _expand_kv(v, G)
             if Sq <= cfg.dense_attn_max_seq:
                 o = _sdpa(q, kf, vf, _mask(positions, positions, True, window))
             else:
-                o = _chunked_sdpa(q, kf, vf, positions, positions, True,
-                                  window, cfg.attn_chunk)
+                o = _chunked_sdpa(
+                    q, kf, vf, positions, positions, True, window, cfg.attn_chunk
+                )
         elif cache is not None:
             # decode: write new kv at pos_scalar, attend over the cache.
             # masked elementwise write — a dynamic-update-slice at a traced
@@ -424,7 +453,7 @@ def attn_apply(p: dict, x: Array, cfg: ModelConfig, spec: LayerSpec, *,
             qg = q.reshape(B, Sq, Hkv, G, dh)
             s = jnp.einsum("bqngd,bknd->bngqk", qg, kc).astype(jnp.float32)
             s = s / jnp.sqrt(dh)
-            s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+            s = jnp.where(valid[None, None, None, None,:], s, -1e30)
             w = jax.nn.softmax(s, -1).astype(x.dtype)
             o = jnp.einsum("bngqk,bknd->bqngd", w, vc)
         else:
@@ -433,13 +462,13 @@ def attn_apply(p: dict, x: Array, cfg: ModelConfig, spec: LayerSpec, *,
             if Sq <= cfg.dense_attn_max_seq:
                 o = _sdpa(q, kf, vf, _mask(positions, positions, True, window))
             else:
-                o = _chunked_sdpa(q, kf, vf, positions, positions, True,
-                                  window, cfg.attn_chunk)
+                o = _chunked_sdpa(
+                    q, kf, vf, positions, positions, True, window, cfg.attn_chunk
+                )
 
     o = o.reshape(B, Sq, Hq, dh)
     if Hq != cfg.n_heads:   # zero dummy-head outputs: exact true-head model
-        o = o * (jnp.arange(Hq) < cfg.n_heads)[None, None, :, None
-                                               ].astype(o.dtype)
+        o = o * (jnp.arange(Hq) < cfg.n_heads)[None, None,:, None].astype(o.dtype)
     out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
     if cross and "gate" in p:
         out = out * jnp.tanh(p["gate"])
@@ -466,15 +495,22 @@ def mla_pd(cfg: ModelConfig) -> dict:
     }
 
 
-def mla_apply(p: dict, x: Array, cfg: ModelConfig, *, positions: Array,
-              cache: dict | None = None, pos_scalar: Array | None = None):
+def mla_apply(
+    p: dict,
+    x: Array,
+    cfg: ModelConfig,
+    *,
+    positions: Array,
+    cache: dict | None = None,
+    pos_scalar: Array | None = None,
+):
     B, Sq, D = x.shape
     H = cfg.padded_heads
     nope, rp, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
 
     qa = rms_norm(x @ p["wq_a"], p["q_a_norm"], cfg.norm_eps)
     q = jnp.einsum("bsr,rhk->bshk", qa, p["wq_b"])            # (B,S,H,nope+rp)
-    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_nope, q_rope = q[..., : nope], q[..., nope :]
     c_kv = rms_norm(x @ p["w_dkv"], p["kv_a_norm"], cfg.norm_eps)  # (B,S,r_kv)
     k_rope = x @ p["w_krope"]                                  # (B,S,rp)
 
@@ -483,18 +519,22 @@ def mla_apply(p: dict, x: Array, cfg: ModelConfig, *, positions: Array,
         k_rope = rope(k_rope, positions, cfg.rope_theta)
         new_cache = None
         if cache is not None:   # prefill: store compressed kv at position 0
-            new_cache = {"c_kv": _block_write(cache["c_kv"], c_kv),
-                         "k_rope": _block_write(cache["k_rope"], k_rope)}
+            new_cache = {
+                "c_kv": _block_write(cache["c_kv"], c_kv),
+                "k_rope": _block_write(cache["k_rope"], k_rope),
+            }
         k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"])
         v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"])
         k = jnp.concatenate(
-            [k_nope, jnp.broadcast_to(k_rope[:, :, None], (B, Sq, H, rp))], -1)
+            [k_nope, jnp.broadcast_to(k_rope[:,:, None], (B, Sq, H, rp))], -1
+        )
         qfull = jnp.concatenate([q_nope, q_rope], -1)
         if Sq <= cfg.dense_attn_max_seq:
             o = _sdpa(qfull, k, v, _mask(positions, positions, True, 0))
         else:
-            o = _chunked_sdpa(qfull, k, v, positions, positions, True, 0,
-                              cfg.attn_chunk)
+            o = _chunked_sdpa(
+                qfull, k, v, positions, positions, True, 0, cfg.attn_chunk
+            )
     else:
         # absorbed decode: score in the latent space (B,S,r_kv) — the MLA
         # cache is the compressed c_kv + shared k_rope, O(S*(r_kv+rp)) memory.
@@ -510,13 +550,12 @@ def mla_apply(p: dict, x: Array, cfg: ModelConfig, *, positions: Array,
              jnp.einsum("bshk,btk->bhst", q_rope, krope_c)).astype(jnp.float32)
         s = s / jnp.sqrt(nope + rp)
         valid = jnp.arange(Smax) <= idx
-        s = jnp.where(valid[None, None, None, :], s, -1e30)
+        s = jnp.where(valid[None, None, None,:], s, -1e30)
         w = jax.nn.softmax(s, -1).astype(x.dtype)
         o_lat = jnp.einsum("bhst,btr->bshr", w, ckv_c)           # (B,1,H,r_kv)
         o = jnp.einsum("bshr,rhk->bshk", o_lat, p["w_uv"])       # absorb W_uv
 
     if H != cfg.n_heads:    # zero dummy-head outputs (head padding)
-        o = o * (jnp.arange(H) < cfg.n_heads)[None, None, :, None
-                                              ].astype(o.dtype)
+        o = o * (jnp.arange(H) < cfg.n_heads)[None, None,:, None].astype(o.dtype)
     out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
     return out, new_cache

@@ -16,8 +16,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import LayerSpec, ModelConfig
 from repro.distributed.mesh import lshard
-from . import layers as L
-from . import ssm as S
+from .import layers as L
+from .import ssm as S
 from .params import PD, init_params, param_pspecs, param_shape_structs, stack_pds
 
 Array = jax.Array
@@ -33,10 +33,9 @@ def split_periods(pattern: tuple[LayerSpec, ...]):
     for p in range(1, Lp + 1):
         k = Lp // p
         period = pattern[:p]
-        if period * k == pattern[:p * k] and \
-                pattern[p * k:] == period[:Lp - p * k]:
+        if period * k == pattern[: p * k] and pattern[p * k :] == period[: Lp - p * k]:
             if k >= 1:
-                return period, k, pattern[p * k:]
+                return period, k, pattern[p * k :]
     return pattern, 1, ()
 
 
@@ -61,27 +60,51 @@ def layer_pd(cfg: ModelConfig, spec: LayerSpec) -> dict:
     return d
 
 
-def layer_apply(p: dict, x: Array, cfg: ModelConfig, spec: LayerSpec, *,
-                positions, vision_kv=None, cache=None, pos_scalar=None):
+def layer_apply(
+    p: dict,
+    x: Array,
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    *,
+    positions,
+    vision_kv=None,
+    cache=None,
+    pos_scalar=None,
+):
     h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
     if spec.kind == "mamba":
         mix, new_cache = S.ssm_apply(p["mixer"], h, cfg, cache=cache)
     elif spec.kind == "cross":
-        mix, new_cache = L.attn_apply(p["mixer"], h, cfg, spec,
-                                      positions=positions, kv_x=vision_kv,
-                                      cache=cache, pos_scalar=pos_scalar)
+        mix, new_cache = L.attn_apply(
+            p["mixer"],
+            h,
+            cfg,
+            spec,
+            positions=positions,
+            kv_x=vision_kv,
+            cache=cache,
+            pos_scalar=pos_scalar,
+        )
     elif cfg.use_mla:
-        mix, new_cache = L.mla_apply(p["mixer"], h, cfg, positions=positions,
-                                     cache=cache, pos_scalar=pos_scalar)
+        mix, new_cache = L.mla_apply(
+            p["mixer"], h, cfg, positions=positions, cache=cache, pos_scalar=pos_scalar
+        )
     else:
-        mix, new_cache = L.attn_apply(p["mixer"], h, cfg, spec,
-                                      positions=positions, cache=cache,
-                                      pos_scalar=pos_scalar)
+        mix, new_cache = L.attn_apply(
+            p["mixer"],
+            h,
+            cfg,
+            spec,
+            positions=positions,
+            cache=cache,
+            pos_scalar=pos_scalar,
+        )
     x = x + mix
     if "mlp" in p:
         h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
-        out = L.moe_apply(p["mlp"], h2, cfg) if spec.moe else \
-            L.mlp_apply(p["mlp"], h2, cfg)
+        out = L.moe_apply(p["mlp"], h2, cfg) if spec.moe else L.mlp_apply(
+            p["mlp"], h2, cfg
+        )
         x = x + out
     x = lshard(x, ("batch", None, "embed"))
     return x, new_cache
@@ -130,12 +153,19 @@ def _embed_inputs(params, cfg: ModelConfig, batch: dict) -> Array:
 def _vision_kv_src(params, cfg: ModelConfig, batch: dict) -> Array | None:
     if cfg.frontend != "tokens+vision":
         return None
-    return batch["vision_embeds"].astype(jnp.dtype(cfg.dtype)) @ \
-        params["vision_proj"]
+    return batch["vision_embeds"].astype(jnp.dtype(cfg.dtype)) @ params["vision_proj"]
 
 
-def _stack_apply(params, cfg: ModelConfig, x: Array, *, positions,
-                 vision_kv=None, caches=None, pos_scalar=None):
+def _stack_apply(
+    params,
+    cfg: ModelConfig,
+    x: Array,
+    *,
+    positions,
+    vision_kv=None,
+    caches=None,
+    pos_scalar=None,
+):
     """Run period-scan + tail. caches: None or matching structure
     {"period": [stacked per period-slot], "tail": [...]}. Returns (x, caches).
     """
@@ -145,17 +175,24 @@ def _stack_apply(params, cfg: ModelConfig, x: Array, *, positions,
         p_slice, c_slice = slices
         new_cs = []
         for i, spec in enumerate(period):
-            x, nc = layer_apply(p_slice[i], x, cfg, spec, positions=positions,
-                                vision_kv=vision_kv,
-                                cache=None if c_slice is None else c_slice[i],
-                                pos_scalar=pos_scalar)
+            x, nc = layer_apply(
+                p_slice[i],
+                x,
+                cfg,
+                spec,
+                positions=positions,
+                vision_kv=vision_kv,
+                cache=None if c_slice is None else c_slice[i],
+                pos_scalar=pos_scalar,
+            )
             new_cs.append(nc if nc is not None else 0)
         return x, new_cs
 
     body = period_body
     if cfg.remat == "full":
-        body = jax.checkpoint(period_body,
-                              policy=jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(
+            period_body, policy=jax.checkpoint_policies.nothing_saveable
+        )
 
     cache_xs = None if caches is None else caches["period"]
     a = _sqrt_factor(n_per)
@@ -164,28 +201,32 @@ def _stack_apply(params, cfg: ModelConfig, x: Array, *, positions,
         # period carries live instead of O(n) — the difference between a
         # deep stack fitting HBM or not (see EXPERIMENTS.md SS Perf).
         b = n_per // a
-        p2 = jax.tree.map(lambda t: t.reshape((a, b) + t.shape[1:]),
-                          params["period"])
+        p2 = jax.tree.map(lambda t: t.reshape((a, b) + t.shape[1:]), params["period"])
 
         def outer_body(xc, p_slice_b):
-            xc, _ = jax.lax.scan(lambda xx, ps: body(xx, (ps, None)),
-                                 xc, p_slice_b)
+            xc, _ = jax.lax.scan(lambda xx, ps: body(xx, (ps, None)), xc, p_slice_b)
             return xc, 0
 
         x, _ = jax.lax.scan(jax.checkpoint(outer_body), x, p2)
         new_period_cache = None
     else:
-        x, new_period_cache = jax.lax.scan(body, x,
-                                           (params["period"], cache_xs))
+        x, new_period_cache = jax.lax.scan(body, x, (params["period"], cache_xs))
     new_caches = None
     tail_caches = []
     for i, spec in enumerate(tail):
         c = None if caches is None else caches["tail"][i]
 
         def tail_fn(p, xx, cc):
-            return layer_apply(p, xx, cfg, tail[i], positions=positions,
-                               vision_kv=vision_kv, cache=cc,
-                               pos_scalar=pos_scalar)
+            return layer_apply(
+                p,
+                xx,
+                cfg,
+                tail[i],
+                positions=positions,
+                vision_kv=vision_kv,
+                cache=cc,
+                pos_scalar=pos_scalar,
+            )
 
         if cfg.remat == "full" and caches is None:
             tail_fn = jax.checkpoint(tail_fn)
@@ -199,7 +240,7 @@ def _stack_apply(params, cfg: ModelConfig, x: Array, *, positions,
 def _sqrt_factor(n: int) -> int:
     """Largest divisor of n that is <= sqrt(n)."""
     best = 1
-    for a in range(2, int(n ** 0.5) + 1):
+    for a in range(2, int(n**0.5) + 1):
         if n % a == 0:
             best = a
     return best
@@ -231,11 +272,9 @@ def _ce_chunk(x_c: Array, labels_c: Array, lm_head: Array, cfg: ModelConfig):
     V = cfg.padded_vocab
     if V != cfg.vocab:   # mask padded vocab entries out of the normalizer
         neg = jnp.asarray(jnp.finfo(logits.dtype).min, logits.dtype)
-        logits = jnp.where((jnp.arange(V) >= cfg.vocab)[None, None, :], neg,
-                           logits)
+        logits = jnp.where((jnp.arange(V) >= cfg.vocab)[None, None,:], neg, logits)
     m = jax.lax.stop_gradient(jnp.max(logits, axis=-1))
-    sumexp = jnp.sum(jnp.exp((logits - m[..., None]).astype(jnp.float32)),
-                     axis=-1)
+    sumexp = jnp.sum(jnp.exp((logits - m[..., None]).astype(jnp.float32)), axis=-1)
     lse = m.astype(jnp.float32) + jnp.log(sumexp)
     gold = jnp.take_along_axis(logits, labels_c[..., None], axis=-1)[..., 0]
     return jnp.sum(lse - gold.astype(jnp.float32))
@@ -256,8 +295,7 @@ def loss_fn(params, cfg: ModelConfig, batch: dict, *, ce_chunk: int = 512):
         xc, lc = inp
         return tot + _ce_chunk(xc, lc, params["lm_head"], cfg), None
 
-    total, _ = jax.lax.scan(jax.checkpoint(body), jnp.zeros((), jnp.float32),
-                            (xs, ls))
+    total, _ = jax.lax.scan(jax.checkpoint(body), jnp.zeros((), jnp.float32), (xs, ls))
     loss = total / (B * S_)
     return loss, {"loss": loss, "ppl_proxy": jnp.exp(jnp.minimum(loss, 20.0))}
 
@@ -268,8 +306,9 @@ def loss_fn(params, cfg: ModelConfig, batch: dict, *, ce_chunk: int = 512):
 def layer_cache_pd(cfg: ModelConfig, spec: LayerSpec, B: int, S_max: int):
     f = jnp.dtype(cfg.dtype)
     if spec.kind == "mamba":
-        H, N, P_, di, K = (cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim,
-                           cfg.d_inner, cfg.ssm_conv)
+        H, N, P_, di, K = (
+            cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim, cfg.d_inner, cfg.ssm_conv
+        )
         return {
             "state": PD((B, H, N, P_), ("batch", "heads", None, None), "zeros"),
             "conv": PD((B, K - 1, di + 2 * N), ("batch", None, "ff"), "zeros"),
@@ -331,15 +370,19 @@ def cache_pspecs(cfg: ModelConfig, B: int, S_max: int, rules):
 
 def prefill(params, cfg: ModelConfig, batch: dict, S_max: int):
     """Run the prompt through the stack, building a cache of capacity S_max."""
-    B, S_ = (batch["embeds"] if cfg.frontend == "embeds" else
-             batch["tokens"]).shape[:2]
+    B, S_ = (batch["embeds"] if cfg.frontend == "embeds" else batch["tokens"]).shape[:2]
     cache = init_cache(cfg, B, S_max)
     x = _embed_inputs(params, cfg, batch)
     positions = jnp.arange(S_)
     vkv = _vision_kv_src(params, cfg, batch)
     x, new_caches = _stack_apply(
-        params, cfg, x, positions=positions, vision_kv=vkv,
-        caches={"period": cache["period"], "tail": cache["tail"]})
+        params,
+        cfg,
+        x,
+        positions=positions,
+        vision_kv=vkv,
+        caches={"period": cache["period"], "tail": cache["tail"]},
+    )
     x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
     logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], params["lm_head"])
     new_caches["pos"] = jnp.asarray(S_, jnp.int32)
@@ -349,14 +392,18 @@ def prefill(params, cfg: ModelConfig, batch: dict, S_max: int):
 def decode_step(params, cfg: ModelConfig, cache: dict, batch: dict):
     """One token step. batch: {"token": (B,)} (+ vision embeds use cache)."""
     tok = batch["token"]
-    x = jnp.take(params["embed"], tok, axis=0)[:, None, :]
+    x = jnp.take(params["embed"], tok, axis=0)[:, None,:]
     x = lshard(x, ("batch", None, "embed"))
     pos = cache["pos"]
     positions = pos[None]
     x, new_caches = _stack_apply(
-        params, cfg, x, positions=positions,
+        params,
+        cfg,
+        x,
+        positions=positions,
         caches={"period": cache["period"], "tail": cache["tail"]},
-        pos_scalar=pos)
+        pos_scalar=pos,
+    )
     x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
     logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
     new_caches["pos"] = pos + 1

@@ -41,13 +41,12 @@ def init_params(key: jax.Array, tree, dtype) -> dict:
                                              1.0, 16.0)).astype(dtype)
         else:
             fan_in = pd.shape[0] if len(pd.shape) == 1 else int(
-                np.prod(pd.shape[:-1]) if pd.init == "embed" else
-                np.prod(pd.shape[:-1]))
+                np.prod(pd.shape[:-1]) if pd.init == "embed" else np.prod(pd.shape[:-1])
+            )
             scale = pd.scale if pd.scale is not None else fan_in ** -0.5
             if pd.init == "embed":
                 scale = 1.0 if pd.scale is None else pd.scale
-            arr = (jax.random.normal(k, pd.shape, jnp.float32) * scale
-                   ).astype(dtype)
+            arr = (jax.random.normal(k, pd.shape, jnp.float32) * scale).astype(dtype)
         out.append(arr)
     return jax.tree.unflatten(treedef, out)
 
@@ -55,12 +54,15 @@ def init_params(key: jax.Array, tree, dtype) -> dict:
 def param_shape_structs(tree, dtype) -> dict:
     return jax.tree.map(
         lambda pd: jax.ShapeDtypeStruct(pd.shape, jnp.dtype(dtype)),
-        tree, is_leaf=_is_pd)
+        tree,
+        is_leaf=_is_pd,
+    )
 
 
 def param_pspecs(tree, rules: AxisRules) -> dict:
     return jax.tree.map(
-        lambda pd: rules.spec_for(pd.shape, pd.axes), tree, is_leaf=_is_pd)
+        lambda pd: rules.spec_for(pd.shape, pd.axes), tree, is_leaf=_is_pd
+    )
 
 
 def stack_pds(tree, n: int, axis_name: str | None = "fsdp") -> dict:
@@ -68,6 +70,7 @@ def stack_pds(tree, n: int, axis_name: str | None = "fsdp") -> dict:
     The leading axis carries ``axis_name`` ("fsdp": sharded over data when
     cfg.fsdp, else replicated)."""
     return jax.tree.map(
-        lambda pd: PD((n,) + pd.shape, (axis_name,) + pd.axes, pd.init,
-                      pd.scale),
-        tree, is_leaf=_is_pd)
+        lambda pd: PD((n,) + pd.shape, (axis_name,) + pd.axes, pd.init, pd.scale),
+        tree,
+        is_leaf=_is_pd,
+    )

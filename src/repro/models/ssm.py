@@ -50,12 +50,11 @@ def _causal_conv(xBC: Array, w: Array) -> Array:
     pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
     out = jnp.zeros_like(xBC)
     for i in range(K):                       # K is tiny (4): unrolled taps
-        out = out + pad[:, i:i + xBC.shape[1]] * w[i]
+        out = out + pad[:, i : i + xBC.shape[1]] * w[i]
     return out
 
 
-def ssm_apply(p: dict, x_in: Array, cfg: ModelConfig, *,
-              cache: dict | None = None):
+def ssm_apply(p: dict, x_in: Array, cfg: ModelConfig, *, cache: dict | None = None):
     """x_in: (B,S,D). Returns (out, new_cache).
 
     cache (decode): {"state": (B,H,N,P), "conv": (B,K-1,di+2N)}.
@@ -94,12 +93,15 @@ def ssm_apply(p: dict, x_in: Array, cfg: ModelConfig, *,
     if cache is not None and S == 1:
         # O(1) decode update
         a = jnp.exp(dt[:, 0] * A)                            # (B,H)
-        dBx = jnp.einsum("bh,bn,bhp->bhnp", dt[:, 0],
-                         Bs[:, 0].astype(jnp.float32),
-                         xh[:, 0].astype(jnp.float32))
+        dBx = jnp.einsum(
+            "bh,bn,bhp->bhnp",
+            dt[:, 0],
+            Bs[:, 0].astype(jnp.float32),
+            xh[:, 0].astype(jnp.float32),
+        )
         state = cache["state"] * a[..., None, None] + dBx    # (B,H,N,P)
         y = jnp.einsum("bn,bhnp->bhp", Cs[:, 0].astype(jnp.float32), state)
-        y = y + p["D_skip"].astype(jnp.float32)[None, :, None] * xh[:, 0]
+        y = y + p["D_skip"].astype(jnp.float32)[None,:, None] * xh[:, 0]
         y = y.reshape(B, 1, di).astype(x_in.dtype)
         new_cache = {"state": state, "conv": new_cache["conv"]}
     else:
@@ -112,8 +114,15 @@ def ssm_apply(p: dict, x_in: Array, cfg: ModelConfig, *,
     return y @ p["w_out"], new_cache
 
 
-def _ssd_chunked(xh: Array, dt: Array, A: Array, Bs: Array, Cs: Array,
-                 D_skip: Array, cfg: ModelConfig):
+def _ssd_chunked(
+    xh: Array,
+    dt: Array,
+    A: Array,
+    Bs: Array,
+    Cs: Array,
+    D_skip: Array,
+    cfg: ModelConfig,
+):
     """Chunked SSD, sequential over chunks. xh: (B,S,H,P); dt: (B,S,H) fp32;
     A: (H,) fp32; Bs/Cs: (B,S,N). Returns (y (B,S,H,P), state (B,H,N,P)).
 
@@ -137,7 +146,7 @@ def _ssd_chunked(xh: Array, dt: Array, A: Array, Bs: Array, Cs: Array,
     dtc = dt.reshape(B, nc, Q, H).transpose(1, 0, 2, 3)
     Bcq = Bs.reshape(B, nc, Q, N).transpose(1, 0, 2, 3)
     Ccq = Cs.reshape(B, nc, Q, N).transpose(1, 0, 2, 3)
-    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None,:,:, None]
 
     def body(h, inp):
         x_, dt_, B_, C_ = inp
@@ -155,11 +164,12 @@ def _ssd_chunked(xh: Array, dt: Array, A: Array, Bs: Array, Cs: Array,
         y = jnp.einsum("bijh,bjh,bjhp->bihp", CB[..., None] * decay, dt_, x_)
         # inter: y_i += C_i . (exp(cl_i) h_prev)
         y = y + jnp.einsum("bin,bih,bhnp->bihp", C_, jnp.exp(cl), h)
-        y = y + D_skip.astype(jnp.float32)[None, None, :, None] * x_
+        y = y + D_skip.astype(jnp.float32)[None, None,:, None] * x_
         # state update
         dec_end = jnp.exp(cl[:, -1:, :] - cl)            # (B,Q,H)
-        h_new = h * jnp.exp(cl[:, -1, :])[..., None, None] + \
-            jnp.einsum("bjh,bjh,bjn,bjhp->bhnp", dec_end, dt_, B_, x_)
+        h_new = h * jnp.exp(cl[:, -1,:])[..., None, None] + jnp.einsum(
+            "bjh,bjh,bjn,bjhp->bhnp", dec_end, dt_, B_, x_
+        )
         return h_new, y.astype(out_dtype)
 
     h0 = jnp.zeros((B, H, N, P_), jnp.float32)
@@ -180,13 +190,13 @@ def _ssd_chunked(xh: Array, dt: Array, A: Array, Bs: Array, Cs: Array,
         ys = ys.reshape((nc,) + ys.shape[2:])
     else:
         h_last, ys = jax.lax.scan(jax.checkpoint(body), h0, (xc, dtc, Bcq, Ccq))
-    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nc * Q, H, P_)[:, :S]
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nc * Q, H, P_)[:,:S]
     return y.astype(jnp.float32), h_last
 
 
 def _sqrt_factor(n: int) -> int:
     best = 1
-    for a in range(2, int(n ** 0.5) + 1):
+    for a in range(2, int(n**0.5) + 1):
         if n % a == 0:
             best = a
     return best

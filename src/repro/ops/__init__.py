@@ -9,17 +9,48 @@
 See ``base.py`` for the protocol/registry, ``jnp_backend.py`` for the
 reference implementation and ``pallas_backend.py`` for the fused TPU path.
 """
-from .base import (CountingOps, FACTOR_PATHS, FactorPlan, FactorPlanWarning,
-                   KernelOps, OpsBase, POLICIES, PRECISIONS,
-                   PrecisionPolicy, SWEEP_PATHS, SweepPlan, SweepPlanWarning,
-                   available_ops, get_ops, plan_factor, plan_sweep,
-                   register_ops, resolve_precision)
+from .base import (
+    CountingOps,
+    FACTOR_PATHS,
+    FactorPlan,
+    FactorPlanWarning,
+    KernelOps,
+    OpsBase,
+    POLICIES,
+    PRECISIONS,
+    PrecisionPolicy,
+    SWEEP_PATHS,
+    SweepPlan,
+    SweepPlanWarning,
+    available_ops,
+    get_ops,
+    plan_factor,
+    plan_sweep,
+    register_ops,
+    resolve_precision,
+)
 from . import jnp_backend as _jnp_backend    # noqa: F401  (registers "jnp")
 from . import pallas_backend as _pallas_backend  # noqa: F401  ("pallas")
 from .distributed_backend import DistributedOps
 
-__all__ = ["CountingOps", "DistributedOps", "FACTOR_PATHS", "FactorPlan",
-           "FactorPlanWarning", "KernelOps", "OpsBase",
-           "POLICIES", "PRECISIONS", "PrecisionPolicy", "SWEEP_PATHS",
-           "SweepPlan", "SweepPlanWarning", "available_ops", "get_ops",
-           "plan_factor", "plan_sweep", "register_ops", "resolve_precision"]
+__all__ = [
+    "CountingOps",
+    "DistributedOps",
+    "FACTOR_PATHS",
+    "FactorPlan",
+    "FactorPlanWarning",
+    "KernelOps",
+    "OpsBase",
+    "POLICIES",
+    "PRECISIONS",
+    "PrecisionPolicy",
+    "SWEEP_PATHS",
+    "SweepPlan",
+    "SweepPlanWarning",
+    "available_ops",
+    "get_ops",
+    "plan_factor",
+    "plan_sweep",
+    "register_ops",
+    "resolve_precision",
+]

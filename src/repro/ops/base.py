@@ -81,8 +81,14 @@ from typing import Any, Protocol, runtime_checkable
 PRECISIONS = ("fp32", "bf16")
 
 #: dtype-name -> bytes, kept local so this module stays jax-import-free.
-_ITEMSIZE = {"float64": 8, "float32": 4, "bfloat16": 2, "float16": 2,
-             "float8_e4m3fn": 1, "float8_e5m2": 1}
+_ITEMSIZE = {
+    "float64": 8,
+    "float32": 4,
+    "bfloat16": 2,
+    "float16": 2,
+    "float8_e4m3fn": 1,
+    "float8_e5m2": 1,
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,7 +125,8 @@ class PrecisionPolicy:
     accumulate: str = "float32"
     compensated: bool = False
     overrides: tuple[tuple[str, str], ...] = (
-        ("gram", "float32"), ("cholesky", "float32"), ("coeffs", "float32"))
+        ("gram", "float32"), ("cholesky", "float32"), ("coeffs", "float32")
+    )
 
     def buffer_dtype(self, buffer: str) -> str:
         """Storage dtype for a named buffer, honoring per-buffer overrides."""
@@ -218,8 +225,13 @@ class SweepPlan:
 
 
 def plan_sweep(
-    n: int, M: int, d: int, p: int = 1, *,
-    bm: int, bn: int,
+    n: int,
+    M: int,
+    d: int,
+    p: int = 1,
+    *,
+    bm: int,
+    bn: int,
     systems: int = 1,
     itemsize: int = 4,
     vec_itemsize: int | None = None,
@@ -271,9 +283,12 @@ def plan_sweep(
         compensated = policy.compensated
         # dtype NAMES come straight from the policy (the itemsize map below
         # cannot tell float16 from bfloat16)
-        names = dict(input_dtype=policy.storage, vector_dtype=policy.storage,
-                     accum_dtype=policy.accumulate,
-                     coeffs_dtype=policy.buffer_dtype("coeffs"))
+        names = dict(
+            input_dtype=policy.storage,
+            vector_dtype=policy.storage,
+            accum_dtype=policy.accumulate,
+            coeffs_dtype=policy.buffer_dtype("coeffs"),
+        )
     else:
         names = None
     if vec_itemsize is None:
@@ -281,10 +296,12 @@ def plan_sweep(
     if coeffs_itemsize is None:
         coeffs_itemsize = vec_itemsize
     if names is None:
-        names = dict(input_dtype=_names.get(itemsize, "float32"),
-                     vector_dtype=_names.get(vec_itemsize, "float32"),
-                     accum_dtype=_names.get(acc_itemsize, "float32"),
-                     coeffs_dtype=_names.get(coeffs_itemsize, "float32"))
+        names = dict(
+            input_dtype=_names.get(itemsize, "float32"),
+            vector_dtype=_names.get(vec_itemsize, "float32"),
+            accum_dtype=_names.get(acc_itemsize, "float32"),
+            coeffs_dtype=_names.get(coeffs_itemsize, "float32"),
+        )
     if vmem_budget is None:
         vmem_budget = _vmem_budget()
     systems = max(systems, 1)
@@ -301,10 +318,20 @@ def plan_sweep(
     io = 2 * (itemsize * (bm + bn) * dp            # X_i / C_j tiles
               + coeffs_itemsize * bn * pp          # u_j tile
               + vec_itemsize * bm * pp)            # v_i tile
-    base = dict(n=n, M=M, d=d, p=p, block_m=bm, block_n=bn,
-                scratch_bytes=scratch, io_bytes=io,
-                vmem_budget_bytes=vmem_budget,
-                compensated=compensated, systems=systems, **names)
+    base = dict(
+        n=n,
+        M=M,
+        d=d,
+        p=p,
+        block_m=bm,
+        block_n=bn,
+        scratch_bytes=scratch,
+        io_bytes=io,
+        vmem_budget_bytes=vmem_budget,
+        compensated=compensated,
+        systems=systems,
+        **names,
+    )
 
     if scratch + io <= vmem_budget:
         return SweepPlan(
@@ -322,9 +349,11 @@ def plan_sweep(
             f"{vmem_budget}B VMEM budget")
     if shard_m >= M:
         return SweepPlan(
-            path="two_pass", shard_m=None,
+            path="two_pass",
+            shard_m=None,
             reason=f"{over}; single C-shard covers M={M} — two-pass sweep",
-            **base)
+            **base,
+        )
     return SweepPlan(
         path="j_sharded", shard_m=shard_m,
         reason=(f"{over}; j-sharded sweep over "
@@ -408,7 +437,8 @@ class FactorPlan:
 
 
 def plan_factor(
-    M: int, *,
+    M: int,
+    *,
     itemsize: int = 4,
     policy: "PrecisionPolicy | None" = None,
     block: int | None = None,
@@ -444,8 +474,14 @@ def plan_factor(
         block = (block // _FACTOR_BLOCK_MIN) * _FACTOR_BLOCK_MIN
         block = max(_FACTOR_BLOCK_MIN, min(_FACTOR_BLOCK_MAX, block))
     panel = 2 * block * M * itemsize
-    base = dict(M=M, itemsize=itemsize, dense_bytes=dense, panel_bytes=panel,
-                factor_budget_bytes=factor_budget, tile_dtype=tile_dtype)
+    base = dict(
+        M=M,
+        itemsize=itemsize,
+        dense_bytes=dense,
+        panel_bytes=panel,
+        factor_budget_bytes=factor_budget,
+        tile_dtype=tile_dtype,
+    )
 
     if dense <= factor_budget:
         return FactorPlan(
@@ -503,8 +539,7 @@ class KernelOps(Protocol):
         """K(A, B) materialized — the preconditioner path."""
         ...
 
-    def plan(self, n: int, M: int, d: int, p: int = 1,
-             systems: int = 1) -> SweepPlan:
+    def plan(self, n: int, M: int, d: int, p: int = 1, systems: int = 1) -> SweepPlan:
         """The sweep path this backend would take for these shapes.
 
         ``systems`` charges the lam-path stacking: the planner models the
@@ -529,8 +564,13 @@ def available_ops() -> tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
-def get_ops(impl: str, kernel, *, block_size: int = 2048,
-            precision: "str | PrecisionPolicy" = "fp32") -> KernelOps:
+def get_ops(
+    impl: str,
+    kernel,
+    *,
+    block_size: int = 2048,
+    precision: "str | PrecisionPolicy" = "fp32",
+) -> KernelOps:
     """Construct the named backend for ``kernel``.
 
     ``kernel`` must carry a ``KernelSpec`` (anything built by
@@ -540,10 +580,10 @@ def get_ops(impl: str, kernel, *, block_size: int = 2048,
     """
     if impl not in _REGISTRY:
         raise ValueError(
-            f"unknown KernelOps impl {impl!r}; registered: {available_ops()}")
+            f"unknown KernelOps impl {impl!r}; registered: {available_ops()}"
+        )
     resolve_precision(precision)  # validate early; backends resolve lazily
-    return _REGISTRY[impl](kernel=kernel, block_size=block_size,
-                           precision=precision)
+    return _REGISTRY[impl](kernel=kernel, block_size=block_size, precision=precision)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -615,8 +655,7 @@ class CountingOps:
         self.grams += 1
         return self.ops.gram(A, B)
 
-    def plan(self, n: int, M: int, d: int, p: int = 1,
-             systems: int = 1) -> SweepPlan:
+    def plan(self, n: int, M: int, d: int, p: int = 1, systems: int = 1) -> SweepPlan:
         return self.ops.plan(n, M, d, p, systems)
 
     def reset(self) -> None:

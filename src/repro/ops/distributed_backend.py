@@ -96,18 +96,26 @@ class DistributedOps:
     ``FalkonConfig(mesh=..., data_axes=...)``.
     """
 
-    def __init__(self, inner: KernelOps, mesh, data_axes=("data",), *,
-                 compress: str | None = None):
+    def __init__(
+        self,
+        inner: KernelOps,
+        mesh,
+        data_axes=("data",),
+        *,
+        compress: str | None = None,
+    ):
         data_axes = tuple(data_axes)
         if not data_axes:
             raise ValueError("data_axes must name at least one mesh axis")
         missing = [a for a in data_axes if a not in mesh.shape]
         if missing:
             raise ValueError(
-                f"data axes {missing} not in mesh axes {tuple(mesh.shape)}")
+                f"data axes {missing} not in mesh axes {tuple(mesh.shape)}"
+            )
         if compress not in COMPRESSIONS:
             raise ValueError(
-                f"unknown compress {compress!r}; supported: {COMPRESSIONS}")
+                f"unknown compress {compress!r}; supported: {COMPRESSIONS}"
+            )
         self.inner = inner
         self.mesh = mesh
         self.data_axes = data_axes
@@ -145,13 +153,18 @@ class DistributedOps:
         """Apply the opt-in wire-compression round-trip to a local partial."""
         if self.compress is None:
             return w
-        from repro.distributed.compression import (dequantize_int8,
-                                                   quantize_int8)
+        from repro.distributed.compression import (dequantize_int8, quantize_int8)
         q, scale = quantize_int8(w)
         return dequantize_int8(q, scale, w.dtype)
 
-    def sweep(self, X: Array, C: Array, u: Array, v: Array | None = None,
-              row_mask: Array | None = None) -> Array:
+    def sweep(
+        self,
+        X: Array,
+        C: Array,
+        u: Array,
+        v: Array | None = None,
+        row_mask: Array | None = None,
+    ) -> Array:
         """Shard-local sweeps + ONE (M, p) psum.
 
         X (and v / row_mask when given) split row-wise over the data axes;
@@ -183,18 +196,21 @@ class DistributedOps:
                 wl = inner.sweep(Xl, C, u, None, row_mask=ml)
                 return jax.lax.psum(wire(wl), axes)
 
-            fn = shard_map(local, mesh=self.mesh,
-                           in_specs=(xspec, P(), P(), xspec),
-                           out_specs=P())
+            fn = shard_map(
+                local, mesh=self.mesh, in_specs=(xspec, P(), P(), xspec), out_specs=P()
+            )
             return fn(X, C, u, mask)
 
         def local(Xl, C, u, vl, ml):
             wl = inner.sweep(Xl, C, u, vl, row_mask=ml)
             return jax.lax.psum(wire(wl), axes)
 
-        fn = shard_map(local, mesh=self.mesh,
-                       in_specs=(xspec, P(), P(), xspec, xspec),
-                       out_specs=P())
+        fn = shard_map(
+            local,
+            mesh=self.mesh,
+            in_specs=(xspec, P(), P(), xspec, xspec),
+            out_specs=P(),
+        )
         return fn(X, C, u, v, mask)
 
     def apply(self, X: Array, C: Array, u: Array) -> Array:
@@ -214,8 +230,9 @@ class DistributedOps:
         def local(Xl, C, u):
             return inner.apply(Xl, C, u)
 
-        fn = shard_map(local, mesh=self.mesh,
-                       in_specs=(xspec, P(), P()), out_specs=xspec)
+        fn = shard_map(
+            local, mesh=self.mesh, in_specs=(xspec, P(), P()), out_specs=xspec
+        )
         return fn(Xp, C, u)[:n]
 
     def gram(self, A: Array, B: Array) -> Array:
@@ -224,8 +241,7 @@ class DistributedOps:
         (so Gram evaluation counts match single-device exactly)."""
         return self.inner.gram(A, B)
 
-    def plan(self, n: int, M: int, d: int, p: int = 1,
-             systems: int = 1) -> SweepPlan:
+    def plan(self, n: int, M: int, d: int, p: int = 1, systems: int = 1) -> SweepPlan:
         """The wrapped backend's routing decision for ONE shard's rows.
 
         The planner budgets ``n_local = ceil(n/shards)``: each device sees

@@ -19,8 +19,9 @@ from .base import OpsBase, SweepPlan, register_ops
 Array = jax.Array
 
 
-def _pad_blocks(X: Array, v: Array | None, block_size: int,
-                row_mask: Array | None = None):
+def _pad_blocks(
+    X: Array, v: Array | None, block_size: int, row_mask: Array | None = None
+):
     """Pad rows of X (and v) to a multiple of block_size; return mask.
 
     ``row_mask`` (n,), 0/1 — a caller-supplied validity mask folded into the
@@ -30,8 +31,7 @@ def _pad_blocks(X: Array, v: Array | None, block_size: int,
     nb = -(-n // block_size)
     pad = nb * block_size - n
     Xp = jnp.pad(X, ((0, pad), (0, 0)))
-    valid = (jnp.ones((n,), X.dtype) if row_mask is None
-             else row_mask.astype(X.dtype))
+    valid = (jnp.ones((n,), X.dtype) if row_mask is None else row_mask.astype(X.dtype))
     mask = jnp.pad(valid, (0, pad))
     vp = None
     if v is not None:
@@ -70,8 +70,14 @@ class JnpKernelOps(OpsBase):
     def _inputs(self, X: Array, C: Array) -> tuple[Array, Array]:
         return self._quant(X), self._quant(C)
 
-    def sweep(self, X: Array, C: Array, u: Array, v: Array | None = None,
-              row_mask: Array | None = None) -> Array:
+    def sweep(
+        self,
+        X: Array,
+        C: Array,
+        u: Array,
+        v: Array | None = None,
+        row_mask: Array | None = None,
+    ) -> Array:
         """K_nM^T (K_nM u + v) with blocked O(M * block) memory.
 
         ``u``: (M,) or (M, p); ``v``: (n,) or (n, p) or None (treated as 0).
@@ -119,8 +125,7 @@ class JnpKernelOps(OpsBase):
                 acc, comp = carry
                 return _two_sum(acc, comp, delta(inp)), None
 
-            init = (jnp.zeros(out_shape, X.dtype),
-                    jnp.zeros(out_shape, X.dtype))
+            init = (jnp.zeros(out_shape, X.dtype), jnp.zeros(out_shape, X.dtype))
             (w, _), _ = jax.lax.scan(body, init, xs)
         else:
             def body(carry, inp):
@@ -158,8 +163,7 @@ class JnpKernelOps(OpsBase):
             B = B.astype(gt)
         return self.kernel(A, B)
 
-    def plan(self, n: int, M: int, d: int, p: int = 1,
-             systems: int = 1) -> SweepPlan:
+    def plan(self, n: int, M: int, d: int, p: int = 1, systems: int = 1) -> SweepPlan:
         """Reference backend has one path: the lax.scan row sweep. Reported
         through the same ``SweepPlan`` shape so callers can introspect any
         backend uniformly (``systems`` widens p exactly as the Pallas

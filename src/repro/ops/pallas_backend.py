@@ -80,16 +80,16 @@ class PallasKernelOps(OpsBase):
             v = v.astype(jnp.dtype(pol.storage))
         co_name = pol.buffer_dtype("coeffs")
         co = jnp.dtype(co_name)
-        if u.dtype != co and (co_name != "float32"
-                              or jnp.dtype(u.dtype).itemsize < co.itemsize):
+        if u.dtype != co and (
+            co_name != "float32" or jnp.dtype(u.dtype).itemsize < co.itemsize
+        ):
             # the override WIDENS any reduced-storage u (bf16/fp16/fp8 CG
             # iterates crossing back into the sweep) — never narrows an
             # fp64 u under the default float32 coeffs (x64 callers)
             u = u.astype(co)
         return u, v
 
-    def plan(self, n: int, M: int, d: int, p: int = 1,
-             systems: int = 1) -> SweepPlan:
+    def plan(self, n: int, M: int, d: int, p: int = 1, systems: int = 1) -> SweepPlan:
         """The routing decision ``sweep`` will take for these shapes.
 
         The same VMEM budget model applies in interpret mode: Python
@@ -102,27 +102,39 @@ class PallasKernelOps(OpsBase):
         """
         from repro.kernels.kernel_matvec import sweep_block_dims
         bm, bn = sweep_block_dims(n, M, self._block_m, 512)
-        return plan_sweep(n, M, d, p, systems=systems, bm=bm, bn=bn,
-                          policy=self.policy)
+        return plan_sweep(n, M, d, p, systems=systems, bm=bm, bn=bn, policy=self.policy)
 
-    def sweep(self, X: Array, C: Array, u: Array, v: Array | None = None,
-              row_mask: Array | None = None) -> Array:
+    def sweep(
+        self,
+        X: Array,
+        C: Array,
+        u: Array,
+        v: Array | None = None,
+        row_mask: Array | None = None,
+    ) -> Array:
         """``row_mask`` (n,), 0/1: masked rows contribute EXACTLY zero (the
         fused kernel zeroes their t_i in VMEM; the sharded path zeroes the
         spilled t rows) — fixed-shape padded chunks sweep correctly."""
-        from repro.kernels.kernel_matvec import (fused_sweep_pallas,
-                                                 sharded_sweep_pallas)
+        from repro.kernels.kernel_matvec import (
+            fused_sweep_pallas, sharded_sweep_pallas
+        )
         pol = self.policy
         X, C = self._inputs(X, C)
         u, v = self._vectors(u, v)
         p = u.shape[1] if u.ndim > 1 else 1
         plan = self.plan(X.shape[0], C.shape[0], X.shape[1], p)
         if plan.path == "fused":
-            return fused_sweep_pallas(X, C, u, v, spec=self._spec,
-                                      row_mask=row_mask,
-                                      block_m=self._block_m,
-                                      compensated=pol.compensated,
-                                      interpret=_interpret())
+            return fused_sweep_pallas(
+                X,
+                C,
+                u,
+                v,
+                spec=self._spec,
+                row_mask=row_mask,
+                block_m=self._block_m,
+                compensated=pol.compensated,
+                interpret=_interpret(),
+            )
         warnings.warn(SweepPlanWarning(plan), stacklevel=2)
         # reduced-storage policies pin the HBM t spill to storage width and
         # the final M-sized w to the coefficient dtype; the fp32 policy
@@ -132,14 +144,23 @@ class PallasKernelOps(OpsBase):
             t_dt = jnp.dtype(pol.storage)
             out_dt = jnp.dtype(pol.buffer_dtype("coeffs"))
         return sharded_sweep_pallas(
-            X, C, u, v, spec=self._spec, row_mask=row_mask,
+            X,
+            C,
+            u,
+            v,
+            spec=self._spec,
+            row_mask=row_mask,
             shard_m=plan.shard_m if plan.shard_m is not None else plan.M,
-            block_m=self._block_m, compensated=pol.compensated,
-            t_dtype=t_dt, out_dtype=out_dt,
-            interpret=_interpret())
+            block_m=self._block_m,
+            compensated=pol.compensated,
+            t_dtype=t_dt,
+            out_dtype=out_dt,
+            interpret=_interpret(),
+        )
 
-    def sweep_with_stats(self, X: Array, C: Array, u: Array,
-                         v: Array | None = None) -> tuple[Array, Array]:
+    def sweep_with_stats(
+        self, X: Array, C: Array, u: Array, v: Array | None = None
+    ) -> tuple[Array, Array]:
         """sweep() plus the kernel's Gram-tile evaluation counter (int32).
 
         The counter is the fusion proof: it equals
@@ -160,11 +181,17 @@ class PallasKernelOps(OpsBase):
                 f"d={X.shape[1]}, p={p} exceeds the VMEM budget on this "
                 f"backend ({plan.reason}); sweep() would take the "
                 f"{plan.path!r} path, which has no tile counter")
-        return fused_sweep_pallas(X, C, u, v, spec=self._spec,
-                                  block_m=self._block_m,
-                                  compensated=pol.compensated,
-                                  interpret=_interpret(),
-                                  return_tile_count=True)
+        return fused_sweep_pallas(
+            X,
+            C,
+            u,
+            v,
+            spec=self._spec,
+            block_m=self._block_m,
+            compensated=pol.compensated,
+            interpret=_interpret(),
+            return_tile_count=True,
+        )
 
     def apply(self, X: Array, C: Array, u: Array) -> Array:
         from repro.kernels.kernel_matvec import kernel_matmul_pallas
@@ -173,10 +200,15 @@ class PallasKernelOps(OpsBase):
         u, _ = self._vectors(u, None)
         squeeze = u.ndim == 1
         u2 = u[:, None] if squeeze else u
-        out = kernel_matmul_pallas(X, C, u2, spec=self._spec,
-                                   block_m=self._block_m,
-                                   compensated=pol.compensated,
-                                   interpret=_interpret())
+        out = kernel_matmul_pallas(
+            X,
+            C,
+            u2,
+            spec=self._spec,
+            block_m=self._block_m,
+            compensated=pol.compensated,
+            interpret=_interpret(),
+        )
         return out[:, 0] if squeeze else out
 
     def gram(self, A: Array, B: Array) -> Array:
@@ -190,5 +222,4 @@ class PallasKernelOps(OpsBase):
             A = A.astype(gt)
         if jnp.dtype(B.dtype).itemsize < gt.itemsize:
             B = B.astype(gt)
-        return pairwise_kernel_pallas(A, B, spec=self._spec,
-                                      interpret=_interpret())
+        return pairwise_kernel_pallas(A, B, spec=self._spec, interpret=_interpret())

@@ -1,2 +1,9 @@
-from .optimizers import (adafactor, adamw, clip_by_global_norm, global_norm,
-                         make_optimizer, sgdm, warmup_cosine)
+from .optimizers import (
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    global_norm,
+    make_optimizer,
+    sgdm,
+    warmup_cosine,
+)

@@ -22,8 +22,9 @@ class Optimizer(NamedTuple):
 
 
 def global_norm(tree) -> Array:
-    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
-                        for x in jax.tree.leaves(tree)))
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
 
 
 def clip_by_global_norm(tree, max_norm: float):
@@ -32,18 +33,21 @@ def clip_by_global_norm(tree, max_norm: float):
     return jax.tree.map(lambda g: (g * scale).astype(g.dtype), tree), norm
 
 
-def adamw(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
-          state_dtype=jnp.float32) -> Optimizer:
+def adamw(
+    b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1, state_dtype=jnp.float32
+) -> Optimizer:
     def init(params):
         zeros = lambda p: jnp.zeros(p.shape, state_dtype)
-        return {"mu": jax.tree.map(zeros, params),
-                "nu": jax.tree.map(zeros, params),
-                "step": jnp.zeros((), jnp.int32)}
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
 
     def update(grads, state, params, lr):
         step = state["step"] + 1
-        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
-        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        bc1 = 1.0 - b1**step.astype(jnp.float32)
+        bc2 = 1.0 - b2**step.astype(jnp.float32)
 
         def upd(g, m, v, p):
             g32 = g.astype(state_dtype)
@@ -55,27 +59,32 @@ def adamw(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
             return (p.astype(state_dtype) - lr * delta).astype(p.dtype), m, v
 
         out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
-        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
-        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
-        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_p = jax.tree.map(
+            lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        new_m = jax.tree.map(
+            lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple)
+        )
+        new_v = jax.tree.map(
+            lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple)
+        )
         return new_p, {"mu": new_m, "nu": new_v, "step": step}
 
     return Optimizer(init, update)
 
 
-def adafactor(eps=1e-30, clip_threshold=1.0, decay=0.8,
-              weight_decay=0.0) -> Optimizer:
+def adafactor(eps=1e-30, clip_threshold=1.0, decay=0.8, weight_decay=0.0) -> Optimizer:
     """Factored second moments for >=2D params (rows+cols), full for 1D —
     O(n+m) state instead of O(nm) for matrices (Shazeer & Stern 2018)."""
     def init(params):
         def f(p):
             if p.ndim >= 2:
-                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
-                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
-                                        jnp.float32)}
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
             return {"v": jnp.zeros(p.shape, jnp.float32)}
-        return {"f": jax.tree.map(f, params),
-                "step": jnp.zeros((), jnp.int32)}
+        return {"f": jax.tree.map(f, params), "step": jnp.zeros((), jnp.int32)}
 
     def update(grads, state, params, lr):
         step = state["step"] + 1
@@ -88,8 +97,7 @@ def adafactor(eps=1e-30, clip_threshold=1.0, decay=0.8,
                 vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
                 vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
                 denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
-                u = g32 / jnp.sqrt(
-                    (vr / denom)[..., None] * vc[..., None, :] + eps)
+                u = g32 / jnp.sqrt((vr / denom)[..., None] * vc[..., None, :] + eps)
                 new_s = {"vr": vr, "vc": vc}
             else:
                 v = beta * s["v"] + (1 - beta) * g2
@@ -100,9 +108,13 @@ def adafactor(eps=1e-30, clip_threshold=1.0, decay=0.8,
             delta = u + weight_decay * p.astype(jnp.float32)
             return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), new_s
 
-        out = jax.tree.map(upd, grads, state["f"], params,
-                           is_leaf=lambda x: isinstance(x, dict) and
-                           ("vr" in x or "v" in x))
+        out = jax.tree.map(
+            upd,
+            grads,
+            state["f"],
+            params,
+            is_leaf=lambda x: isinstance(x, dict) and ("vr" in x or "v" in x),
+        )
         is_pair = lambda x: isinstance(x, tuple)
         new_p = jax.tree.map(lambda t: t[0], out, is_leaf=is_pair)
         new_s = jax.tree.map(lambda t: t[1], out, is_leaf=is_pair)
@@ -113,14 +125,16 @@ def adafactor(eps=1e-30, clip_threshold=1.0, decay=0.8,
 
 def sgdm(momentum=0.9, weight_decay=0.0) -> Optimizer:
     def init(params):
-        return {"mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
-                                   params),
-                "step": jnp.zeros((), jnp.int32)}
+        return {
+            "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
 
     def update(grads, state, params, lr):
         def upd(g, m, p):
-            m = momentum * m + g.astype(jnp.float32) + \
-                weight_decay * p.astype(jnp.float32)
+            m = momentum * m + g.astype(jnp.float32) + weight_decay * p.astype(
+                jnp.float32
+            )
             return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
         out = jax.tree.map(upd, grads, state["mu"], params)
         is_pair = lambda x: isinstance(x, tuple)
@@ -136,8 +150,7 @@ def make_optimizer(name: str, **kw) -> Optimizer:
 
 
 # -- schedules ---------------------------------------------------------------
-def warmup_cosine(base_lr: float, warmup: int, total: int,
-                  min_ratio: float = 0.1):
+def warmup_cosine(base_lr: float, warmup: int, total: int, min_ratio: float = 0.1):
     def lr(step):
         step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
         warm = base_lr * jnp.minimum(1.0, (step + 1) / max(warmup, 1))

@@ -23,10 +23,23 @@ HBM_BW = 819e9             # bytes/s
 ICI_BW = 50e9              # bytes/s/link
 
 _DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
-    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4,
-    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "pred": 1,
+    "s8": 1,
+    "u8": 1,
+    "f8e4m3fn": 1,
+    "f8e5m2": 1,
+    "f8e4m3": 1,
+    "s16": 2,
+    "u16": 2,
+    "f16": 2,
+    "bf16": 2,
+    "s32": 4,
+    "u32": 4,
+    "f32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f64": 8,
+    "c64": 8,
     "c128": 16,
 }
 
@@ -104,26 +117,35 @@ def derive_roofline(compiled, *, chips: int, model_flops: float) -> Roofline:
     compute_s = flops / PEAK_FLOPS
     memory_s = byts / HBM_BW
     collective_s = coll_total / ICI_BW
-    terms = {"compute": compute_s, "memory": memory_s,
-             "collective": collective_s}
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
     bottleneck = max(terms, key=terms.get)
     global_flops = flops * chips
     ratio = model_flops / global_flops if global_flops else 0.0
-    return Roofline(flops_per_device=flops, bytes_per_device=byts,
-                    collective_bytes=dict(cost.collective_bytes),
-                    compute_s=compute_s,
-                    memory_s=memory_s, collective_s=collective_s,
-                    bottleneck=bottleneck, model_flops=model_flops,
-                    useful_flops_ratio=ratio, chips=chips,
-                    xla_flops_once=float(ca.get("flops", 0.0)),
-                    unbounded_whiles=cost.unbounded_whiles)
+    return Roofline(
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_bytes=dict(cost.collective_bytes),
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_flops_ratio=ratio,
+        chips=chips,
+        xla_flops_once=float(ca.get("flops", 0.0)),
+        unbounded_whiles=cost.unbounded_whiles,
+    )
 
 
 def memory_report(compiled) -> dict:
     ma = compiled.memory_analysis()
-    fields = ["argument_size_in_bytes", "output_size_in_bytes",
-              "temp_size_in_bytes", "alias_size_in_bytes",
-              "generated_code_size_in_bytes"]
+    fields = [
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ]
     rep = {f: int(getattr(ma, f, 0)) for f in fields}
     rep["total_per_device"] = (rep["argument_size_in_bytes"] +
                                rep["output_size_in_bytes"] +
@@ -200,7 +222,8 @@ def analytic_memory(cfg, cell, rules, *, microbatch: int = 1) -> dict:
         out["grads"] = out["opt"] = 0.0
     if cell.kind == "decode":
         out["cache"] = _pd_device_bytes(
-            cache_pd(cfg, cell.global_batch, cell.seq_len), rules, 2.0)
+            cache_pd(cfg, cell.global_batch, cell.seq_len), rules, 2.0
+        )
     else:
         out["cache"] = 0.0
     # activations: tokens/device (per microbatch) x d_model x live-layer count

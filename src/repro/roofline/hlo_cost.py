@@ -26,11 +26,26 @@ import re
 from collections import defaultdict
 
 _DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
-    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
-    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4,
-    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "pred": 1,
+    "s4": 1,
+    "u4": 1,
+    "s8": 1,
+    "u8": 1,
+    "f8e4m3fn": 1,
+    "f8e5m2": 1,
+    "f8e4m3": 1,
+    "s16": 2,
+    "u16": 2,
+    "f16": 2,
+    "bf16": 2,
+    "s32": 4,
+    "u32": 4,
+    "f32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f64": 8,
+    "c64": 8,
+    "c128": 16,
 }
 
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
@@ -45,11 +60,20 @@ _BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _OPERAND_RE = re.compile(r"%([\w.\-]+)")
 
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
-_ZERO_BYTE_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
-                  "bitcast", "after-all", "iota", "partition-id",
-                  "replica-id"}
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute"
+)
+_ZERO_BYTE_OPS = {
+    "parameter",
+    "constant",
+    "get-tuple-element",
+    "tuple",
+    "bitcast",
+    "after-all",
+    "iota",
+    "partition-id",
+    "replica-id",
+}
 
 
 def _shape_bytes(text: str) -> int:
@@ -73,7 +97,7 @@ def _split_args(argstr: str) -> tuple[str, str]:
         elif ch == ")":
             depth -= 1
             if depth == 0:
-                return argstr[:j], argstr[j + 1:]
+                return argstr[:j], argstr[j + 1 :]
     return argstr, ""
 
 
@@ -100,7 +124,7 @@ def parse_computations(text: str) -> tuple[dict[str, Computation], str]:
     for line in text.splitlines():
         if cur is None:
             if line.rstrip().endswith("{"):
-                m = _COMP_HDR.match(line.strip())
+                m = _COMP_HDR.match (line.strip())
                 if m:
                     cur = Computation(m.group(2), [], {})
                     if m.group(1):
@@ -110,7 +134,7 @@ def parse_computations(text: str) -> tuple[dict[str, Computation], str]:
             comps[cur.name] = cur
             cur = None
             continue
-        m = _OP_RE.match(line)
+        m = _OP_RE.match (line)
         if not m:
             continue
         name, out_shape, kind, tail = m.groups()
@@ -140,8 +164,7 @@ def _dot_flops(op: Op, shapes: dict) -> float:
     cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
     contract = 1
     if lhs_m and cdims and cdims.group(1):
-        dims = [int(d) for d in lhs_m.group(2).split(",")] if lhs_m.group(2) \
-            else []
+        dims = [int(d) for d in lhs_m.group(2).split(",")] if lhs_m.group(2) else []
         for ci in cdims.group(1).split(","):
             ci = int(ci)
             if ci < len(dims):
@@ -192,7 +215,7 @@ def _trip_count(op: Op, comps: dict) -> int | None:
         consts = {}
         for o in cond.ops:
             if o.kind == "constant":
-                mm = re.match(r"\s*(-?\d+)\s*$", o.args)
+                mm = re.match (r"\s*(-?\d+)\s*$", o.args)
                 if mm:
                     consts[o.name] = int(mm.group(1))
         for o in cond.ops:
@@ -215,10 +238,12 @@ class HloCost:
         return float(sum(self.collective_bytes.values()))
 
     def as_dict(self) -> dict:
-        return {"flops": self.flops, "bytes": self.bytes,
-                "collective_bytes": {k: float(v) for k, v in
-                                     self.collective_bytes.items()},
-                "unbounded_whiles": self.unbounded_whiles}
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "collective_bytes": {k: float(v) for k, v in self.collective_bytes.items()},
+            "unbounded_whiles": self.unbounded_whiles,
+        }
 
 
 def analyze(text: str) -> HloCost:
@@ -289,8 +314,9 @@ def analyze(text: str) -> HloCost:
                         for k, v in worst.collective_bytes.items():
                             coll[k] += v
             elif op.kind == "call":
-                ta = _CALLS_RE.search(op.rest) or \
-                    re.search(r"to_apply=%?([\w.\-]+)", op.rest)
+                ta = _CALLS_RE.search(op.rest) or re.search(
+                    r"to_apply=%?([\w.\-]+)", op.rest
+                )
                 if ta and ta.group(1) in comps:
                     sub = cost_of(ta.group(1), _depth + 1)
                     fl += sub.flops

@@ -11,9 +11,15 @@ multi-model tier that serves a whole ``FalkonPathResult`` through stacked
 applies. ``repro.launch.serve --falkon`` drives this from the CLI;
 ``benchmarks/serve_coalesce.py`` measures it against the per-request loop.
 """
-from .coalesce import (Dispatch, Segment, bucket_ladder, pick_bucket,
-                       plan_dispatches)
+from .coalesce import (Dispatch, Segment, bucket_ladder, pick_bucket, plan_dispatches)
 from .server import CoalescingPredictServer, ServeStats
 
-__all__ = ["CoalescingPredictServer", "Dispatch", "Segment", "ServeStats",
-           "bucket_ladder", "pick_bucket", "plan_dispatches"]
+__all__ = [
+    "CoalescingPredictServer",
+    "Dispatch",
+    "Segment",
+    "ServeStats",
+    "bucket_ladder",
+    "pick_bucket",
+    "plan_dispatches",
+]

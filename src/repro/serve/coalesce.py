@@ -116,8 +116,9 @@ def plan_dispatches(sizes, ladder: tuple[int, ...]) -> tuple[Dispatch, ...]:
         off = 0
         while size > 0:
             take = min(size, max_rows - filled)
-            segs.append(Segment(request=req, req_offset=off,
-                                buf_offset=filled, rows=take))
+            segs.append(
+                Segment(request=req, req_offset=off, buf_offset=filled, rows=take)
+            )
             filled += take
             off += take
             size -= take

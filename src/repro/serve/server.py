@@ -68,12 +68,18 @@ class CoalescingPredictServer:
     the bucket ladder spans ``min_bucket .. max_batch`` in powers of two.
     """
 
-    def __init__(self, model, *, max_batch: int = 256, min_bucket: int = 8,
-                 ops=None, pipeline_depth: int = 2):
+    def __init__(
+        self,
+        model,
+        *,
+        max_batch: int = 256,
+        min_bucket: int = 8,
+        ops=None,
+        pipeline_depth: int = 2,
+    ):
         est, alpha, unstack = _resolve_model(model)
         if pipeline_depth < 1:
-            raise ValueError(
-                f"pipeline_depth must be >= 1, got {pipeline_depth}")
+            raise ValueError(f"pipeline_depth must be >= 1, got {pipeline_depth}")
         self._ladder = bucket_ladder(max_batch, min_bucket)
         self._centers = est.centers
         self._alpha = alpha          # (M,), (M, p) or stacked (M, L*p)
@@ -138,14 +144,46 @@ class CoalescingPredictServer:
         self._warm_traces = self._traces
         return compile_s
 
+    def swap_model(self, model) -> None:
+        """Swap the served centers/alpha in place — zero retraces.
+
+        The continuous-deployment seam `partial_fit` pairs with: a refreshed
+        estimator (same shapes — partial_fit guarantees it) replaces the
+        arrays behind the compiled applies. Because the bucketed apply takes
+        centers/alpha as jit ARGUMENTS, not closure constants, every ladder
+        rung's compiled program is a cache hit for the new arrays:
+        ``retraces_since_warmup()`` stays 0 across the swap by construction
+        (pinned in tests/test_minibatch.py). A model whose geometry differs
+        from the warmed one is refused — that swap WOULD retrace every
+        rung, so it must be a new server + warmup, not a hot swap.
+        """
+        est, alpha, unstack = _resolve_model(model)
+        same = (
+            est.centers.shape == self._centers.shape
+            and est.centers.dtype == self._centers.dtype
+            and alpha.shape == self._alpha.shape
+            and alpha.dtype == self._alpha.dtype
+            and unstack == self._unstack
+        )
+        if not same:
+            raise ValueError(
+                f"swap_model needs the warmed geometry: centers "
+                f"{self._centers.shape}/{self._centers.dtype} and alpha "
+                f"{self._alpha.shape}/{self._alpha.dtype}, got "
+                f"{est.centers.shape}/{est.centers.dtype} and "
+                f"{alpha.shape}/{alpha.dtype} — a different geometry would "
+                f"retrace every ladder rung; build a new server instead"
+            )
+        self._centers = est.centers
+        self._alpha = alpha
+
     # -- request path ------------------------------------------------------
     def submit(self, x) -> int:
         """Queue one request of (rows, d) feature rows; returns its ticket
         (position in the next ``flush`` result list)."""
         x = np.asarray(x)
         if x.ndim != 2 or x.shape[1] != self._dim:
-            raise ValueError(
-                f"request must be (rows, {self._dim}), got {x.shape}")
+            raise ValueError(f"request must be (rows, {self._dim}), got {x.shape}")
         self._pending.append(x.astype(self._in_dtype, copy=False))
         return len(self._pending) - 1
 
@@ -169,8 +207,8 @@ class CoalescingPredictServer:
         for disp in plan:
             buf = np.zeros((disp.bucket, self._dim), self._in_dtype)
             for s in disp.segments:
-                rows = batches[s.request][s.req_offset:s.req_offset + s.rows]
-                buf[s.buf_offset:s.buf_offset + s.rows] = rows
+                rows = batches[s.request][s.req_offset : s.req_offset + s.rows]
+                buf[s.buf_offset : s.buf_offset + s.rows] = rows
             inflight.append((disp, self._apply(buf)))   # async dispatch
             self.stats.dispatches += 1
             self.stats.rows_valid += disp.rows
@@ -182,8 +220,7 @@ class CoalescingPredictServer:
         while inflight:
             self._scatter(*inflight.popleft(), sizes, outs)
         self.stats.requests += len(batches)
-        return [self._finalize(out, size)
-                for out, size in zip(outs, sizes)]
+        return [self._finalize(out, size) for out, size in zip(outs, sizes)]
 
     def predict_many(self, batches: Sequence) -> list[np.ndarray]:
         """submit() every batch, flush(), return predictions in order."""
@@ -200,14 +237,14 @@ class CoalescingPredictServer:
             out = outs[s.request]
             if out is None:
                 out = outs[s.request] = np.empty(
-                    (sizes[s.request],) + host.shape[1:], host.dtype)
-            rows = host[s.buf_offset:s.buf_offset + s.rows]
-            out[s.req_offset:s.req_offset + s.rows] = rows
+                    (sizes[s.request],) + host.shape[1:], host.dtype
+                )
+            rows = host[s.buf_offset : s.buf_offset + s.rows]
+            out[s.req_offset : s.req_offset + s.rows] = rows
 
     def _finalize(self, out: np.ndarray | None, size: int) -> np.ndarray:
         if out is None:                            # zero-row request
-            trail = (() if self._alpha.ndim == 1
-                     else (int(self._alpha.shape[1]),))
+            trail = (() if self._alpha.ndim == 1 else (int(self._alpha.shape[1]),))
             out = np.empty((0,) + trail, np.dtype("float32"))
         if self._unstack is None:
             return out
@@ -235,8 +272,9 @@ def _resolve_model(model):
             raise ValueError("path result has no estimators")
         first = ests[0]
         for e in ests[1:]:
-            shared = (e.centers is first.centers
-                      or e.centers.shape == first.centers.shape)
+            shared = (
+                e.centers is first.centers or e.centers.shape == first.centers.shape
+            )
             if not shared:
                 raise ValueError("path estimators must share centers")
         alphas = np.asarray(model.state.alphas)     # (L, M) or (L, M, p)
@@ -248,4 +286,5 @@ def _resolve_model(model):
     if hasattr(model, "centers") and hasattr(model, "alpha"):
         return model, model.alpha, None
     raise TypeError(
-        f"expected a FalkonEstimator or FalkonPathResult, got {type(model)}")
+        f"expected a FalkonEstimator or FalkonPathResult, got {type(model)}"
+    )

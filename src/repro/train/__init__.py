@@ -1,3 +1,9 @@
-from .steps import (TrainConfig, TrainState, init_train_state, make_serve_step,
-                    make_train_step, train_state_structs)
+from .steps import (
+    TrainConfig,
+    TrainState,
+    init_train_state,
+    make_serve_step,
+    make_train_step,
+    train_state_structs,
+)
 from .trainer import Trainer, TrainerConfig

@@ -16,8 +16,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.distributed.compression import compressed_grads, init_residuals
 from repro.models import decode_step, loss_fn, model_params
-from repro.optim.optimizers import (clip_by_global_norm, make_optimizer,
-                                    warmup_cosine)
+from repro.optim.optimizers import (clip_by_global_norm, make_optimizer, warmup_cosine)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,31 +40,33 @@ def init_train_state(key, cfg: ModelConfig, tcfg: TrainConfig) -> TrainState:
     params = model_params(key, cfg)
     opt = make_optimizer(cfg.optimizer)
     res = init_residuals(params) if tcfg.grad_compression else {}
-    return TrainState(params=params, opt_state=opt.init(params),
-                      residuals=res, step=jnp.zeros((), jnp.int32))
+    return TrainState(
+        params=params,
+        opt_state=opt.init(params),
+        residuals=res,
+        step=jnp.zeros((), jnp.int32),
+    )
 
 
 def train_state_structs(cfg: ModelConfig, tcfg: TrainConfig) -> TrainState:
     """ShapeDtypeStruct view of the train state (dry-run, no allocation)."""
-    return jax.eval_shape(lambda: init_train_state(jax.random.PRNGKey(0),
-                                                   cfg, tcfg))
+    return jax.eval_shape(lambda: init_train_state(jax.random.PRNGKey(0), cfg, tcfg))
 
 
-def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
-                    grad_shardings=None) -> Callable:
+def make_train_step(
+    cfg: ModelConfig, tcfg: TrainConfig, grad_shardings=None
+) -> Callable:
     """grad_shardings: optional tree of NamedSharding matching params. The
     fp32 gradient-accumulation buffer MUST carry the param shardings —
     otherwise GSPMD replicates it and all-reduces full gradients every
     microbatch (measured: 10.5 TB/step/device on jamba-398B, SS Perf #1)."""
     opt = make_optimizer(cfg.optimizer)
-    lr_fn = warmup_cosine(tcfg.learning_rate, tcfg.warmup_steps,
-                          tcfg.total_steps)
+    lr_fn = warmup_cosine(tcfg.learning_rate, tcfg.warmup_steps, tcfg.total_steps)
 
     def constrain(tree):
         if grad_shardings is None:
             return tree
-        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
-                            grad_shardings)
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree, grad_shardings)
 
     def compute_grads(params, batch):
         if tcfg.microbatch and tcfg.microbatch > 1:
@@ -74,24 +75,25 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
             nb = tcfg.microbatch
             B = batch["labels"].shape[0]
             assert B % nb == 0, (B, nb)
-            mb = {k: v.reshape((nb, B // nb) + v.shape[1:])
-                  for k, v in batch.items()}
+            mb = {k: v.reshape((nb, B // nb) + v.shape[1:]) for k, v in batch.items()}
 
             def acc_fn(carry, mbatch):
                 g_acc, l_acc = carry
                 (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
-                    params, cfg, mbatch)
-                g_acc = constrain(jax.tree.map(lambda a, b: a + b / nb,
-                                               g_acc, g))
+                    params, cfg, mbatch
+                )
+                g_acc = constrain(jax.tree.map(lambda a, b: a + b / nb, g_acc, g))
                 return (g_acc, l_acc + l / nb), None
 
-            zero_g = constrain(jax.tree.map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            zero_g = constrain(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            )
             (grads, loss), _ = jax.lax.scan(acc_fn, (zero_g, 0.0), mb)
             metrics = {"loss": loss}
             return loss, metrics, grads
-        (loss, metrics), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params, cfg, batch)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, cfg, batch
+        )
         return loss, metrics, grads
 
     def train_step(state: TrainState, batch: dict):
@@ -101,11 +103,14 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
         if tcfg.grad_compression:
             grads, residuals = compressed_grads(grads, residuals)
         lr = lr_fn(state.step)
-        new_params, new_opt = opt.update(grads, state.opt_state, state.params,
-                                         lr)
+        new_params, new_opt = opt.update(grads, state.opt_state, state.params, lr)
         metrics = dict(metrics, grad_norm=gnorm, lr=lr)
-        return TrainState(params=new_params, opt_state=new_opt,
-                          residuals=residuals, step=state.step + 1), metrics
+        return TrainState(
+            params=new_params,
+            opt_state=new_opt,
+            residuals=residuals,
+            step=state.step + 1,
+        ), metrics
 
     return train_step
 
@@ -135,15 +140,15 @@ def train_state_pspecs(cfg: ModelConfig, tcfg: TrainConfig, rules):
                         "vc": _spec_for_axes(pd, pd.shape[:-2] + pd.shape[-1:],
                                              pd.axes[:-2] + pd.axes[-1:])}
             return {"v": _spec_for_axes(pd, pd.shape, pd.axes)}
-        opt = {"f": jax.tree.map(fac, pd_tree,
-                                 is_leaf=lambda x: isinstance(x, PD)),
-               "step": P()}
+        opt = {
+            "f": jax.tree.map(fac, pd_tree, is_leaf=lambda x: isinstance(x, PD)),
+            "step": P(),
+        }
     else:
         raise ValueError(cfg.optimizer)
 
     residuals = pspecs if tcfg.grad_compression else {}
-    return TrainState(params=pspecs, opt_state=opt, residuals=residuals,
-                      step=P())
+    return TrainState(params=pspecs, opt_state=opt, residuals=residuals, step=P())
 
 
 def batch_pspecs(cfg: ModelConfig, batch_structs: dict, rules):

@@ -19,8 +19,9 @@ from typing import Callable, Iterator
 import jax
 import numpy as np
 
-from repro.checkpoint.checkpoint import (latest_step, load_checkpoint,
-                                         save_checkpoint, step_dir)
+from repro.checkpoint.checkpoint import (
+    latest_step, load_checkpoint, save_checkpoint, step_dir
+)
 from repro.configs.base import ModelConfig
 from .steps import TrainConfig, TrainState, init_train_state, make_train_step
 
@@ -36,10 +37,17 @@ class TrainerConfig:
 
 
 class Trainer:
-    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig,
-                 rcfg: TrainerConfig, *, mesh=None, rules=None,
-                 state: TrainState | None = None,
-                 straggler_cb: Callable[[int, float, float], None] | None = None):
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        tcfg: TrainConfig,
+        rcfg: TrainerConfig,
+        *,
+        mesh=None,
+        rules=None,
+        state: TrainState | None = None,
+        straggler_cb: Callable[[int, float, float], None] | None = None,
+    ):
         self.cfg, self.tcfg, self.rcfg = cfg, tcfg, rcfg
         self.mesh, self.rules = mesh, rules
         self.straggler_cb = straggler_cb
@@ -72,8 +80,7 @@ class Trainer:
         os.makedirs(self.rcfg.ckpt_dir, exist_ok=True)
         blocking = (not self.rcfg.async_ckpt) if blocking is None else blocking
         self._wait_save()
-        self._pending_save = save_checkpoint(path, self.state, step,
-                                             blocking=blocking)
+        self._pending_save = save_checkpoint(path, self.state, step, blocking=blocking)
         self._gc()
 
     def _wait_save(self):
@@ -95,8 +102,9 @@ class Trainer:
         self._wait_save()
         step = step if step is not None else latest_step(self.rcfg.ckpt_dir)
         assert step is not None, "no checkpoint to restore"
-        self.state, _ = load_checkpoint(step_dir(self.rcfg.ckpt_dir, step),
-                                        self.state, shardings=shardings)
+        self.state, _ = load_checkpoint(
+            step_dir(self.rcfg.ckpt_dir, step), self.state, shardings=shardings
+        )
         return step
 
     def request_preemption(self):
@@ -127,8 +135,7 @@ class Trainer:
             ewma_t = dt if ewma_t is None else 0.9 * ewma_t + 0.1 * dt
             ewma_v = 0.9 * ewma_v + 0.1 * (dt - ewma_t) ** 2
 
-            history.append({k: float(jax.device_get(v))
-                            for k, v in metrics.items()})
+            history.append({k: float(jax.device_get(v)) for k, v in metrics.items()})
             step = int(jax.device_get(self.state.step))
             if self.rcfg.ckpt_every and step % self.rcfg.ckpt_every == 0:
                 self.save()

@@ -14,8 +14,9 @@ import pytest
 
 from repro.configs import ARCH_IDS, get_config, reduced_config
 from repro.configs.base import SHAPES, input_specs
-from repro.models import (decode_step, forward, loss_fn,
-                          model_params, prefill, split_periods)
+from repro.models import (
+    decode_step, forward, loss_fn, model_params, prefill, split_periods
+)
 
 jax.config.update("jax_default_matmul_precision", "highest")
 
@@ -32,7 +33,8 @@ def _batch(cfg, key, B=2, S=32):
         batch["tokens"] = tokens
     if cfg.frontend == "tokens+vision":
         batch["vision_embeds"] = jax.random.normal(
-            ks[3], (B, cfg.n_image_tokens, cfg.d_vision)) * 0.05
+            ks[3], (B, cfg.n_image_tokens, cfg.d_vision)
+        ) * 0.05
     return batch, tokens
 
 
@@ -47,8 +49,9 @@ def test_forward_and_train_step(arch):
     (loss, metrics), grads = jax.value_and_grad(
         lambda p: loss_fn(p, cfg, batch), has_aux=True)(params)
     assert bool(jnp.isfinite(loss))
-    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
-                         for g in jax.tree.leaves(grads)))
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+    )
     assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0.0
 
 
@@ -67,17 +70,19 @@ def test_decode_matches_forward(arch):
     pre_batch = {kk: (v[:, :k] if v.ndim > 1 and v.shape[1] == S else v)
                  for kk, v in batch.items() if kk != "labels"}
     logits_k, cache = prefill(params, cfg, pre_batch, S_max=S)
-    np.testing.assert_allclose(np.asarray(logits_k),
-                               np.asarray(full_logits[:, k - 1]),
-                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(
+        np.asarray(logits_k), np.asarray(full_logits[:, k - 1]), rtol=2e-3, atol=2e-3
+    )
     # decode the rest token by token
     for t in range(k, S):
-        step_logits, cache = decode_step(params, cfg, cache,
-                                         {"token": tokens[:, t]})
+        step_logits, cache = decode_step(params, cfg, cache, {"token": tokens[:, t]})
         np.testing.assert_allclose(
-            np.asarray(step_logits), np.asarray(full_logits[:, t]),
-            rtol=5e-3, atol=5e-3,
-            err_msg=f"{arch}: decode step {t} diverged from forward")
+            np.asarray(step_logits),
+            np.asarray(full_logits[:, t]),
+            rtol=5e-3,
+            atol=5e-3,
+            err_msg=f"{arch}: decode step {t} diverged from forward",
+        )
 
 
 def test_split_periods_structures():

@@ -26,13 +26,13 @@ import numpy as np
 import pytest
 
 from repro.core import FalkonConfig, falkon_fit, make_kernel
-from repro.core.preconditioner import (make_preconditioner,
-                                       make_preconditioner_path)
-from repro.kernels.blocked_cholesky import (FactorStats, blocked_cholesky,
-                                            blocked_syrk_tt,
-                                            resolve_tile_impl)
-from repro.ops import (FACTOR_PATHS, FactorPlan, FactorPlanWarning, get_ops,
-                       plan_factor)
+from repro.core.preconditioner import (make_preconditioner, make_preconditioner_path)
+from repro.kernels.blocked_cholesky import (
+    FactorStats, blocked_cholesky, blocked_syrk_tt, resolve_tile_impl
+)
+from repro.ops import (
+    FACTOR_PATHS, FactorPlan, FactorPlanWarning, get_ops, plan_factor
+)
 
 KERNELS = [
     ("gaussian", dict(sigma=1.3)),
@@ -180,10 +180,8 @@ def test_blocked_preconditioner_parity_all_kernels(kernel_name, params):
     the near-null directions — the regime the rank_deficient eig path (or a
     real jitter) exists for."""
     KMM = _kernel_gram(kernel_name, params)
-    pin = make_preconditioner(KMM, 1e-3, 1000, factor_plan="incore",
-                              jitter=0.1)
-    pbl = make_preconditioner(KMM, 1e-3, 1000, factor_plan="blocked",
-                              jitter=0.1)
+    pin = make_preconditioner(KMM, 1e-3, 1000, factor_plan="incore", jitter=0.1)
+    pbl = make_preconditioner(KMM, 1e-3, 1000, factor_plan="blocked", jitter=0.1)
     assert _rel(pbl.T, pin.T) < 1e-5
     assert _rel(pbl.A, pin.A) < 1e-5
 
@@ -191,8 +189,7 @@ def test_blocked_preconditioner_parity_all_kernels(kernel_name, params):
 @pytest.mark.filterwarnings("ignore::repro.ops.FactorPlanWarning")
 def test_blocked_preconditioner_with_leverage_diagonal():
     KMM = _kernel_gram("gaussian", dict(sigma=1.3), M=300)
-    D = jnp.asarray(np.random.default_rng(5).uniform(0.5, 1.5, 300)
-                    .astype(np.float32))
+    D = jnp.asarray(np.random.default_rng(5).uniform(0.5, 1.5, 300).astype(np.float32))
     pin = make_preconditioner(KMM, 1e-3, 1000, D=D, factor_plan="incore")
     pbl = make_preconditioner(KMM, 1e-3, 1000, D=D, factor_plan="blocked")
     assert _rel(pbl.T, pin.T) < 1e-5
@@ -214,8 +211,7 @@ def test_blocked_route_warns_with_plan():
     KMM = _kernel_gram("gaussian", dict(sigma=1.3), M=300)
     with pytest.warns(FactorPlanWarning) as rec:
         make_preconditioner(KMM, 1e-3, 1000, factor_plan="blocked")
-    plans = [w.message.plan for w in rec
-             if isinstance(w.message, FactorPlanWarning)]
+    plans = [w.message.plan for w in rec if isinstance(w.message, FactorPlanWarning)]
     assert plans and plans[0].path == "blocked"
     assert isinstance(plans[0], FactorPlan)
 
@@ -255,14 +251,13 @@ def test_rank_deficient_refuses_blocked_route():
     route (a dense eigendecomposition cannot be tiled by this scheme)."""
     KMM = _kernel_gram("gaussian", dict(sigma=1.3), M=200)
     with pytest.raises(ValueError, match="rank_deficient"):
-        make_preconditioner(KMM, 1e-3, 1000, rank_deficient=True,
-                            factor_plan="blocked")
+        make_preconditioner(KMM, 1e-3, 1000, rank_deficient=True, factor_plan="blocked")
     with pytest.raises(ValueError, match="REPRO_FACTOR_BUDGET_MB"):
-        make_preconditioner_path(KMM, [1e-3], 1000, rank_deficient=True,
-                                 factor_plan="blocked")
+        make_preconditioner_path(
+            KMM, [1e-3], 1000, rank_deficient=True, factor_plan="blocked"
+        )
     # in-core eig fallback is untouched
-    p = make_preconditioner(KMM, 1e-3, 1000, rank_deficient=True,
-                            factor_plan="incore")
+    p = make_preconditioner(KMM, 1e-3, 1000, rank_deficient=True, factor_plan="incore")
     assert p.diag_T
 
 
@@ -284,9 +279,14 @@ def test_forced_blocked_falkon_fit_alpha_parity(monkeypatch):
     X = jax.random.normal(keys[0], (n, d))
     w = jax.random.normal(keys[1], (d,))
     y = X @ w + 0.05 * jax.random.normal(keys[2], (n,))
-    config = FalkonConfig(kernel="gaussian", kernel_params=(("sigma", 1.0),),
-                          num_centers=M, lam=1e-3, iterations=30,
-                          jitter=1e-3)
+    config = FalkonConfig(
+        kernel="gaussian",
+        kernel_params=(("sigma", 1.0),),
+        num_centers=M,
+        lam=1e-3,
+        iterations=30,
+        jitter=1e-3,
+    )
     est_in, _ = falkon_fit(keys[0], X, y, config)
     monkeypatch.setenv("REPRO_FACTOR_BUDGET_MB", "0.2")   # M=320 -> blocked
     est_bl, _ = falkon_fit(keys[0], X, y, config)
@@ -332,12 +332,12 @@ def test_device_peak_is_o_block_m_not_m_squared():
             f"M={M}: measured {live}B above the O(b*M) ceiling "
             f"{plan.device_ceiling_bytes}B")
         assert live < plan.dense_bytes, (
-            f"M={M}: measured {live}B not below dense {plan.dense_bytes}B")
+            f"M={M}: measured {live}B not below dense {plan.dense_bytes}B"
+        )
         assert accounted <= plan.device_ceiling_bytes
         peaks[M] = live
     # doubling M at fixed block must not 4x the peak: linear-with-slack
-    assert peaks[2048] <= 3.0 * peaks[1024], (
-        f"peak grew superlinearly: {peaks}")
+    assert peaks[2048] <= 3.0 * peaks[1024], (f"peak grew superlinearly: {peaks}")
 
 
 @pytest.mark.skipif(not os.environ.get("REPRO_XL_TESTS"),

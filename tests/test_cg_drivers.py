@@ -17,9 +17,14 @@ import numpy as np
 import pytest
 
 from conftest import synthetic_regression
-from repro.core import (FalkonConfig, conjugate_gradient,
-                        conjugate_gradient_host, falkon_solve,
-                        make_preconditioner, uniform_centers)
+from repro.core import (
+    FalkonConfig,
+    conjugate_gradient,
+    conjugate_gradient_host,
+    falkon_solve,
+    make_preconditioner,
+    uniform_centers,
+)
 from repro.core.falkon import _falkon_operator
 from repro.ops import get_ops
 
@@ -40,11 +45,15 @@ def test_host_matches_scanned_full_run():
     scan = conjugate_gradient(mv, b, t=25)
     host = conjugate_gradient_host(mv, b, t=25)
     assert host.residual_norms.shape == scan.residual_norms.shape == (26,)
-    np.testing.assert_allclose(np.asarray(host.x), np.asarray(scan.x),
-                               rtol=1e-5, atol=1e-6)
-    np.testing.assert_allclose(np.asarray(host.residual_norms),
-                               np.asarray(scan.residual_norms),
-                               rtol=1e-4, atol=1e-7)
+    np.testing.assert_allclose(
+        np.asarray(host.x), np.asarray(scan.x), rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(host.residual_norms),
+        np.asarray(scan.residual_norms),
+        rtol=1e-4,
+        atol=1e-7,
+    )
 
 
 def test_host_tol_early_stop_truncates_residual_norms():
@@ -59,9 +68,9 @@ def test_host_tol_early_stop_truncates_residual_norms():
     it = int(host.iterations)
     assert 0 < it < t, "tolerance should stop the loop early"
     assert host.residual_norms.shape == (it + 1,)
-    np.testing.assert_allclose(np.asarray(host.x),
-                               np.asarray(jnp.linalg.solve(A, b)),
-                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(host.x), np.asarray(jnp.linalg.solve(A, b)), rtol=1e-3, atol=1e-4
+    )
 
 
 def test_host_scanned_tol_parity():
@@ -79,11 +88,15 @@ def test_host_scanned_tol_parity():
     assert abs(it_h - it_s) <= 1
     assert scan.residual_norms.shape == (t + 1,)
     k = min(it_h, it_s)
-    np.testing.assert_allclose(np.asarray(host.residual_norms[:k + 1]),
-                               np.asarray(scan.residual_norms[:k + 1]),
-                               rtol=1e-3, atol=1e-7)
-    np.testing.assert_allclose(np.asarray(host.x), np.asarray(scan.x),
-                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(host.residual_norms[: k + 1]),
+        np.asarray(scan.residual_norms[: k + 1]),
+        rtol=1e-3,
+        atol=1e-7,
+    )
+    np.testing.assert_allclose(
+        np.asarray(host.x), np.asarray(scan.x), rtol=1e-4, atol=1e-5
+    )
     # the scanned tail is frozen once everything converged
     tail = np.asarray(scan.residual_norms[it_s:])
     np.testing.assert_array_equal(tail, np.full_like(tail, tail[0]))
@@ -92,16 +105,16 @@ def test_host_scanned_tol_parity():
 def test_host_multirhs_stops_when_all_columns_converge():
     A = _spd(24)
     # very different column scales => different per-column convergence times
-    B = jax.random.normal(jax.random.PRNGKey(3), (24, 3)) * jnp.array(
-        [1.0, 1e-3, 10.0])
+    B = jax.random.normal(jax.random.PRNGKey(3), (24, 3)) * jnp.array([1.0, 1e-3, 10.0])
     mv = lambda v: A @ v
     host = conjugate_gradient_host(mv, B, t=300, tol=1e-5)
     it = int(host.iterations)
     assert 0 < it < 300
     assert host.residual_norms.shape == (it + 1, 3)
     sol = jnp.linalg.solve(A, B)
-    np.testing.assert_allclose(np.asarray(host.x), np.asarray(sol),
-                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(host.x), np.asarray(sol), rtol=1e-3, atol=1e-4
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -109,8 +122,13 @@ def test_host_multirhs_stops_when_all_columns_converge():
 # ---------------------------------------------------------------------------
 def _tiny_falkon(lam=1e-3, n=300, M=48):
     X, y = synthetic_regression(jax.random.PRNGKey(0), n)
-    cfg = FalkonConfig(kernel_params=(("sigma", 1.5),), lam=lam,
-                       num_centers=M, iterations=5, block_size=128)
+    cfg = FalkonConfig(
+        kernel_params=(("sigma", 1.5),),
+        lam=lam,
+        num_centers=M,
+        iterations=5,
+        block_size=128,
+    )
     kern = cfg.make_kernel()
     sel = uniform_centers(jax.random.PRNGKey(1), X, M)
     ops = get_ops("jnp", kern, block_size=128)
@@ -121,8 +139,9 @@ def _tiny_falkon(lam=1e-3, n=300, M=48):
 
 def test_estimate_cond_tracks_true_condition_number():
     X, y, centers, pre, kern, cfg, ops = _tiny_falkon()
-    state = falkon_solve(X, y, centers, pre, kern, cfg.lam, 5, ops=ops,
-                         estimate_cond=True)
+    state = falkon_solve(
+        X, y, centers, pre, kern, cfg.lam, 5, ops=ops, estimate_cond=True
+    )
     est = float(state.cond_estimate)
 
     # densify W = B^T H B by applying the operator to the identity
@@ -142,11 +161,13 @@ def test_estimate_cond_flag_off_returns_zero_and_saves_sweeps():
     from repro.ops import CountingOps
     X, y, centers, pre, kern, cfg, ops = _tiny_falkon()
     c_on = CountingOps(ops)
-    on = falkon_solve(X, y, centers, pre, kern, cfg.lam, 5, ops=c_on,
-                      estimate_cond=True)
+    on = falkon_solve(
+        X, y, centers, pre, kern, cfg.lam, 5, ops=c_on, estimate_cond=True
+    )
     c_off = CountingOps(ops)
-    off = falkon_solve(X, y, centers, pre, kern, cfg.lam, 5, ops=c_off,
-                       estimate_cond=False)
+    off = falkon_solve(
+        X, y, centers, pre, kern, cfg.lam, 5, ops=c_off, estimate_cond=False
+    )
     assert float(off.cond_estimate) == 0.0
     assert float(on.cond_estimate) > 0.0
     assert c_off.sweeps < c_on.sweeps  # the diagnostic costs extra sweeps
@@ -156,8 +177,7 @@ def test_estimate_cond_flag_off_returns_zero_and_saves_sweeps():
 def test_config_estimate_cond_threads_through_fit():
     from repro.core import falkon_fit
     X, y = synthetic_regression(jax.random.PRNGKey(0), 200)
-    cfg = FalkonConfig(num_centers=32, iterations=3, block_size=64,
-                       estimate_cond=False)
+    cfg = FalkonConfig(num_centers=32, iterations=3, block_size=64, estimate_cond=False)
     _, state = falkon_fit(jax.random.PRNGKey(1), X, y, cfg)
     assert float(state.cond_estimate) == 0.0
 
@@ -175,6 +195,9 @@ def test_host_scanned_storage_contract(storage):
     want = jnp.dtype(storage) if storage else b.dtype
     assert scan.x.dtype == host.x.dtype == want
     tol = 5e-2 if storage else 1e-5
-    np.testing.assert_allclose(np.asarray(host.x, np.float32),
-                               np.asarray(scan.x, np.float32),
-                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(
+        np.asarray(host.x, np.float32),
+        np.asarray(scan.x, np.float32),
+        rtol=tol,
+        atol=tol,
+    )

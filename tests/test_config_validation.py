@@ -37,8 +37,7 @@ def test_unknown_center_selection_fails_eagerly_naming_options():
 
 def test_valid_configs_still_construct():
     FalkonConfig()  # defaults
-    FalkonConfig(ops_impl="pallas", precision="bf16",
-                 center_selection="leverage")
+    FalkonConfig(ops_impl="pallas", precision="bf16", center_selection="leverage")
     # a custom PrecisionPolicy instance passes validation too
     FalkonConfig(precision=PrecisionPolicy(name="custom", storage="bfloat16"))
 
@@ -67,7 +66,16 @@ def test_falkon_solve_matvec_impl_warns():
     sel = uniform_centers(jax.random.PRNGKey(1), X, 16)
     pre = make_preconditioner(kern(sel.centers, sel.centers), 1e-3, 64)
     with pytest.warns(DeprecationWarning, match="matvec_impl"):
-        st = falkon_solve(X, y, sel.centers, pre, kern, 1e-3, 2,
-                          block_size=64, matvec_impl="jnp",
-                          estimate_cond=False)
+        st = falkon_solve(
+            X,
+            y,
+            sel.centers,
+            pre,
+            kern,
+            1e-3,
+            2,
+            block_size=64,
+            matvec_impl="jnp",
+            estimate_cond=False,
+        )
     assert bool(jnp.all(jnp.isfinite(st.alpha)))

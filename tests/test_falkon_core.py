@@ -17,16 +17,33 @@ import pytest
 
 from conftest import synthetic_regression
 from repro.compat import enable_x64
-from repro.core import (FalkonConfig, GaussianKernel, conjugate_gradient,
-                        exact_leverage_scores, approximate_leverage_scores,
-                        falkon_fit, falkon_solve, knm_apply, knm_matvec,
-                        krr_direct, make_preconditioner, nystrom_direct,
-                        nystrom_gradient, uniform_centers)
+from repro.core import (
+    FalkonConfig,
+    GaussianKernel,
+    conjugate_gradient,
+    exact_leverage_scores,
+    approximate_leverage_scores,
+    falkon_fit,
+    falkon_solve,
+    knm_apply,
+    knm_matvec,
+    krr_direct,
+    make_preconditioner,
+    nystrom_direct,
+    nystrom_gradient,
+    uniform_centers,
+)
 
 
 def _fit(X, y, **kw):
-    defaults = dict(kernel="gaussian", kernel_params=(("sigma", 2.0),),
-                    lam=1e-5, num_centers=300, iterations=40, block_size=256)
+    defaults = dict(
+        kernel="gaussian",
+        kernel_params=(("sigma", 2.0),),
+        lam=1e-5,
+        num_centers=300,
+        iterations=40,
+        block_size=256,
+    )
     defaults.update(kw)
     cfg = FalkonConfig(**defaults)
     return falkon_fit(jax.random.PRNGKey(1), X, y, cfg) + (cfg,)
@@ -64,8 +81,9 @@ def test_knm_apply_matches_dense(rng):
     kern = GaussianKernel(sigma=1.5)
     C = X[:40]
     u = jax.random.normal(jax.random.PRNGKey(5), (40,))
-    np.testing.assert_allclose(knm_apply(X, C, u, kern, block_size=100),
-                               kern(X, C) @ u, rtol=2e-4, atol=2e-3)
+    np.testing.assert_allclose(
+        knm_apply(X, C, u, kern, block_size=100), kern(X, C) @ u, rtol=2e-4, atol=2e-3
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -106,8 +124,7 @@ def test_falkon_converges_to_nystrom(rng):
     with enable_x64(True):
         X, y = synthetic_regression(rng, 1200, dtype=jnp.float64)
         est, state, cfg = _fit(X, y, iterations=60, dtype="float64")
-        ny = nystrom_direct(X, y, est.centers, cfg.make_kernel(), cfg.lam,
-                            jitter=0.0)
+        ny = nystrom_direct(X, y, est.centers, cfg.make_kernel(), cfg.lam, jitter=0.0)
         pred_f, pred_n = est.predict(X), ny.predict(X)
         rel = jnp.linalg.norm(pred_f - pred_n) / jnp.linalg.norm(pred_n)
         assert float(rel) < 1e-5, f"Lemma 5 violated: rel={float(rel):.2e}"
@@ -120,8 +137,9 @@ def test_falkon_rank_deficient_path(rng):
         # force duplicates: tile a small set of rows
         Xd = jnp.concatenate([X[:550], X[:50]], axis=0)
         yd = jnp.concatenate([y[:550], y[:50]], axis=0)
-        est, state, cfg = _fit(Xd, yd, num_centers=200, iterations=60,
-                               rank_deficient=True, dtype="float64")
+        est, state, cfg = _fit(
+            Xd, yd, num_centers=200, iterations=60, rank_deficient=True, dtype="float64"
+        )
         assert jnp.all(jnp.isfinite(est.alpha))
         mse = float(jnp.mean((est.predict(Xd) - yd) ** 2))
         assert mse < 0.3
@@ -130,8 +148,15 @@ def test_falkon_rank_deficient_path(rng):
 def test_falkon_leverage_scores_path(rng):
     with enable_x64(True):
         X, y = synthetic_regression(rng, 800, dtype=jnp.float64)
-        est, state, cfg = _fit(X, y, num_centers=250, iterations=60, lam=1e-4,
-                               center_selection="leverage", dtype="float64")
+        est, state, cfg = _fit(
+            X,
+            y,
+            num_centers=250,
+            iterations=60,
+            lam=1e-4,
+            center_selection="leverage",
+            dtype="float64",
+        )
         assert jnp.all(jnp.isfinite(est.alpha))
         # Thm 4: conditioning under leverage sampling is controlled too
         assert float(state.cond_estimate) < 100.0
@@ -147,8 +172,9 @@ def test_preconditioner_conditioning_improves_with_M(rng):
         X, y = synthetic_regression(rng, 1000, dtype=jnp.float64)
         conds = []
         for M in (20, 100, 400):
-            est, state, cfg = _fit(X, y, num_centers=M, iterations=5,
-                                   lam=1e-4, dtype="float64")
+            est, state, cfg = _fit(
+                X, y, num_centers=M, iterations=5, lam=1e-4, dtype="float64"
+            )
             conds.append(float(state.cond_estimate))
         # cond(W) -> small constant as M grows (Thm 2: ~17 suffices for nu>=1/2)
         assert conds[-1] < conds[0] + 1e-6
@@ -159,9 +185,15 @@ def test_exponential_decay_in_iterations(rng):
     """Gap to the exact Nystrom estimator decays ~exponentially in t (Thm 1)."""
     with enable_x64(True):
         X, y = synthetic_regression(rng, 1000, dtype=jnp.float64)
-        cfg = FalkonConfig(kernel="gaussian", kernel_params=(("sigma", 2.0),),
-                           lam=1e-4, num_centers=300, iterations=1,
-                           block_size=256, dtype="float64")
+        cfg = FalkonConfig(
+            kernel="gaussian",
+            kernel_params=(("sigma", 2.0),),
+            lam=1e-4,
+            num_centers=300,
+            iterations=1,
+            block_size=256,
+            dtype="float64",
+        )
         kern = cfg.make_kernel()
         sel = uniform_centers(jax.random.PRNGKey(1), X, 300)
         ny = nystrom_direct(X, y, sel.centers, kern, cfg.lam, jitter=0.0)
@@ -169,8 +201,7 @@ def test_exponential_decay_in_iterations(rng):
         pre = make_preconditioner(KMM, cfg.lam, X.shape[0])
         gaps = []
         for t in (2, 5, 10, 20):
-            st = falkon_solve(X, y, sel.centers, pre, kern, cfg.lam, t,
-                              block_size=256)
+            st = falkon_solve(X, y, sel.centers, pre, kern, cfg.lam, t, block_size=256)
             gaps.append(float(jnp.linalg.norm(st.alpha - ny.alpha)))
         assert gaps[1] < gaps[0] and gaps[2] < gaps[1] and gaps[3] < gaps[2]
         # at least geometric decay with rate ~e^{-1/2} per iteration on average
@@ -186,8 +217,7 @@ def test_falkon_matches_krr_accuracy(rng):
     n = X.shape[0]
     lam = 1.0 / np.sqrt(n)
     M = int(3 * np.sqrt(n))
-    est, state, cfg = _fit(X, y, lam=lam, num_centers=M,
-                           iterations=int(np.log(n) * 3))
+    est, state, cfg = _fit(X, y, lam=lam, num_centers=M, iterations=int(np.log(n) * 3))
     kern = cfg.make_kernel()
     kr = krr_direct(X, y, kern, lam)
     mse_f = float(jnp.mean((est.predict(Xte) - yte) ** 2))
@@ -201,11 +231,11 @@ def test_falkon_beats_unpreconditioned_gradient(rng):
     with enable_x64(True):
         X, y = synthetic_regression(rng, 1500, dtype=jnp.float64)
         t = 15
-        est, state, cfg = _fit(X, y, lam=1e-4, num_centers=300, iterations=t,
-                               dtype="float64")
+        est, state, cfg = _fit(
+            X, y, lam=1e-4, num_centers=300, iterations=t, dtype="float64"
+        )
         kern = cfg.make_kernel()
-        ny_gd = nystrom_gradient(X, y, est.centers, kern, cfg.lam, t=t,
-                                 block_size=256)
+        ny_gd = nystrom_gradient(X, y, est.centers, kern, cfg.lam, t=t, block_size=256)
         ny_exact = nystrom_direct(X, y, est.centers, kern, cfg.lam, jitter=0.0)
         gap_falkon = float(jnp.linalg.norm(est.predict(X) - ny_exact.predict(X)))
         gap_gd = float(jnp.linalg.norm(ny_gd.predict(X) - ny_exact.predict(X)))
@@ -221,9 +251,9 @@ def test_approximate_leverage_scores_close_to_exact(rng):
         kern = GaussianKernel(sigma=2.0)
         lam = 1e-3
         exact = exact_leverage_scores(X, kern, lam)
-        approx = approximate_leverage_scores(jax.random.PRNGKey(0), X, kern,
-                                             lam, pilot_size=300,
-                                             block_size=128)
+        approx = approximate_leverage_scores(
+            jax.random.PRNGKey(0), X, kern, lam, pilot_size=300, block_size=128
+        )
         # q-approximation (Def. 1) with a generous q; also rank correlation
         ratio = approx / exact
         assert float(jnp.median(ratio)) > 0.2 and float(jnp.median(ratio)) < 5.0
@@ -251,8 +281,13 @@ def test_multiclass_solve(rng):
 def test_jit_falkon_solve(rng):
     """The whole solve lowers + compiles + runs under jit (dry-run substrate)."""
     X, y = synthetic_regression(rng, 512)
-    cfg = FalkonConfig(lam=1e-4, num_centers=128, iterations=10, block_size=128,
-                       kernel_params=(("sigma", 2.0),))
+    cfg = FalkonConfig(
+        lam=1e-4,
+        num_centers=128,
+        iterations=10,
+        block_size=128,
+        kernel_params=(("sigma", 2.0),),
+    )
     kern = cfg.make_kernel()
     sel = uniform_centers(jax.random.PRNGKey(1), X, 128)
     KMM = kern(sel.centers, sel.centers)

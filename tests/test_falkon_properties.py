@@ -7,8 +7,9 @@ import pytest
 pytest.importorskip("hypothesis")   # optional dep: skip, never collect-error
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import (GaussianKernel, conjugate_gradient, knm_matvec,
-                        make_kernel, make_preconditioner)
+from repro.core import (
+    GaussianKernel, conjugate_gradient, knm_matvec, make_kernel, make_preconditioner
+)
 
 SET = settings(max_examples=15, deadline=None)
 
@@ -19,9 +20,12 @@ def _data(seed, n, d):
 
 
 @SET
-@given(seed=st.integers(0, 2**31 - 1), n=st.integers(3, 40),
-       d=st.integers(1, 6),
-       kname=st.sampled_from(["gaussian", "laplacian", "matern32"]))
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(3, 40),
+    d=st.integers(1, 6),
+    kname=st.sampled_from(["gaussian", "laplacian", "matern32"]),
+)
 def test_kernel_gram_is_psd_and_bounded(seed, n, d, kname):
     X = _data(seed, n, d)
     kern = make_kernel(kname, sigma=1.3)
@@ -36,8 +40,12 @@ def test_kernel_gram_is_psd_and_bounded(seed, n, d, kname):
 
 
 @SET
-@given(seed=st.integers(0, 2**31 - 1), n=st.integers(5, 60),
-       m=st.integers(2, 20), bs=st.integers(3, 64))
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(5, 60),
+    m=st.integers(2, 20),
+    bs=st.integers(3, 64),
+)
 def test_blocked_matvec_invariant_to_block_size(seed, n, m, bs):
     X = _data(seed, n, 4)
     C = _data(seed + 1, m, 4)
@@ -60,8 +68,7 @@ def test_cg_matches_direct_solve_on_random_spd(seed, q):
 
 
 @SET
-@given(seed=st.integers(0, 2**31 - 1), m=st.integers(3, 30),
-       lam=st.floats(1e-5, 1e-1))
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(3, 30), lam=st.floats(1e-5, 1e-1))
 def test_preconditioner_whitens_KMM_regime(seed, m, lam):
     """When K_nM^T K_nM / n ~= K_MM^2-free regime n==M (centers==data), the
     preconditioned operator W = B^T H B equals the identity up to the sample
@@ -87,13 +94,13 @@ def test_preconditioner_whitens_KMM_regime(seed, m, lam):
 
 
 @SET
-@given(seed=st.integers(0, 2**31 - 1), n=st.integers(4, 30),
-       shift=st.floats(-3.0, 3.0))
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(4, 30), shift=st.floats(-3.0, 3.0))
 def test_gaussian_kernel_translation_invariance(seed, n, shift):
     X = _data(seed, n, 3)
     kern = GaussianKernel(sigma=1.1)
-    np.testing.assert_allclose(kern(X, X), kern(X + shift, X + shift),
-                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        kern(X, X), kern(X + shift, X + shift), rtol=1e-4, atol=1e-5
+    )
 
 
 @SET

@@ -16,8 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (FalkonConfig, GaussianKernel, falkon_fit, make_kernel,
-                        spec_of)
+from repro.core import (FalkonConfig, GaussianKernel, falkon_fit, make_kernel, spec_of)
 from repro.core.kernels import KernelSpec
 from repro.kernels.kernel_matvec import fused_sweep_pallas, sweep_tile_grid
 from repro.kernels.ops import two_pass_knm_matvec
@@ -56,15 +55,15 @@ def test_registry_contents():
 def test_spec_driven_selection_no_name_sniffing():
     """Selection keys off the registered spec, not the class name."""
     assert spec_of(GaussianKernel(sigma=2.5)) == KernelSpec(
-        "gaussian", (("sigma", 2.5),))
+        "gaussian", (("sigma", 2.5),)
+    )
 
     @dataclasses.dataclass(frozen=True)
     class GaussianLookalikeKernel:   # name would have fooled the old sniffing
         sigma: float = 1.0
 
     with pytest.raises(TypeError, match="KernelSpec"):
-        get_ops("pallas", GaussianLookalikeKernel()).sweep(
-            *_data(64, 32, 4)[:3], None)
+        get_ops("pallas", GaussianLookalikeKernel()).sweep(*_data(64, 32, 4)[:3], None)
 
 
 @pytest.mark.parametrize("kernel_name,params", KERNELS)
@@ -88,11 +87,15 @@ def test_sweep_parity_shapes_and_rhs(shape, p):
     X, C, u, v = _data(n, M, d, p=p, seed=7)
     jops = get_ops("jnp", kern, block_size=100)   # ragged jnp blocks too
     pops = get_ops("pallas", kern, block_size=128)
-    np.testing.assert_allclose(np.asarray(pops.sweep(X, C, u, v)),
-                               np.asarray(jops.sweep(X, C, u, v)), **TOL)
+    np.testing.assert_allclose(
+        np.asarray(pops.sweep(X, C, u, v)), np.asarray(jops.sweep(X, C, u, v)), **TOL
+    )
     # v=None path
-    np.testing.assert_allclose(np.asarray(pops.sweep(X, C, u, None)),
-                               np.asarray(jops.sweep(X, C, u, None)), **TOL)
+    np.testing.assert_allclose(
+        np.asarray(pops.sweep(X, C, u, None)),
+        np.asarray(jops.sweep(X, C, u, None)),
+        **TOL,
+    )
 
 
 @pytest.mark.parametrize("kernel_name,params", KERNELS)
@@ -102,14 +105,17 @@ def test_apply_and_gram_parity(kernel_name, params):
     X, C, u, _ = _data(n, M, d, seed=3)
     jops = get_ops("jnp", kern, block_size=64)
     pops = get_ops("pallas", kern, block_size=128)
-    np.testing.assert_allclose(np.asarray(pops.apply(X, C, u)),
-                               np.asarray(jops.apply(X, C, u)), **TOL)
-    np.testing.assert_allclose(np.asarray(pops.gram(X, C)),
-                               np.asarray(jops.gram(X, C)), **TOL)
+    np.testing.assert_allclose(
+        np.asarray(pops.apply(X, C, u)), np.asarray(jops.apply(X, C, u)), **TOL
+    )
+    np.testing.assert_allclose(
+        np.asarray(pops.gram(X, C)), np.asarray(jops.gram(X, C)), **TOL
+    )
     # multi-output apply
     U = jax.random.normal(jax.random.PRNGKey(9), (M, 4))
-    np.testing.assert_allclose(np.asarray(pops.apply(X, C, U)),
-                               np.asarray(jops.apply(X, C, U)), **TOL)
+    np.testing.assert_allclose(
+        np.asarray(pops.apply(X, C, U)), np.asarray(jops.apply(X, C, U)), **TOL
+    )
 
 
 def test_fused_sweep_single_pass_tile_count():
@@ -119,9 +125,17 @@ def test_fused_sweep_single_pass_tile_count():
     kern = GaussianKernel(sigma=1.5)
     X, C, u, v = _data(n, M, d, seed=11)
     bm, bn = 64, 128
-    w, count = fused_sweep_pallas(X, C, u, v, spec=spec_of(kern),
-                                  block_m=bm, block_n=bn, interpret=True,
-                                  return_tile_count=True)
+    w, count = fused_sweep_pallas(
+        X,
+        C,
+        u,
+        v,
+        spec=spec_of(kern),
+        block_m=bm,
+        block_n=bn,
+        interpret=True,
+        return_tile_count=True,
+    )
     nbi, nbj = sweep_tile_grid(n, M, bm, bn)
     assert int(count) == nbi * nbj, (int(count), nbi, nbj)
     # same answer as the two-pass composition, which costs 2x tile evals
@@ -138,8 +152,8 @@ def test_pallas_ops_sweep_with_stats_counts_once():
     nbi, nbj = sweep_tile_grid(n, M, 128, 512)
     assert int(count) == nbi * nbj
     np.testing.assert_allclose(
-        np.asarray(w), np.asarray(get_ops("jnp", kern).sweep(X, C, u, v)),
-        **TOL)
+        np.asarray(w), np.asarray(get_ops("jnp", kern).sweep(X, C, u, v)), **TOL
+    )
 
 
 def test_bf16_precision_policy():
@@ -159,18 +173,28 @@ def test_bf16_precision_policy():
 def test_falkon_config_ops_impl_and_deprecated_alias(rng):
     from conftest import synthetic_regression
     X, y = synthetic_regression(rng, 384)
-    base = dict(kernel="gaussian", kernel_params=(("sigma", 2.0),), lam=1e-4,
-                num_centers=64, iterations=25, block_size=128)
-    est_j, _ = falkon_fit(jax.random.PRNGKey(1), X, y,
-                          FalkonConfig(**base, ops_impl="jnp"))
-    est_p, _ = falkon_fit(jax.random.PRNGKey(1), X, y,
-                          FalkonConfig(**base, ops_impl="pallas"))
-    est_old, _ = falkon_fit(jax.random.PRNGKey(1), X, y,
-                            FalkonConfig(**base, matvec_impl="pallas"))
+    base = dict(
+        kernel="gaussian",
+        kernel_params=(("sigma", 2.0),),
+        lam=1e-4,
+        num_centers=64,
+        iterations=25,
+        block_size=128,
+    )
+    est_j, _ = falkon_fit(
+        jax.random.PRNGKey(1), X, y, FalkonConfig(**base, ops_impl="jnp")
+    )
+    est_p, _ = falkon_fit(
+        jax.random.PRNGKey(1), X, y, FalkonConfig(**base, ops_impl="pallas")
+    )
+    est_old, _ = falkon_fit(
+        jax.random.PRNGKey(1), X, y, FalkonConfig(**base, matvec_impl="pallas")
+    )
     p_j, p_p = est_j.predict(X), est_p.predict(X)
     rel = float(jnp.linalg.norm(p_p - p_j) / jnp.linalg.norm(p_j))
     assert rel < 2e-3, rel
     # deprecated alias routes to the same backend
     assert FalkonConfig(**base, matvec_impl="pallas").impl == "pallas"
-    np.testing.assert_allclose(np.asarray(est_old.predict(X)),
-                               np.asarray(p_p), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(est_old.predict(X)), np.asarray(p_p), rtol=1e-5, atol=1e-5
+    )

@@ -26,15 +26,23 @@ import numpy as np
 import pytest
 
 from conftest import TEST_PRECISION, synthetic_regression
-from repro.core import (FalkonConfig, approximate_leverage_scores,
-                        approximate_leverage_scores_path,
-                        build_leverage_pilot, falkon_fit, falkon_fit_path,
-                        falkon_fit_path_streaming, falkon_fit_streaming,
-                        leverage_scores_from_pilot, make_kernel,
-                        make_preconditioner, make_preconditioner_path)
+from repro.core import (
+    FalkonConfig,
+    approximate_leverage_scores,
+    approximate_leverage_scores_path,
+    build_leverage_pilot,
+    falkon_fit,
+    falkon_fit_path,
+    falkon_fit_path_streaming,
+    falkon_fit_streaming,
+    leverage_scores_from_pilot,
+    make_kernel,
+    make_preconditioner,
+    make_preconditioner_path,
+)
 from repro.ops import CountingOps, SweepPlanWarning, get_ops, plan_sweep
 
-LAMS = tuple(float(10.0 ** e) for e in np.linspace(-4.0, -1.0, 8))
+LAMS = tuple(float(10.0**e) for e in np.linspace(-4.0, -1.0, 8))
 #: fp32: the acceptance bound. bf16: the policy's documented error ceiling —
 #: both runs quantize the CG iterates at eps_bf16, which is the parity floor.
 REL_TOL = {"fp32": 1e-4, "bf16": 1e-2}
@@ -45,9 +53,14 @@ def _problem(n=400, d=5, seed=0):
 
 
 def _cfg(**kw):
-    defaults = dict(kernel_params=(("sigma", 1.0),), num_centers=64,
-                    iterations=30, block_size=128, jitter=1e-5,
-                    estimate_cond=False)
+    defaults = dict(
+        kernel_params=(("sigma", 1.0),),
+        num_centers=64,
+        iterations=30,
+        block_size=128,
+        jitter=1e-5,
+        estimate_cond=False,
+    )
     defaults.update(kw)
     return FalkonConfig(**defaults)
 
@@ -99,18 +112,23 @@ def test_path_matches_sequential_pallas_fused():
     # amplification below the parity tolerance.
     ("j_sharded", 768, 640, 4, 0.1, 0.5, 1e-4, -3.0),
 ])
-def test_path_matches_sequential_pallas_out_of_core(monkeypatch, route, n, M,
-                                                    t, budget_mb, sigma,
-                                                    jitter, lam_lo):
+def test_path_matches_sequential_pallas_out_of_core(
+    monkeypatch, route, n, M, t, budget_mb, sigma, jitter, lam_lo
+):
     """The out-of-core sweep schedules under a shrunken VMEM budget: the
     path solve and the sequential fits both route onto ``route`` and still
     agree per alpha."""
     monkeypatch.setenv("REPRO_VMEM_BUDGET_MB", str(budget_mb))
     X, y = _problem(n=n)
-    lams = tuple(float(10.0 ** e) for e in np.linspace(lam_lo, -1.0, 8))
-    cfg = _cfg(ops_impl="pallas", precision=TEST_PRECISION, iterations=t,
-               num_centers=M, kernel_params=(("sigma", sigma),),
-               jitter=jitter)
+    lams = tuple(float(10.0**e) for e in np.linspace(lam_lo, -1.0, 8))
+    cfg = _cfg(
+        ops_impl="pallas",
+        precision=TEST_PRECISION,
+        iterations=t,
+        num_centers=M,
+        kernel_params=(("sigma", sigma),),
+        jitter=jitter,
+    )
     plan = cfg.make_ops().plan(n, M, 5, 1, systems=len(lams))
     assert plan.path == route, plan
     _assert_path_matches_sequential(X, y, cfg, lams, REL_TOL[TEST_PRECISION])
@@ -127,13 +145,12 @@ def test_path_matches_sequential_streaming():
     # accumulation order differs between the stacked and thin blocks, and
     # under bf16 iterate storage that reordering costs extra bf16 ulps
     cfg = _cfg(ops_impl="jnp", precision=TEST_PRECISION, jitter=1e-4)
-    lams = tuple(float(10.0 ** e) for e in np.linspace(-3.0, -1.0, 8))
+    lams = tuple(float(10.0**e) for e in np.linspace(-3.0, -1.0, 8))
     key = jax.random.PRNGKey(1)
     res = falkon_fit_path_streaming(key, src, cfg, lams)
     tol = REL_TOL[TEST_PRECISION]
     for i, lam in enumerate(lams):
-        est, _ = falkon_fit_streaming(key, src,
-                                      dataclasses.replace(cfg, lam=lam))
+        est, _ = falkon_fit_streaming(key, src, dataclasses.replace(cfg, lam=lam))
         rel = _rel(res.estimators[i].alpha, est.alpha)
         assert rel <= tol, f"lam={lam:.2e}: rel alpha gap {rel:.2e} > {tol}"
 
@@ -169,10 +186,10 @@ def test_path_validation_scoring_is_one_apply():
     """Scoring L lams over the val set is ONE stacked apply, not L."""
     X, y = _problem()
     cfg = _cfg(ops_impl="jnp")
-    ops = CountingOps(get_ops("jnp", cfg.make_kernel(),
-                              block_size=cfg.block_size))
-    res = falkon_fit_path(jax.random.PRNGKey(1), X, y, cfg, LAMS,
-                          X_val=X[:100], y_val=y[:100], ops=ops)
+    ops = CountingOps(get_ops("jnp", cfg.make_kernel(), block_size=cfg.block_size))
+    res = falkon_fit_path(
+        jax.random.PRNGKey(1), X, y, cfg, LAMS, X_val=X[:100], y_val=y[:100], ops=ops
+    )
     assert ops.applies == 1
     assert res.val_scores.shape == (len(LAMS),)
     assert res.best is res.estimators[res.best_index]
@@ -189,8 +206,9 @@ def test_path_validation_selects_sequential_argmin():
         est, _ = falkon_fit(key, X, y, dataclasses.replace(cfg, lam=lam))
         seq_mse.append(float(jnp.mean((est.predict(Xv) - yv) ** 2)))
     assert res.best_index == int(np.argmin(seq_mse))
-    np.testing.assert_allclose(np.asarray(res.val_scores), seq_mse,
-                               rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(res.val_scores), seq_mse, rtol=1e-3, atol=1e-5
+    )
 
 
 def test_path_multirhs():
@@ -244,23 +262,24 @@ def test_preconditioner_path_matches_singles(rank_deficient):
     C = jax.random.normal(jax.random.PRNGKey(2), (48, 4))
     KMM = kern(C, C)
     lams = LAMS[:5]
-    pp = make_preconditioner_path(KMM, lams, 1000,
-                                  rank_deficient=rank_deficient)
+    pp = make_preconditioner_path(KMM, lams, 1000, rank_deficient=rank_deficient)
     U = jax.random.normal(jax.random.PRNGKey(3), (pp.q, len(lams) * 2))
     right = pp.right(U)
-    left = pp.left(jax.random.normal(jax.random.PRNGKey(4),
-                                     (KMM.shape[0], len(lams) * 2)))
+    left = pp.left(
+        jax.random.normal(jax.random.PRNGKey(4), (KMM.shape[0], len(lams) * 2))
+    )
     for i, lam in enumerate(lams):
-        single = make_preconditioner(KMM, lam, 1000,
-                                     rank_deficient=rank_deficient)
-        np.testing.assert_array_equal(np.asarray(pp.A[i]),
-                                      np.asarray(single.A))
+        single = make_preconditioner(KMM, lam, 1000, rank_deficient=rank_deficient)
+        np.testing.assert_array_equal(np.asarray(pp.A[i]), np.asarray(single.A))
         # per-system column groups of the stacked maps == the single maps
         # (loose: T^{-1}A^{-1} amplifies batched-vs-plain trsm rounding)
         cols = slice(i * 2, (i + 1) * 2)
-        np.testing.assert_allclose(np.asarray(right[:, cols]),
-                                   np.asarray(single.right(U[:, cols])),
-                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(
+            np.asarray(right[:, cols]),
+            np.asarray(single.right(U[:, cols])),
+            rtol=2e-4,
+            atol=2e-4,
+        )
         sysp = pp.system(i)
         np.testing.assert_array_equal(np.asarray(sysp.A), np.asarray(single.A))
     assert left.shape == (pp.q, len(lams) * 2)
@@ -276,9 +295,9 @@ def test_preconditioner_path_expand_rhs_matches_left():
     b = pp.expand_rhs(w)                       # (q, L)
     for i, lam in enumerate(lams):
         single = make_preconditioner(KMM, lam, 500)
-        np.testing.assert_allclose(np.asarray(b[:, i]),
-                                   np.asarray(single.left(w)),
-                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(b[:, i]), np.asarray(single.left(w)), rtol=1e-4, atol=1e-5
+        )
 
 
 def test_preconditioner_path_rejects_empty_grid():
@@ -306,14 +325,16 @@ def test_leverage_pilot_reuse_matches_single_shot():
     key = jax.random.PRNGKey(11)
     pilot = build_leverage_pilot(key, X, kern, pilot_size=64, block_size=128)
     for lam in (1e-4, 1e-2):
-        composed = leverage_scores_from_pilot(pilot, X, kern, lam,
-                                              block_size=128)
-        one_shot = approximate_leverage_scores(key, X, kern, lam,
-                                               pilot_size=64, block_size=128)
-        np.testing.assert_allclose(np.asarray(composed), np.asarray(one_shot),
-                                   rtol=1e-6)
-    grid = approximate_leverage_scores_path(key, X, kern, (1e-4, 1e-2),
-                                            pilot_size=64, block_size=128)
+        composed = leverage_scores_from_pilot(pilot, X, kern, lam, block_size=128)
+        one_shot = approximate_leverage_scores(
+            key, X, kern, lam, pilot_size=64, block_size=128
+        )
+        np.testing.assert_allclose(
+            np.asarray(composed), np.asarray(one_shot), rtol=1e-6
+        )
+    grid = approximate_leverage_scores_path(
+        key, X, kern, (1e-4, 1e-2), pilot_size=64, block_size=128
+    )
     assert grid.shape == (2, 300)
     np.testing.assert_allclose(
         np.asarray(grid[1]),
@@ -327,8 +348,7 @@ def test_path_fit_leverage_selection_shares_centers():
     X, y = _problem()
     cfg = _cfg(center_selection="leverage", pilot_size=96, iterations=15)
     res = falkon_fit_path(jax.random.PRNGKey(1), X, y, cfg, LAMS[:4])
-    assert all(est.centers is res.estimators[0].centers
-               for est in res.estimators)
+    assert all(est.centers is res.estimators[0].centers for est in res.estimators)
     for est in res.estimators:
         assert bool(jnp.all(jnp.isfinite(est.alpha)))
     mse = float(jnp.mean((res.estimators[0].predict(X) - y) ** 2))

@@ -1,0 +1,352 @@
+"""Mini-batch delayed-projection solver + partial_fit contract tests.
+
+The invariants pinned here (and leaned on by BENCH_minibatch.json's CI
+gate):
+
+* one chunk-sized ``ops.sweep`` per stochastic step — exactly, counted
+  eagerly through `CountingOps` with ``jit_update=False``;
+* the in-core `lax.scan` driver and the host-driven streaming driver are
+  the SAME update rule (parity when shuffling is off);
+* a projection period covering the whole dataset degenerates to full-batch
+  preconditioned gradient descent, so an exact solve is a fixed point —
+  the property `partial_fit` warm starts ride on;
+* `partial_fit` returns a same-geometry estimator (zero serve retraces
+  across a hot `swap_model`) whose quality tracks a from-scratch fit on
+  the concatenated data;
+* `Preconditioner.beta_of_coeffs` inverts `coeffs` (the warm-start
+  pullback);
+* `ShuffledChunkSource` emits every row exactly once per pass, reshuffled
+  across passes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FalkonConfig,
+    MinibatchConfig,
+    falkon_fit,
+    falkon_fit_minibatch,
+    falkon_fit_minibatch_streaming,
+    make_preconditioner,
+    minibatch_solve,
+    minibatch_solve_stream,
+)
+from repro.data import ArrayChunkSource, ShuffledChunkSource, StreamingLoader
+from repro.ops import CountingOps, get_ops
+from repro.serve import CoalescingPredictServer
+
+SIGMA = 2.0
+
+
+def _problem(n, d=6, seed=0):
+    """Learnable regression (val MSE far below var(y) after a good fit)."""
+    kx, ky, kf = jax.random.split(jax.random.PRNGKey(seed), 3)
+    X = jax.random.normal(kx, (n, d))
+    w = jax.random.normal(kf, (d,))
+    w = 1.2 * w / jnp.linalg.norm(w)
+
+    def f(Z):
+        return jnp.sin(Z @ w) + 0.5 * jnp.cos(0.6 * Z[:, 0] * Z[:, 1])
+
+    y = f(X) + 0.05 * jax.random.normal(ky, (n,))
+    Xv = jax.random.normal(jax.random.PRNGKey(seed + 9), (1024, d))
+    return X, y, Xv, f(Xv)
+
+
+def _config(M=128, lam=1e-4, iterations=20):
+    return FalkonConfig(
+        kernel_params=(("sigma", SIGMA),),
+        lam=lam,
+        num_centers=M,
+        iterations=iterations,
+        ops_impl="jnp",
+        estimate_cond=False,
+    )
+
+
+def _mse(pred, y):
+    return float(jnp.mean((pred - y) ** 2))
+
+
+# ---------------------------------------------------------------------------
+# convergence + the degenerate full-batch case
+# ---------------------------------------------------------------------------
+def test_minibatch_reaches_full_cg_quality():
+    X, y, Xv, yv = _problem(4096)
+    cfg = _config()
+    est_full, _ = falkon_fit(jax.random.PRNGKey(1), X, y, cfg)
+    mse_full = _mse(est_full.predict(Xv), yv)
+
+    mb = MinibatchConfig(chunk_rows=512, project_every=2, epochs=8)
+    est_mb, result = falkon_fit_minibatch(
+        jax.random.PRNGKey(1), X, y, cfg, mb, centers=est_full.centers
+    )
+    mse_mb = _mse(est_mb.predict(Xv), yv)
+    assert mse_full < 0.1 * float(jnp.var(yv))  # the task is learnable
+    assert mse_mb < 1.5 * mse_full
+    # the projected-gradient trace is the solver's residual history: the
+    # late-phase gradient must sit well below the first projection's.
+    gn = np.asarray(result.grad_norms)
+    assert gn[-1] < 0.2 * gn[0]
+
+
+def test_full_batch_period_is_fixed_point_of_exact_solve():
+    # project_every * chunk_rows >= n makes the accumulated gradient exact,
+    # so the delayed-projection rule degenerates to preconditioned GD and a
+    # converged CG solution must (approximately) stay put.
+    X, y, Xv, _ = _problem(2048)
+    cfg = _config(iterations=40)
+    est, _ = falkon_fit(jax.random.PRNGKey(1), X, y, cfg)
+
+    mb = MinibatchConfig(
+        chunk_rows=X.shape[0],
+        project_every=1,
+        epochs=3,
+        momentum=0.0,
+        avg_start=1.0,
+        shuffle=False,
+    )
+    refreshed = est.partial_fit(X, y, mb)
+    before = np.asarray(est.predict(Xv))
+    after = np.asarray(refreshed.predict(Xv))
+    scale = float(np.max(np.abs(before)))
+    assert np.max(np.abs(after - before)) < 1e-3 * scale
+
+
+# ---------------------------------------------------------------------------
+# the cost model: one chunk-sized sweep per step, exactly
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [2048, 1800])  # divisible + ragged tail
+def test_one_chunk_sweep_per_step_exactly(n):
+    chunk = 512
+    X, y, _, _ = _problem(n)
+    cfg = _config(M=64)
+    kern = cfg.make_kernel()
+    ops = CountingOps(get_ops("jnp", kern, block_size=cfg.block_size))
+    centers = X[:64]
+    precond = make_preconditioner(ops.gram(centers, centers), cfg.lam, n)
+
+    mb = MinibatchConfig(
+        chunk_rows=chunk,
+        project_every=2,
+        epochs=2,
+        power_iters=3,
+        shuffle=False,
+    )
+    loader = StreamingLoader(
+        ArrayChunkSource(np.asarray(X), np.asarray(y), chunk_rows=chunk),
+        prefetch=0,
+    )
+    before = ops.sweeps
+    result = minibatch_solve_stream(
+        loader, centers, precond, cfg.lam, mb, ops=ops, jit_update=False
+    )
+    num_chunks = -(-n // chunk)
+    steps = mb.epochs * num_chunks
+    assert int(result.state.step) == steps
+    # pilot power iterations + one sweep per stochastic step — EXACTLY.
+    assert ops.sweeps - before == mb.power_iters + steps
+    # every sweep moved exactly one (padded) chunk of rows.
+    assert result.rows_swept == float((mb.power_iters + steps) * chunk)
+
+
+def test_scan_and_stream_drivers_agree():
+    n, chunk = 2048, 512
+    X, y, _, _ = _problem(n)
+    cfg = _config(M=64)
+    kern = cfg.make_kernel()
+    ops = get_ops("jnp", kern, block_size=cfg.block_size)
+    centers = X[:64]
+    precond = make_preconditioner(ops.gram(centers, centers), cfg.lam, n)
+
+    mb = MinibatchConfig(
+        chunk_rows=chunk,
+        project_every=2,
+        epochs=2,
+        step_size=0.05,
+        shuffle=False,
+    )
+    r_scan = minibatch_solve(
+        X, y, centers, precond, cfg.lam, mb, ops=ops, key=jax.random.PRNGKey(0)
+    )
+    loader = StreamingLoader(
+        ArrayChunkSource(np.asarray(X), np.asarray(y), chunk_rows=chunk),
+        prefetch=0,
+    )
+    r_stream = minibatch_solve_stream(loader, centers, precond, cfg.lam, mb, ops=ops)
+    # same update rule, different compilation (one lax.scan vs per-chunk
+    # jitted calls): only fp32 accumulation-order drift may separate them.
+    np.testing.assert_allclose(
+        np.asarray(r_scan.alpha),
+        np.asarray(r_stream.alpha),
+        rtol=5e-3,
+        atol=5e-3,
+    )
+    np.testing.assert_allclose(
+        np.asarray(r_scan.grad_norms),
+        np.asarray(r_stream.grad_norms),
+        rtol=5e-3,
+        atol=1e-6,
+    )
+
+
+def test_streaming_fit_matches_incore_fit_quality():
+    n = 2048
+    X, y, Xv, yv = _problem(n)
+    cfg = _config(M=64, iterations=10)
+    mb = MinibatchConfig(chunk_rows=512, project_every=2, epochs=4)
+    est_in, _ = falkon_fit_minibatch(jax.random.PRNGKey(1), X, y, cfg, mb)
+    source = ArrayChunkSource(np.asarray(X), np.asarray(y), chunk_rows=512)
+    est_st, result = falkon_fit_minibatch_streaming(
+        jax.random.PRNGKey(1), source, cfg, mb
+    )
+    assert est_st.alpha.shape == est_in.alpha.shape
+    mse_in = _mse(est_in.predict(Xv), yv)
+    mse_st = _mse(est_st.predict(Xv), yv)
+    assert mse_st < 2.0 * mse_in + 1e-3
+    assert int(result.state.projections) == len(result.grad_norms)
+
+
+# ---------------------------------------------------------------------------
+# partial_fit: warm start, quality, zero-retrace serving swap
+# ---------------------------------------------------------------------------
+def test_partial_fit_tracks_concat_refit():
+    X, y, Xv, yv = _problem(3072)
+    X0, y0 = X[:2048], y[:2048]
+    cfg = _config()
+    est0, _ = falkon_fit(jax.random.PRNGKey(1), X0, y0, cfg)
+
+    mb = MinibatchConfig(chunk_rows=512, project_every=2, epochs=4)
+    est1 = est0.partial_fit(X[2048:], y[2048:], mb)
+    # geometry contract: same centers object, same alpha shape/dtype.
+    assert est1.centers is est0.centers
+    assert est1.alpha.shape == est0.alpha.shape
+    assert est1.alpha.dtype == est0.alpha.dtype
+
+    est_cat, _ = falkon_fit(jax.random.PRNGKey(1), X, y, cfg)
+    mse_cat = _mse(est_cat.predict(Xv), yv)
+    mse_tail = _mse(est1.predict(Xv), yv)
+    mse_before = _mse(est0.predict(Xv), yv)
+    # the refreshed model stays in the from-scratch fit's quality band and
+    # does not regress the deployed model.
+    assert mse_tail < 2.0 * mse_cat
+    assert mse_tail < 1.5 * mse_before
+
+
+def test_partial_fit_requires_fit_time_preconditioner():
+    X, y, _, _ = _problem(512)
+    cfg = _config(M=64, iterations=5)
+    est, _ = falkon_fit(jax.random.PRNGKey(1), X, y, cfg)
+    import dataclasses
+
+    bare = dataclasses.replace(est, precond=None, lam=None)
+    with pytest.raises(ValueError, match="preconditioner"):
+        bare.partial_fit(X[:128], y[:128])
+
+
+def test_partial_fit_swap_serves_with_zero_retraces():
+    X, y, _, _ = _problem(2048)
+    cfg = _config(M=64, iterations=10)
+    est, _ = falkon_fit(jax.random.PRNGKey(1), X, y, cfg)
+
+    server = CoalescingPredictServer(est, max_batch=64)
+    server.warmup()
+    reqs = [np.asarray(X[i : i + 13], np.float32) for i in (0, 40, 80)]
+    server.predict_many(reqs)
+    assert server.retraces_since_warmup() == 0
+
+    mb = MinibatchConfig(chunk_rows=256, project_every=2, epochs=2)
+    est2 = est.partial_fit(X[1024:], y[1024:], mb)
+    server.swap_model(est2)
+    outs = server.predict_many(reqs)
+    assert server.retraces_since_warmup() == 0  # the whole point
+    for xb, out in zip(reqs, outs):
+        np.testing.assert_allclose(
+            out, np.asarray(est2.predict(jnp.asarray(xb))), atol=1e-5
+        )
+
+
+def test_swap_model_refuses_different_geometry():
+    X, y, _, _ = _problem(1024)
+    est_a, _ = falkon_fit(jax.random.PRNGKey(1), X, y, _config(M=64))
+    est_b, _ = falkon_fit(jax.random.PRNGKey(1), X, y, _config(M=128))
+    server = CoalescingPredictServer(est_a, max_batch=32)
+    server.warmup()
+    with pytest.raises(ValueError, match="geometry"):
+        server.swap_model(est_b)
+
+
+def test_beta_of_coeffs_inverts_coeffs():
+    X, _, _, _ = _problem(1024)
+    cfg = _config(M=64)
+    kern = cfg.make_kernel()
+    ops = get_ops("jnp", kern, block_size=cfg.block_size)
+    centers = X[:64]
+    precond = make_preconditioner(ops.gram(centers, centers), cfg.lam, X.shape[0])
+    beta = jax.random.normal(jax.random.PRNGKey(3), (precond.q,))
+    alpha = precond.coeffs(beta)
+    np.testing.assert_allclose(
+        np.asarray(precond.beta_of_coeffs(alpha)),
+        np.asarray(beta),
+        rtol=2e-3,
+        atol=1e-4,
+    )
+
+
+# ---------------------------------------------------------------------------
+# config validation + epoch reshuffling
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "kw",
+    [
+        dict(chunk_rows=0),
+        dict(project_every=-1),
+        dict(epochs=0),
+        dict(step_size=0.0),
+        dict(step_safety=2.5),
+        dict(power_iters=0),
+        dict(momentum=1.0),
+        dict(avg_start=1.5),
+        dict(tol=-1e-3),
+    ],
+)
+def test_minibatch_config_rejects(kw):
+    with pytest.raises(ValueError):
+        MinibatchConfig(**kw)
+
+
+def test_shuffled_chunk_source_permutes_without_loss():
+    n, d = 300, 4
+    X = np.arange(n * d, dtype=np.float32).reshape(n, d)
+    y = np.arange(n, dtype=np.float32)
+    base = ArrayChunkSource(X, y, chunk_rows=64)
+    src = ShuffledChunkSource(base, seed=5, buffer_chunks=3)
+    assert (src.n_rows, src.dim, src.chunk_rows) == (n, d, 64)
+
+    def collect():
+        xs, ys = [], []
+        for xc, yc in src.chunks():
+            assert xc.shape[0] == yc.shape[0]
+            xs.append(xc)
+            ys.append(yc)
+        return np.concatenate(xs), np.concatenate(ys)
+
+    x1, y1 = collect()
+    x2, y2 = collect()
+    # every row exactly once per pass, rows aligned with their targets...
+    for xp, yp in ((x1, y1), (x2, y2)):
+        order = np.argsort(yp)
+        np.testing.assert_array_equal(yp[order], y)
+        np.testing.assert_array_equal(xp[order], X)
+    # ...in a genuinely shuffled and per-pass re-seeded order.
+    assert not np.array_equal(y1, y)
+    assert not np.array_equal(y1, y2)
+
+
+def test_shuffled_chunk_source_rejects_bad_buffer():
+    base = ArrayChunkSource(np.zeros((8, 2), np.float32), chunk_rows=4)
+    with pytest.raises(ValueError):
+        ShuffledChunkSource(base, buffer_chunks=0)

@@ -9,11 +9,11 @@ import numpy as np
 import pytest
 
 from repro.core import FalkonConfig, GaussianKernel, falkon_fit
-from repro.kernels.kernel_matvec import (kernel_matmul_pallas,
-                                         pairwise_kernel_pallas)
+from repro.kernels.kernel_matvec import (kernel_matmul_pallas, pairwise_kernel_pallas)
 from repro.kernels.ops import fused_knm_matvec
-from repro.kernels.ref import (fused_knm_matvec_ref, kernel_matmul_ref,
-                               pairwise_kernel_ref)
+from repro.kernels.ref import (
+    fused_knm_matvec_ref, kernel_matmul_ref, pairwise_kernel_ref
+)
 
 SHAPES = [
     # (m, n, d, p) — ragged, tile-aligned, sub-tile, prime-ish
@@ -27,8 +27,9 @@ KINDS = ["gaussian", "laplacian", "matern32"]
 
 
 def _tol(dtype):
-    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
-        dict(rtol=2e-4, atol=2e-4)
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-4, atol=2e-4
+    )
 
 
 @pytest.mark.parametrize("shape", SHAPES)
@@ -42,8 +43,7 @@ def test_kernel_matmul_matches_oracle(shape, kind):
     V = jax.random.normal(k3, (n, p))
     got = kernel_matmul_pallas(A, B, V, kind=kind, scale=1.4, interpret=True)
     ref = kernel_matmul_ref(A, B, V, kind, 1.4)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
-                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=5e-4, atol=5e-4)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -52,12 +52,17 @@ def test_kernel_matmul_dtypes(dtype):
     A = jax.random.normal(k1, (200, 16)).astype(dtype)
     B = jax.random.normal(k2, (150, 16)).astype(dtype)
     V = jax.random.normal(k3, (150, 2)).astype(dtype)
-    got = kernel_matmul_pallas(A, B, V, kind="gaussian", scale=1.0,
-                               interpret=True)
-    ref = kernel_matmul_ref(A.astype(jnp.float32), B.astype(jnp.float32),
-                            V.astype(jnp.float32), "gaussian", 1.0)
-    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(ref),
-                               **_tol(dtype))
+    got = kernel_matmul_pallas(A, B, V, kind="gaussian", scale=1.0, interpret=True)
+    ref = kernel_matmul_ref(
+        A.astype(jnp.float32),
+        B.astype(jnp.float32),
+        V.astype(jnp.float32),
+        "gaussian",
+        1.0,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref), **_tol(dtype)
+    )
 
 
 @pytest.mark.parametrize("block", [(32, 64), (128, 128), (256, 512)])
@@ -67,11 +72,11 @@ def test_kernel_matmul_block_invariance(block):
     A = jax.random.normal(k1, (300, 20))
     B = jax.random.normal(k2, (411, 20))
     V = jax.random.normal(k3, (411, 3))
-    got = kernel_matmul_pallas(A, B, V, kind="gaussian", scale=2.0,
-                               block_m=bm, block_n=bn, interpret=True)
+    got = kernel_matmul_pallas(
+        A, B, V, kind="gaussian", scale=2.0, block_m=bm, block_n=bn, interpret=True
+    )
     ref = kernel_matmul_ref(A, B, V, "gaussian", 2.0)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
-                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=5e-4, atol=5e-4)
 
 
 @pytest.mark.parametrize("shape", SHAPES[:3])
@@ -83,8 +88,7 @@ def test_pairwise_kernel_matches_oracle(shape, kind):
     B = jax.random.normal(k2, (n, d))
     got = pairwise_kernel_pallas(A, B, kind=kind, scale=1.1, interpret=True)
     ref = pairwise_kernel_ref(A, B, kind, 1.1)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
-                               rtol=5e-5, atol=5e-5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=5e-5, atol=5e-5)
 
 
 def test_fused_sweep_matches_oracle_vector_and_matrix_rhs():
@@ -96,19 +100,16 @@ def test_fused_sweep_matches_oracle_vector_and_matrix_rhs():
     v1 = jax.random.normal(k4, (513,))
     got = fused_knm_matvec(X, C, u1, v1, kern)
     ref = fused_knm_matvec_ref(X, C, u1, v1, "gaussian", 1.3)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
-                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=5e-4, atol=5e-4)
     u2 = jax.random.normal(k3, (97, 5))
     v2 = jax.random.normal(k4, (513, 5))
     got2 = fused_knm_matvec(X, C, u2, v2, kern)
     ref2 = fused_knm_matvec_ref(X, C, u2, v2, "gaussian", 1.3)
-    np.testing.assert_allclose(np.asarray(got2), np.asarray(ref2),
-                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(ref2), rtol=5e-4, atol=5e-4)
     # v = None path
     got3 = fused_knm_matvec(X, C, u1, None, kern)
     ref3 = fused_knm_matvec_ref(X, C, u1, None, "gaussian", 1.3)
-    np.testing.assert_allclose(np.asarray(got3), np.asarray(ref3),
-                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(got3), np.asarray(ref3), rtol=5e-4, atol=5e-4)
 
 
 def test_falkon_end_to_end_with_pallas_matvec(rng):
@@ -116,12 +117,20 @@ def test_falkon_end_to_end_with_pallas_matvec(rng):
     jnp path — the kernel is a true drop-in for the hot loop."""
     from conftest import synthetic_regression
     X, y = synthetic_regression(rng, 640)
-    base = dict(kernel="gaussian", kernel_params=(("sigma", 2.0),), lam=1e-4,
-                num_centers=96, iterations=50, block_size=128)
-    est_j, _ = falkon_fit(jax.random.PRNGKey(1), X, y,
-                          FalkonConfig(**base, matvec_impl="jnp"))
-    est_p, _ = falkon_fit(jax.random.PRNGKey(1), X, y,
-                          FalkonConfig(**base, matvec_impl="pallas"))
+    base = dict(
+        kernel="gaussian",
+        kernel_params=(("sigma", 2.0),),
+        lam=1e-4,
+        num_centers=96,
+        iterations=50,
+        block_size=128,
+    )
+    est_j, _ = falkon_fit(
+        jax.random.PRNGKey(1), X, y, FalkonConfig(**base, matvec_impl="jnp")
+    )
+    est_p, _ = falkon_fit(
+        jax.random.PRNGKey(1), X, y, FalkonConfig(**base, matvec_impl="pallas")
+    )
     p_j, p_p = est_j.predict(X), est_p.predict(X)
     rel = float(jnp.linalg.norm(p_p - p_j) / jnp.linalg.norm(p_j))
     assert rel < 2e-3, rel
@@ -133,9 +142,11 @@ def test_kernel_matmul_under_jit_and_grad_safety():
     A = jax.random.normal(k1, (64, 12))
     B = jax.random.normal(k2, (80, 12))
     V = jax.random.normal(k3, (80, 1))
-    f = jax.jit(lambda a, b, v: kernel_matmul_pallas(
-        a, b, v, kind="gaussian", scale=1.0, interpret=True))
+    f = jax.jit(
+        lambda a,
+        b,
+        v: kernel_matmul_pallas(a, b, v, kind="gaussian", scale=1.0, interpret=True),
+    )
     got = f(A, B, V)
     ref = kernel_matmul_ref(A, B, V, "gaussian", 1.0)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
-                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=5e-4, atol=5e-4)

@@ -29,11 +29,12 @@ from repro.core import make_kernel, spec_of
 from repro.core.cg import conjugate_gradient, conjugate_gradient_host
 from repro.core.falkon import FalkonConfig, falkon_fit, falkon_fit_streaming
 from repro.data import ArrayChunkSource, StreamingLoader, streaming_sweep
-from repro.kernels.kernel_matvec import (fused_sweep_pallas,
-                                         kernel_matmul_pallas,
-                                         sharded_sweep_pallas)
-from repro.ops import (POLICIES, PrecisionPolicy, SweepPlanWarning, get_ops,
-                       resolve_precision)
+from repro.kernels.kernel_matvec import (
+    fused_sweep_pallas, kernel_matmul_pallas, sharded_sweep_pallas
+)
+from repro.ops import (
+    POLICIES, PrecisionPolicy, SweepPlanWarning, get_ops, resolve_precision
+)
 
 KERNELS = [
     ("gaussian", dict(sigma=1.3)),
@@ -101,17 +102,16 @@ def test_policy_registry_and_overrides():
     # a full PrecisionPolicy is accepted wherever a name is; per-buffer
     # overrides are honored (default: coeffs float32 -> w comes back fp32;
     # an empty override set makes even the coefficients ride bf16)
-    custom = PrecisionPolicy(name="bf16-raw", storage="bfloat16",
-                             compensated=False)
+    custom = PrecisionPolicy(name="bf16-raw", storage="bfloat16", compensated=False)
     ops = get_ops("jnp", make_kernel("gaussian", sigma=1.5), precision=custom)
     assert ops.policy is custom
     X, C, u, v = _data(64, 32, 5, seed=0)
     assert ops.sweep(X, C, u, v).dtype == jnp.float32
-    raw = PrecisionPolicy(name="bf16-all", storage="bfloat16",
-                          compensated=False, overrides=())
+    raw = PrecisionPolicy(
+        name="bf16-all", storage="bfloat16", compensated=False, overrides=()
+    )
     assert raw.buffer_dtype("coeffs") == "bfloat16"
-    ops_raw = get_ops("jnp", make_kernel("gaussian", sigma=1.5),
-                      precision=raw)
+    ops_raw = get_ops("jnp", make_kernel("gaussian", sigma=1.5), precision=raw)
     assert ops_raw.sweep(X, C, u, v).dtype == jnp.bfloat16
 
 
@@ -122,8 +122,9 @@ def test_custom_reduced_policy_widens_coeffs():
     f16 = PrecisionPolicy(name="f16", storage="float16", compensated=True)
     X, C, u, v = _data(96, 48, 7, seed=2)
     for impl in ("jnp", "pallas"):
-        ops = get_ops(impl, make_kernel("gaussian", sigma=1.5),
-                      block_size=64, precision=f16)
+        ops = get_ops(
+            impl, make_kernel("gaussian", sigma=1.5), block_size=64, precision=f16
+        )
         w = ops.sweep(X, C, u.astype(jnp.float16), v)
         assert w.dtype == jnp.float32, impl   # coeffs override wins
     plan = ops.plan(96, 48, 7, 1)
@@ -146,8 +147,7 @@ def test_bf16_sweep_error_within_bound(kernel_name, params, path):
 
     bf = jnp.bfloat16
     Xb, Cb, ub, vb = (a.astype(bf) for a in (X, C, u, v))
-    kw = dict(spec=spec_of(kern), block_m=64, compensated=True,
-              interpret=True)
+    kw = dict(spec=spec_of(kern), block_m=64, compensated=True, interpret=True)
     if path == "fused":
         got = fused_sweep_pallas(Xb, Cb, ub, vb, block_n=64, **kw)
     elif path == "two_pass":
@@ -169,8 +169,7 @@ def test_backend_sweep_error_both_policies(kernel_name, params):
     oracle = _oracle_sweep(kern, X, C, u, v)
     for impl in ("jnp", "pallas"):
         for prec in ("fp32", "bf16"):
-            got = get_ops(impl, kern, block_size=64,
-                          precision=prec).sweep(X, C, u, v)
+            got = get_ops(impl, kern, block_size=64, precision=prec).sweep(X, C, u, v)
             err = _rel_err(got, oracle)
             assert err <= ERROR_BOUND[prec], (impl, prec, err)
 
@@ -199,7 +198,8 @@ def test_streaming_bf16_chunk_dtype_and_error():
     ops32 = get_ops("jnp", kern, block_size=64)
     np.testing.assert_array_equal(
         np.asarray(streaming_sweep(ops32, ld32, C, u, use_targets=True)),
-        np.asarray(ops32.sweep(X, C, u, v)))
+        np.asarray(ops32.sweep(X, C, u, v)),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -211,10 +211,10 @@ def test_fp32_path_bit_identical_to_raw_kernels():
     X, C, u, v = _data(n, M, d, seed=6)
 
     pops = get_ops("pallas", kern, block_size=128)
-    raw = fused_sweep_pallas(X, C, u, v, spec=spec_of(kern), block_m=128,
-                             compensated=False, interpret=True)
-    np.testing.assert_array_equal(np.asarray(pops.sweep(X, C, u, v)),
-                                  np.asarray(raw))
+    raw = fused_sweep_pallas(
+        X, C, u, v, spec=spec_of(kern), block_m=128, compensated=False, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(pops.sweep(X, C, u, v)), np.asarray(raw))
 
     # string name and explicit policy object resolve to the same arrays
     pol = PrecisionPolicy(name="fp32")
@@ -234,8 +234,10 @@ def test_compensated_accumulation_not_worse_than_plain():
     V = jax.random.normal(ks[2], (n, p))
     kern = make_kernel("gaussian", sigma=1.5)
     with enable_x64(True):
-        K64 = kern(jnp.asarray(np.asarray(A), jnp.float64),
-                   jnp.asarray(np.asarray(B), jnp.float64))
+        K64 = kern(
+            jnp.asarray(np.asarray(A), jnp.float64),
+            jnp.asarray(np.asarray(B), jnp.float64),
+        )
         oracle = np.asarray(K64 @ jnp.asarray(np.asarray(V), jnp.float64))
 
     kw = dict(spec=spec_of(kern), block_m=64, block_n=128, interpret=True)
@@ -257,8 +259,7 @@ def _spd_system(q=96, p=2, seed=9):
     return A, b
 
 
-@pytest.mark.parametrize("driver", [conjugate_gradient,
-                                    conjugate_gradient_host])
+@pytest.mark.parametrize("driver", [conjugate_gradient, conjugate_gradient_host])
 def test_cg_bf16_storage_converges_with_fp32_scalars(driver):
     A, b = _spd_system()
     mv = lambda x: A @ x.astype(jnp.float32)
@@ -306,8 +307,7 @@ def test_cg_convergence_parity_on_acceptance_shape():
         np.testing.assert_array_equal(np.asarray(got.x), np.asarray(ref.x))
     else:
         assert r_got < 3e-2, r_got            # bf16 iterate rounding floor
-        rel = _rel_err(got.x.astype(jnp.float32),
-                       np.asarray(ref.x, dtype=np.float64))
+        rel = _rel_err(got.x.astype(jnp.float32), np.asarray(ref.x, dtype=np.float64))
         assert rel < 5e-2, rel
 
 
@@ -317,40 +317,58 @@ def test_cg_convergence_parity_on_acceptance_shape():
 def test_falkon_fit_parity_under_axis_policy(rng):
     from conftest import synthetic_regression
     X, y = synthetic_regression(rng, 384)
-    base = dict(kernel="gaussian", kernel_params=(("sigma", 2.0),), lam=1e-4,
-                num_centers=64, iterations=25, block_size=128)
-    est_ref, _ = falkon_fit(jax.random.PRNGKey(1), X, y,
-                            FalkonConfig(**base, ops_impl="jnp"))
-    est, _ = falkon_fit(jax.random.PRNGKey(1), X, y,
-                        FalkonConfig(**base, ops_impl="pallas",
-                                     precision=TEST_PRECISION))
+    base = dict(
+        kernel="gaussian",
+        kernel_params=(("sigma", 2.0),),
+        lam=1e-4,
+        num_centers=64,
+        iterations=25,
+        block_size=128,
+    )
+    est_ref, _ = falkon_fit(
+        jax.random.PRNGKey(1), X, y, FalkonConfig(**base, ops_impl="jnp")
+    )
+    est, _ = falkon_fit(
+        jax.random.PRNGKey(1),
+        X,
+        y,
+        FalkonConfig(**base, ops_impl="pallas", precision=TEST_PRECISION),
+    )
     p_ref, p = est_ref.predict(X), est.predict(X)
-    rel = float(jnp.linalg.norm(p.astype(jnp.float32) - p_ref)
-                / jnp.linalg.norm(p_ref))
+    rel = float(jnp.linalg.norm(p.astype(jnp.float32) - p_ref) / jnp.linalg.norm(p_ref))
     assert rel < (5e-2 if TEST_PRECISION == "bf16" else 2e-3), rel
 
 
 def test_falkon_fit_streaming_parity_under_axis_policy(rng):
     from conftest import synthetic_regression
     X, y = synthetic_regression(rng, 400)
-    cfg = FalkonConfig(kernel="gaussian", kernel_params=(("sigma", 2.0),),
-                       lam=1e-4, num_centers=48, iterations=20,
-                       block_size=128, precision=TEST_PRECISION)
+    cfg = FalkonConfig(
+        kernel="gaussian",
+        kernel_params=(("sigma", 2.0),),
+        lam=1e-4,
+        num_centers=48,
+        iterations=20,
+        block_size=128,
+        precision=TEST_PRECISION,
+    )
     centers = np.asarray(X[:48])
-    est_in, _ = falkon_fit(jax.random.PRNGKey(2), X, y,
-                           dataclasses.replace(cfg, center_selection="uniform"))
+    est_in, _ = falkon_fit(
+        jax.random.PRNGKey(2),
+        X,
+        y,
+        dataclasses.replace(cfg, center_selection="uniform"),
+    )
     source = ArrayChunkSource(np.asarray(X), np.asarray(y), chunk_rows=97)
-    est_st, _ = falkon_fit_streaming(jax.random.PRNGKey(2), source, cfg,
-                                     centers=jnp.asarray(centers))
+    est_st, _ = falkon_fit_streaming(
+        jax.random.PRNGKey(2), source, cfg, centers=jnp.asarray(centers)
+    )
     p_in = est_in.predict(X)
     p_st = est_st.predict(X)
     # different centers -> only sanity-level agreement is meaningful; the
     # strong check is that the streamed fit converged under the policy
     assert np.isfinite(np.asarray(p_st, dtype=np.float64)).all()
-    rel = float(jnp.linalg.norm(p_st.astype(jnp.float32) - y)
-                / jnp.linalg.norm(y))
-    rel_in = float(jnp.linalg.norm(p_in.astype(jnp.float32) - y)
-                   / jnp.linalg.norm(y))
+    rel = float(jnp.linalg.norm(p_st.astype(jnp.float32) - y) / jnp.linalg.norm(y))
+    rel_in = float(jnp.linalg.norm(p_in.astype(jnp.float32) - y) / jnp.linalg.norm(y))
     assert rel < max(2 * rel_in, 0.5), (rel, rel_in)
 
 
@@ -360,8 +378,9 @@ def test_falkon_fit_streaming_parity_under_axis_policy(rng):
 def test_plan_carries_dtypes_and_charges_storage():
     kern = make_kernel("gaussian", sigma=2.0)
     p32 = get_ops("pallas", kern, block_size=128).plan(4096, 2048, 32, 1)
-    pbf = get_ops("pallas", kern, block_size=128,
-                  precision="bf16").plan(4096, 2048, 32, 1)
+    pbf = get_ops("pallas", kern, block_size=128, precision="bf16").plan(
+        4096, 2048, 32, 1
+    )
     assert p32.vector_dtype == "float32" and not p32.compensated
     assert pbf.input_dtype == "bfloat16"
     assert pbf.vector_dtype == "bfloat16"           # data-space v/t storage
@@ -374,8 +393,9 @@ def test_plan_carries_dtypes_and_charges_storage():
     assert pbf.scratch_bytes > p32.scratch_bytes
     # the HBM working set approaches the full 2x as n-sized terms dominate
     big32 = get_ops("pallas", kern, block_size=128).plan(262144, 2048, 32, 1)
-    bigbf = get_ops("pallas", kern, block_size=128,
-                    precision="bf16").plan(262144, 2048, 32, 1)
+    bigbf = get_ops("pallas", kern, block_size=128, precision="bf16").plan(
+        262144, 2048, 32, 1
+    )
     assert big32.hbm_bytes / bigbf.hbm_bytes >= 1.8
 
 

@@ -21,8 +21,9 @@ import numpy as np
 import pytest
 
 from repro.core import FalkonConfig, falkon_fit, falkon_fit_path
-from repro.serve import (CoalescingPredictServer, bucket_ladder, pick_bucket,
-                         plan_dispatches)
+from repro.serve import (
+    CoalescingPredictServer, bucket_ladder, pick_bucket, plan_dispatches
+)
 
 
 # ---------------------------------------------------------------------------
@@ -102,17 +103,23 @@ def fitted():
     X = jax.random.normal(ks[0], (1500, 6))
     w = jax.random.normal(ks[1], (6,))
     y = jnp.sin(X @ w) + 0.05 * jax.random.normal(ks[2], (1500,))
-    cfg = FalkonConfig(kernel_params=(("sigma", 2.0),), lam=1e-4,
-                       num_centers=96, iterations=10, block_size=128,
-                       estimate_cond=False)
+    cfg = FalkonConfig(
+        kernel_params=(("sigma", 2.0),),
+        lam=1e-4,
+        num_centers=96,
+        iterations=10,
+        block_size=128,
+        estimate_cond=False,
+    )
     est, _ = falkon_fit(jax.random.PRNGKey(1), X, y, cfg)
     return est, cfg, X, y
 
 
 def _ragged_requests(d, sizes, seed=7):
     keys = jax.random.split(jax.random.PRNGKey(seed), len(sizes))
-    return [np.asarray(jax.random.normal(keys[i], (int(s), d)))
-            for i, s in enumerate(sizes)]
+    return [
+        np.asarray(jax.random.normal(keys[i], (int(s), d))) for i, s in enumerate(sizes)
+    ]
 
 
 def test_bucketed_predictions_bit_identical_fp32(fitted):
@@ -171,7 +178,8 @@ def test_zero_row_request(fitted):
     est, _, _, _ = fitted
     server = CoalescingPredictServer(est, max_batch=16)
     outs = server.predict_many(
-        [np.zeros((0, 6), np.float32), np.ones((4, 6), np.float32)])
+        [np.zeros((0, 6), np.float32), np.ones((4, 6), np.float32)]
+    )
     assert outs[0].shape == (0,)
     assert outs[1].shape == (4,)
 
@@ -181,17 +189,21 @@ def test_multioutput_estimator_parity():
     ks = jax.random.split(jax.random.PRNGKey(3), 2)
     X = jax.random.normal(ks[0], (600, 5))
     Y = jnp.stack([jnp.sin(X[:, 0]), jnp.cos(X[:, 1])], axis=1)
-    cfg = FalkonConfig(kernel_params=(("sigma", 1.5),), lam=1e-4,
-                       num_centers=64, iterations=8, block_size=128,
-                       estimate_cond=False)
+    cfg = FalkonConfig(
+        kernel_params=(("sigma", 1.5),),
+        lam=1e-4,
+        num_centers=64,
+        iterations=8,
+        block_size=128,
+        estimate_cond=False,
+    )
     est, _ = falkon_fit(ks[1], X, Y, cfg)
     server = CoalescingPredictServer(est, max_batch=32)
     reqs = _ragged_requests(5, [7, 40, 3])
     outs = server.predict_many(reqs)
     for r, o in zip(reqs, outs):
         assert o.shape == (r.shape[0], 2)
-        np.testing.assert_array_equal(
-            o, np.asarray(est.predict(jnp.asarray(r))))
+        np.testing.assert_array_equal(o, np.asarray(est.predict(jnp.asarray(r))))
 
 
 def test_stacked_path_serving_parity(fitted):
@@ -209,8 +221,7 @@ def test_stacked_path_serving_parity(fitted):
         assert o.shape == (r.shape[0], len(lams))
         for i in range(len(lams)):
             direct = np.asarray(path.estimators[i].predict(jnp.asarray(r)))
-            np.testing.assert_allclose(o[:, i], direct,
-                                       rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(o[:, i], direct, rtol=1e-5, atol=1e-5)
 
 
 def test_estimator_ops_cached(fitted):
@@ -224,7 +235,8 @@ def test_estimator_ops_cached(fitted):
     assert "_ops" not in est2.__dict__
     np.testing.assert_array_equal(
         np.asarray(est2.predict(jnp.zeros((2, 6)))),
-        np.asarray(est.predict(jnp.zeros((2, 6)))))
+        np.asarray(est.predict(jnp.zeros((2, 6)))),
+    )
 
 
 def test_server_rejects_unknown_model():
@@ -242,8 +254,20 @@ def test_server_rejects_unknown_model():
 ])
 def test_serve_main_falkon_smoke(monkeypatch, capsys, extra):
     from repro.launch import serve as serve_mod
-    argv = ["serve", "--falkon", "--n", "512", "--d", "5", "--centers", "48",
-            "--batch", "16", "--requests", "6"] + extra
+    argv = [
+        "serve",
+        "--falkon",
+        "--n",
+        "512",
+        "--d",
+        "5",
+        "--centers",
+        "48",
+        "--batch",
+        "16",
+        "--requests",
+        "6",
+    ] + extra
     monkeypatch.setattr("sys.argv", argv)
     serve_mod.main()
     out = capsys.readouterr().out

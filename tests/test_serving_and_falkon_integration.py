@@ -8,8 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs import reduced_config
-from repro.core import (FalkonConfig, GaussianKernel, falkon_fit,
-                        make_preconditioner)
+from repro.core import (FalkonConfig, GaussianKernel, falkon_fit, make_preconditioner)
 from repro.kernels.ops import pairwise_kernel
 from repro.models import decode_step, model_params, prefill
 from repro.models.model import _backbone
@@ -57,19 +56,23 @@ def test_pallas_kmm_in_preconditioner():
     kern = GaussianKernel(sigma=1.5)
     KMM_ref = kern(X, X)
     KMM_pal = pairwise_kernel(X, X, kern)
-    np.testing.assert_allclose(np.asarray(KMM_pal), np.asarray(KMM_ref),
-                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(KMM_pal), np.asarray(KMM_ref), rtol=1e-5, atol=1e-5
+    )
     p1 = make_preconditioner(KMM_ref, 1e-3, 500)
     p2 = make_preconditioner(KMM_pal, 1e-3, 500)
-    np.testing.assert_allclose(np.asarray(p1.T), np.asarray(p2.T),
-                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(p1.T), np.asarray(p2.T), rtol=1e-3, atol=1e-4)
 
 
 def test_moe_expert_padding_masks_padded_experts():
     """Padded experts (40->48) must never receive tokens."""
-    cfg = dataclasses.replace(reduced_config("granite-moe-3b-a800m"),
-                              n_experts=3, expert_pad_multiple=4, top_k=2,
-                              capacity_factor=4.0)
+    cfg = dataclasses.replace(
+        reduced_config("granite-moe-3b-a800m"),
+        n_experts=3,
+        expert_pad_multiple=4,
+        top_k=2,
+        capacity_factor=4.0,
+    )
     assert cfg.padded_experts == 4
     from repro.models import layers as L
     from repro.models.params import init_params

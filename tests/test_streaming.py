@@ -69,9 +69,7 @@ def test_loader_orders_and_reiterates(prefetch):
     for _ in range(2):  # re-iterable: two full passes
         got = list(loader)
         assert [int(xc.shape[0]) for xc, _ in got] == [256, 256, 188]
-        np.testing.assert_allclose(
-            np.concatenate([np.asarray(xc) for xc, _ in got]), X
-        )
+        np.testing.assert_allclose(np.concatenate([np.asarray(xc) for xc, _ in got]), X)
 
 
 def test_loader_propagates_source_errors():
@@ -227,10 +225,10 @@ def test_sweep_row_mask_sharded_path(monkeypatch):
     C = jnp.asarray(X[:64])
     mask = (jnp.arange(200) < 150).astype(jnp.float32)
     with pytest.warns(Warning):
-        ref = ops.sweep(jnp.asarray(X[:150]), C, jnp.asarray(u),
-                        jnp.asarray(y[:150]))
-        got = ops.sweep(jnp.asarray(X), C, jnp.asarray(u),
-                        jnp.asarray(y) * mask, row_mask=mask)
+        ref = ops.sweep(jnp.asarray(X[:150]), C, jnp.asarray(u), jnp.asarray(y[:150]))
+        got = ops.sweep(
+            jnp.asarray(X), C, jnp.asarray(u), jnp.asarray(y) * mask, row_mask=mask
+        )
     np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
 
 
@@ -244,12 +242,11 @@ def test_streaming_sweep_pads_tail_to_one_shape():
     kern = GaussianKernel(sigma=2.0)
     ops = get_ops("jnp", kern, block_size=128)
     C = jnp.asarray(X[:64])
-    loader = StreamingLoader(ArrayChunkSource(X, y, chunk_rows=300),
-                             prefetch=0)
-    padded = streaming_sweep(ops, loader, C, jnp.asarray(u),
-                             use_targets=True)
-    legacy = streaming_sweep(ops, loader, C, jnp.asarray(u),
-                             use_targets=True, pad_ragged=False)
+    loader = StreamingLoader(ArrayChunkSource(X, y, chunk_rows=300), prefetch=0)
+    padded = streaming_sweep(ops, loader, C, jnp.asarray(u), use_targets=True)
+    legacy = streaming_sweep(
+        ops, loader, C, jnp.asarray(u), use_targets=True, pad_ragged=False
+    )
     np.testing.assert_array_equal(np.asarray(padded), np.asarray(legacy))
 
     # CountingOps under the jitted facade counts XLA traces, not calls
@@ -272,12 +269,19 @@ def test_streaming_fit_compiles_sweep_once_per_form():
 
     X, y, _ = _problem(n=1000, M=64)
     cfg = FalkonConfig(
-        kernel="gaussian", kernel_params=(("sigma", 2.0),), lam=1e-3,
-        num_centers=64, iterations=12, block_size=128, estimate_cond=False)
+        kernel="gaussian",
+        kernel_params=(("sigma", 2.0),),
+        lam=1e-3,
+        num_centers=64,
+        iterations=12,
+        block_size=128,
+        estimate_cond=False,
+    )
     cnt = CountingOps(cfg.make_ops())
     src = ArrayChunkSource(X, y, chunk_rows=300)  # 300*3 + ragged 100
-    est, _ = falkon_fit_streaming(jax.random.PRNGKey(1), src, cfg,
-                                  centers=jnp.asarray(X[:64]), ops=cnt)
+    est, _ = falkon_fit_streaming(
+        jax.random.PRNGKey(1), src, cfg, centers=jnp.asarray(X[:64]), ops=cnt
+    )
     assert cnt.sweeps == 2, (
         f"streaming fit traced the sweep {cnt.sweeps} times; the ragged "
         "tail chunk must share the full chunks' compiled program")

@@ -7,14 +7,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import (latest_step, load_checkpoint, save_checkpoint,
-                              step_dir)
+from repro.checkpoint import (latest_step, load_checkpoint, save_checkpoint, step_dir)
 from repro.data import ShardedLoader, TokenStreamConfig, token_stream
-from repro.distributed.compression import (compressed_grads, dequantize_int8,
-                                           init_residuals, quantize_int8)
+from repro.distributed.compression import (
+    compressed_grads, dequantize_int8, init_residuals, quantize_int8
+)
 from repro.distributed.mesh import AxisRules
-from repro.optim import (adafactor, adamw, clip_by_global_norm, global_norm,
-                         sgdm, warmup_cosine)
+from repro.optim import (
+    adafactor, adamw, clip_by_global_norm, global_norm, sgdm, warmup_cosine
+)
 
 
 # ---------------------------------------------------------------------------
@@ -86,8 +87,9 @@ def test_error_feedback_reduces_bias():
         comp, res = compressed_grads(gi, res)
         total_true += gi["w"]
         total_comp += comp["w"]
-    drift = float(jnp.linalg.norm(total_comp - total_true) /
-                  jnp.linalg.norm(total_true))
+    drift = float(
+        jnp.linalg.norm(total_comp - total_true) / jnp.linalg.norm(total_true)
+    )
     assert drift < 0.05, drift
 
 
@@ -95,16 +97,17 @@ def test_error_feedback_reduces_bias():
 # Checkpoint
 # ---------------------------------------------------------------------------
 def test_checkpoint_roundtrip_and_atomicity():
-    tree = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
-            "b": {"c": jnp.ones((5,), jnp.bfloat16)}}
+    tree = {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": {"c": jnp.ones((5,), jnp.bfloat16)},
+    }
     with tempfile.TemporaryDirectory() as d:
         p = step_dir(d, 3)
         save_checkpoint(p, tree, 3, blocking=True)
         like = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
         out, step = load_checkpoint(p, like)
         assert step == 3
-        np.testing.assert_array_equal(np.asarray(out["a"]),
-                                      np.asarray(tree["a"]))
+        np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
         assert out["b"]["c"].dtype == jnp.bfloat16
         assert latest_step(d) == 3
         # shape mismatch must be caught loudly (not silently truncated)
@@ -129,11 +132,11 @@ def test_token_stream_deterministic_and_restartable():
     cfg = TokenStreamConfig(vocab=64, seq_len=16, batch=2)
     a = [next(token_stream(cfg, seed=3)) for _ in range(1)][0]
     b = [next(token_stream(cfg, seed=3)) for _ in range(1)][0]
-    np.testing.assert_array_equal(np.asarray(a["tokens"]),
-                                  np.asarray(b["tokens"]))
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
     # labels are next-token shifted
-    np.testing.assert_array_equal(np.asarray(a["tokens"][:, 1:]),
-                                  np.asarray(a["labels"][:, :-1]))
+    np.testing.assert_array_equal(
+        np.asarray(a["tokens"][:, 1:]), np.asarray(a["labels"][:,:-1])
+    )
 
 
 def test_sharded_loader_prefetch():
@@ -179,8 +182,7 @@ def test_axis_rules_replicates_non_divisible():
     spec2 = rules.spec_for((1152, 6912), ("embed", "ff"))
     assert spec2[1] == "model" or spec2[1] == ("model",)
     # kv cache: batch/data + seq absorbs model when kv_heads can't shard
-    spec3 = rules.spec_for((128, 32768, 8, 128),
-                           ("batch", "kv_seq", "kv_heads", None))
+    spec3 = rules.spec_for((128, 32768, 8, 128), ("batch", "kv_seq", "kv_heads", None))
     flat = [s for s in spec3]
     assert any(s in ("model", ("model",)) for s in flat if s), spec3
 
@@ -202,5 +204,5 @@ def test_hlo_cost_trip_count_scaling():
     b = jax.ShapeDtypeStruct((M, M), jnp.float32)
     compiled = jax.jit(loop).lower(a, b).compile()
     cost = analyze(compiled.as_text())
-    assert abs(cost.flops / (7 * 2 * M ** 3) - 1.0) < 0.01
+    assert abs(cost.flops / (7 * 2 * M**3) - 1.0) < 0.01
     assert cost.unbounded_whiles == 0

@@ -51,7 +51,7 @@ def _anchors(md_path: pathlib.Path) -> set[str]:
             continue
         if in_fence:
             continue
-        m = _HEADING.match(line)
+        m = _HEADING.match (line)
         if not m:
             continue
         base = _slug(m.group(1))
@@ -102,8 +102,7 @@ def main() -> int:
         errors.extend(_check_file(f))
     for e in errors:
         print(e, file=sys.stderr)
-    print(f"checked {links} links across {len(files)} files: "
-          f"{len(errors)} broken")
+    print(f"checked {links} links across {len(files)} files: " f"{len(errors)} broken")
     return 1 if errors else 0
 
 
