@@ -49,6 +49,17 @@ Dispatches on the candidate's ``benchmark`` field:
   baseline (both sides measured in the same run, machine-neutral), the
   streamed device working set must stay strictly below the in-core one,
   and ``num_chunks`` must match the baseline exactly.
+* ``knm_cache`` — materialized-K_nM-cache gate against
+  ``BENCH_knm_cache.json``: per record the CountingOps cached fit must
+  charge exactly one kernel evaluation per K_nM row tile
+  (``fit_tile_evals == fit_tile_evals_expected``, zero recompute sweeps,
+  one materialization), the ``estimate_cond`` power-iteration sweeps must
+  ride the cache (cond-on == cond-off + 4 gemm_sweep program points, tile
+  evals unchanged), cached-vs-recompute sweep parity must stay <= 1e-4,
+  and the ``plan_cache`` routing table must match its expected tiers
+  exactly. Wall clock: the same-run cached-vs-recompute CG-phase sweep
+  ratio geomean must stay >= 1.5x (absolute floor) and within
+  ``--max-regression-pct`` of the checked-in baseline geomean.
 * ``serve_coalesce`` — coalescing-server gate against ``BENCH_serve.json``:
   coalesced serving must stay >= 2x the per-request baseline's rows/s on a
   ragged trace (same-run ratio; absolute floor ONLY — deliberately no
@@ -123,6 +134,78 @@ PATH_SPEEDUP_FLOOR = 2.0
 
 #: Absolute acceptance floor for the serving gate (ragged trace).
 SERVE_SPEEDUP_FLOOR = 2.0
+
+#: Absolute acceptance floors for the K_nM-cache gate.
+KNM_CACHE_SPEEDUP_FLOOR = 1.5
+KNM_CACHE_PARITY_CEILING = 1e-4
+
+
+def compare_knm_cache(baseline: dict, candidate: dict, max_pct: float) -> list[str]:
+    """Gate BENCH_knm_cache.json: one eval per tile + parity + 1.5x floor.
+
+    Exact, machine-neutral invariants per record: a cached fit must charge
+    ``fit_tile_evals == fit_tile_evals_expected`` kernel evaluations
+    (one per K_nM row tile + the K_MM gram tiles) with ZERO recompute
+    sweeps; the ``estimate_cond`` diagnostics must ride the cache
+    (cond-on == cond-off + 4 gemm_sweep program points, tile evals
+    unchanged); cached-vs-recompute sweep parity must stay under the 1e-4
+    ceiling. The routing table must match expectations exactly. The
+    wall-clock signal is the same-run cached-vs-recompute sweep ratio:
+    geomean >= 1.5x absolute, and within ``--max-regression-pct`` of the
+    checked-in baseline geomean.
+    """
+    failures = []
+    for r in candidate.get("records", []):
+        key = (r.get("n"), r.get("M"), r.get("d"))
+        if r["fit_sweeps"] != 0 or r["fit_materializes"] != 1:
+            failures.append(
+                f"{key}: cached fit ran {r['fit_sweeps']} recompute sweeps / "
+                f"{r['fit_materializes']} materializations (want 0 / 1) — "
+                "the fit stopped consuming stored entries")
+        if r["fit_tile_evals"] != r["fit_tile_evals_expected"]:
+            failures.append(
+                f"{key}: fit_tile_evals {r['fit_tile_evals']} != expected "
+                f"{r['fit_tile_evals_expected']} — the one-kernel-eval-per-"
+                "tile invariant broke")
+        if r["fit_tile_evals_cond_on"] != r["fit_tile_evals_expected"]:
+            failures.append(
+                f"{key}: estimate_cond added kernel evaluations "
+                f"({r['fit_tile_evals_cond_on']} != "
+                f"{r['fit_tile_evals_expected']}) — the power-iteration "
+                "diagnostics stopped riding the cache")
+        if r["fit_gemm_sweeps_cond_on"] != r["fit_gemm_sweeps_cond_off"] + 4:
+            failures.append(
+                f"{key}: gemm_sweep program points cond-on "
+                f"{r['fit_gemm_sweeps_cond_on']} != cond-off "
+                f"{r['fit_gemm_sweeps_cond_off']} + 4")
+        if r["parity_rel"] > KNM_CACHE_PARITY_CEILING:
+            failures.append(
+                f"{key}: cached-vs-recompute parity {r['parity_rel']:.2e} > "
+                f"ceiling {KNM_CACHE_PARITY_CEILING}")
+    for r in candidate.get("routing", []):
+        if r["got_tier"] != r["expected_tier"]:
+            failures.append(
+                f"routing {r['scenario']}: plan_cache chose "
+                f"{r['got_tier']!r}, expected {r['expected_tier']!r}")
+
+    speedups = [r["speedup_cached"] for r in candidate.get("records", [])]
+    if not speedups:
+        return failures + ["candidate has no knm_cache records"]
+    got = _geomean(speedups)
+    print(f"cached-vs-recompute sweep speedup geomean over {len(speedups)} "
+          f"points: {got:.3f} (floor {KNM_CACHE_SPEEDUP_FLOOR})")
+    if got < KNM_CACHE_SPEEDUP_FLOOR:
+        failures.append(
+            f"speedup_cached geomean {got:.3f} < absolute floor "
+            f"{KNM_CACHE_SPEEDUP_FLOOR} — the GEMM-serving win is gone")
+    base = baseline.get("summary", {}).get("speedup_geomean")
+    if base is not None:
+        floor = float(base) * (1.0 - max_pct / 100.0)
+        if got < floor:
+            failures.append(
+                f"speedup_cached geomean {got:.3f} < baseline "
+                f"{float(base):.3f} - {max_pct:.0f}%")
+    return failures
 
 
 def compare_serve(baseline: dict, candidate: dict, max_pct: float) -> list[str]:
@@ -455,6 +538,7 @@ def compare(baseline: dict, candidate: dict, max_pct: float) -> list[str]:
 
 
 GATES = {
+    "knm_cache": compare_knm_cache,
     "precision_sweep": compare_precision,
     "lambda_path": compare_lambda_path,
     "serve_coalesce": compare_serve,

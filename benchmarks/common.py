@@ -85,20 +85,51 @@ def _non_finite_paths(node, path=""):
         yield f"{path}={node}"
 
 
+def _config_key(record: dict):
+    """The configuration identity of a record: its int/str/bool fields
+    (lists of those tuple-ized), skipping floats — measurements vary run to
+    run, configuration must not. Two records sharing this key measured the
+    same point twice."""
+    items = []
+    for k in sorted(record):
+        v = record[k]
+        if isinstance(v, bool) or isinstance(v, (int, str)):
+            items.append((k, v))
+        elif isinstance(v, (list, tuple)) and all(
+            isinstance(x, (bool, int, str)) for x in v
+        ):
+            items.append((k, tuple(v)))
+    return tuple(items)
+
+
 def check_payload(payload: dict) -> list[str]:
     """Problems that make a BENCH_*.json worthless to gate (empty == good).
 
-    Two failure classes the regression gates cannot be trusted to catch on
-    their own: an EMPTY record list (every per-record invariant loop
-    vacuously passes) and NON-FINITE metrics (NaN poisons geomeans and every
-    ``>`` comparison silently evaluates False, i.e. "pass"). Benchmarks must
-    fail loudly at write time instead of handing CI a green lie.
+    Three failure classes the regression gates cannot be trusted to catch
+    on their own: an EMPTY record list (every per-record invariant loop
+    vacuously passes), NON-FINITE metrics (NaN poisons geomeans and every
+    ``>`` comparison silently evaluates False, i.e. "pass"), and DUPLICATE
+    (benchmark, config-key) records (a benchmark loop that appended the
+    same point twice double-weights it in every geomean, and key-indexed
+    gates silently keep only the last). Benchmarks must fail loudly at
+    write time instead of handing CI a green lie.
     """
     problems = []
     if not payload.get("benchmark"):
         problems.append("payload has no 'benchmark' field")
     if not payload.get("records"):
         problems.append("payload has no records — nothing for the gate to check")
+    seen: dict = {}
+    for i, r in enumerate(payload.get("records") or []):
+        if not isinstance(r, dict):
+            continue
+        key = (payload.get("benchmark"), _config_key(r))
+        if key in seen:
+            problems.append(
+                f"records[{i}] duplicates records[{seen[key]}] "
+                f"(same config key {key[1]})")
+        else:
+            seen[key] = i
     problems.extend(f"non-finite metric at {p}" for p in _non_finite_paths(payload))
     return problems
 

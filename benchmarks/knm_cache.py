@@ -1,0 +1,210 @@
+"""Materialized-K_nM-cache benchmark: cached GEMM sweeps vs recompute.
+
+Measures the tentpole claim end to end — once the kernel entries are
+evaluated and stored, the CG phase runs on GEMMs and stops paying the
+pairwise-distance + exp() kernel math every iteration — and writes
+``BENCH_knm_cache.json`` (path override: env ``BENCH_KNM_CACHE_JSON``),
+gated in CI by ``benchmarks/check_regression.py``:
+
+* ``speedup_cached`` — wall-clock of the recompute CG-phase sweep
+  ``K_nM^T (K_nM u)`` over the cached GEMM sweep from stored entries, both
+  jitted and measured in the same run on the same machine (machine-neutral
+  ratio). Gate floor: 1.5x geomean on the Gaussian kernel.
+* ``parity_rel`` — cached vs recompute sweep agreement, must stay <= 1e-4
+  (fp32 device tier is bit-identical pre-jit; the ceiling absorbs XLA
+  fusion reassociation).
+* exact tile-eval counts — a ``CountingOps`` cached fit must charge ONE
+  kernel evaluation per K_nM row tile (``fit_tile_evals ==
+  fit_tile_evals_expected``, i.e. ceil(n/bs) + ceil(M/bs) for the K_MM
+  gram) with ``fit_sweeps == 0``; the ``estimate_cond`` power-iteration
+  diagnostics must ride the cache too (``fit_gemm_sweeps_cond_on ==
+  fit_gemm_sweeps_cond_off + 4`` program points, no extra tile evals).
+* the ``routing`` table — ``plan_cache`` tier decisions for a grid of
+  (bytes, budget, shards, forced) scenarios must match expectations
+  EXACTLY (the budget-routing contract is configuration, not chance).
+
+Runs on the jnp reference backend: the cached-vs-recompute ratio is
+backend-agnostic (both arms share the backend) and interpret-mode Pallas
+on CPU CI would measure the emulator, not the algorithm.
+
+    PYTHONPATH=src python -m benchmarks.knm_cache [--quick | --full]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FalkonConfig, falkon_fit
+from repro.ops import CountingOps, KernelCache, get_ops, plan_cache, resolve_precision
+
+from .check_regression import _geomean
+from .common import emit, timed_best, write_payload
+
+#: (n, M, d) sweep-throughput points. M spans the paper's sqrt(n) regime.
+FAST_POINTS = [(8192, 512, 16), (8192, 2048, 16)]
+FULL_POINTS = FAST_POINTS + [(65536, 512, 16), (65536, 2048, 16)]
+
+#: CG width and fit iterations for the counting section.
+FIT_ITERS = 8
+BLOCK_SIZE = 2048
+
+SPEEDUP_FLOOR = 1.5     # CI gate: cached CG-phase sweep vs recompute
+PARITY_CEILING = 1e-4   # CI gate: cached vs recompute sweep agreement
+
+
+def _problem(n, d, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    X = jax.random.normal(ks[0], (n, d))
+    w = jax.random.normal(ks[1], (d,))
+    y = jax.numpy.sin(X @ w) + 0.05 * jax.random.normal(ks[2], (n,))
+    return X, y
+
+
+def _fit_counts(X, y, M, *, estimate_cond):
+    """CountingOps counters for one cached fit (deterministic, untimed)."""
+    cfg = FalkonConfig(
+        num_centers=M, iterations=FIT_ITERS, block_size=BLOCK_SIZE,
+        jitter=1e-5, lam=1e-4, knm_cache="device",
+        estimate_cond=estimate_cond,
+    )
+    ops = CountingOps(get_ops("jnp", cfg.make_kernel(), block_size=BLOCK_SIZE))
+    falkon_fit(jax.random.PRNGKey(1), X, y, cfg, ops=ops)
+    return ops
+
+
+def run(points, repeat=3):
+    records = []
+    for n, M, d in points:
+        X, y = _problem(n, d)
+        kern = FalkonConfig().make_kernel()
+        ops = get_ops("jnp", kern, block_size=BLOCK_SIZE)
+        C = X[:M]
+        u = jax.random.normal(jax.random.PRNGKey(2), (M,))
+        plan = plan_cache(n, M, policy=ops.policy, tier="device")
+        cache = KernelCache(ops, X, C, plan=plan)
+
+        # Both arms jitted; K enters as a jit ARGUMENT (a closure constant
+        # would invite constant-folding into a different program than the
+        # fit runs). The mask is whatever the cache itself would fold in —
+        # None at these aligned sizes (the no-mask fast path the fit takes).
+        recompute = jax.jit(lambda uu: ops.sweep(X, C, uu))
+        mask = cache._mask(None)
+        cached = jax.jit(lambda K, uu: ops.gemm_sweep(K, uu, None, mask))
+
+        ref, sec_recompute = timed_best(recompute, u, repeat=repeat)
+        got, sec_cached = timed_best(cached, cache.K, u, repeat=repeat)
+        parity = float(jnp.max(jnp.abs(got - ref)) / jnp.max(jnp.abs(ref)))
+
+        ops_off = _fit_counts(X, y, M, estimate_cond=False)
+        ops_on = _fit_counts(X, y, M, estimate_cond=True)
+        nb, mt = -(-n // BLOCK_SIZE), -(-M // BLOCK_SIZE)
+        bf16_bytes = plan_cache(n, M, policy=resolve_precision("bf16")).cache_bytes
+
+        rec = dict(
+            n=n,
+            M=M,
+            d=d,
+            impl="jnp",
+            tier=cache.tier,
+            block_size=BLOCK_SIZE,
+            time_recompute_s=sec_recompute,
+            time_cached_s=sec_cached,
+            speedup_cached=sec_recompute / sec_cached,
+            parity_rel=parity,
+            cache_bytes=plan.cache_bytes,
+            cache_bytes_bf16=bf16_bytes,
+            fit_sweeps=ops_off.sweeps,
+            fit_materializes=ops_off.materializes,
+            fit_tile_evals=ops_off.gram_tile_evals,
+            fit_tile_evals_expected=nb + mt,
+            fit_gemm_sweeps_cond_off=ops_off.gemm_sweeps,
+            fit_gemm_sweeps_cond_on=ops_on.gemm_sweeps,
+            fit_tile_evals_cond_on=ops_on.gram_tile_evals,
+        )
+        records.append(rec)
+        print(f"n={n} M={M} d={d}: recompute {sec_recompute * 1e3:.2f}ms, "
+              f"cached {sec_cached * 1e3:.2f}ms -> "
+              f"{rec['speedup_cached']:.2f}x (parity {parity:.2e}, "
+              f"tile evals {rec['fit_tile_evals']}/"
+              f"{rec['fit_tile_evals_expected']})")
+    return records
+
+
+def routing_table():
+    """plan_cache tier decisions for explicit-budget scenarios — gated as
+    exact expected == got rows (budgets in bytes, not env, so the table is
+    deterministic on any machine)."""
+    MiB = 2**20
+    fp32 = resolve_precision("fp32")
+    bf16 = resolve_precision("bf16")
+    # (label, kwargs, expected tier); 8192 x 2048 fp32 = 64 MiB
+    scenarios = [
+        ("fits_device", dict(budget=128 * MiB), "device"),
+        ("spills_host", dict(budget=32 * MiB, host_budget=128 * MiB), "host"),
+        ("busts_both", dict(budget=32 * MiB, host_budget=32 * MiB), "off"),
+        ("sharded_fits", dict(budget=32 * MiB, shards=4), "device"),
+        ("bf16_halves", dict(budget=48 * MiB, policy=bf16), "device"),
+        ("forced_host", dict(budget=1024 * MiB, tier="host"), "host"),
+        ("forced_off", dict(budget=1024 * MiB, tier="off"), "off"),
+    ]
+    rows = []
+    for label, kw, want in scenarios:
+        kw.setdefault("policy", fp32)
+        p = plan_cache(8192, 2048, **kw)
+        rows.append(dict(
+            scenario=label,
+            n=8192,
+            M=2048,
+            shards=p.shards,
+            itemsize=p.itemsize,
+            shard_bytes=p.shard_bytes,
+            budget_bytes=p.budget_bytes,
+            host_budget_bytes=p.host_budget_bytes,
+            expected_tier=want,
+            got_tier=p.tier,
+            reason=p.reason,
+        ))
+        print(f"routing {label}: expected {want}, got {p.tier} ({p.reason})")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI points, fewer repeats")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    points = FULL_POINTS if args.full else FAST_POINTS
+    repeat = 2 if args.quick else 3
+
+    records = run(points, repeat=repeat)
+    routing = routing_table()
+    summary = dict(
+        speedup_geomean=_geomean([r["speedup_cached"] for r in records]),
+        parity_ceiling=PARITY_CEILING,
+        speedup_floor=SPEEDUP_FLOOR,
+        block_size=BLOCK_SIZE,
+        fit_iterations=FIT_ITERS,
+    )
+    payload = {
+        "benchmark": "knm_cache",
+        "records": records,
+        "routing": routing,
+        "summary": summary,
+    }
+    out = write_payload(payload, "BENCH_KNM_CACHE_JSON", "BENCH_knm_cache.json")
+    print(f"wrote {out}: cached-sweep speedup geomean "
+          f"{summary['speedup_geomean']:.2f}x over {len(records)} points")
+
+    rows = [dict(name=f"knm_cache_n{r['n']}_M{r['M']}",
+                 us_per_call=f"{r['time_cached_s'] * 1e6:.0f}",
+                 speedup=f"{r['speedup_cached']:.2f}",
+                 parity=f"{r['parity_rel']:.1e}")
+            for r in records]
+    emit(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,10 @@ Public API:
     Matern32Kernel, LinearKernel, PolynomialKernel
     knm_matvec, knm_apply,
     streaming_knm_matvec, streaming_knm_apply        (KernelOps delegates)
+    make_knm_cache, cached_knm_matvec, cached_knm_apply
+        (materialized-K_nM cache: kernel entries evaluated once, every
+        later matvec/apply a GEMM — FalkonConfig(knm_cache=...) is the
+        fit-level route)
     (the distributed sweep is a backend now: ``repro.ops.DistributedOps``,
     selected via ``FalkonConfig(mesh=..., data_axes=...)``)
     baselines: krr_direct, krr_gradient, nystrom_direct, nystrom_gradient
@@ -69,7 +73,15 @@ from .kernels import (
     make_kernel,
     spec_of,
 )
-from .matvec import (knm_apply, knm_matvec, streaming_knm_apply, streaming_knm_matvec)
+from .matvec import (
+    cached_knm_apply,
+    cached_knm_matvec,
+    knm_apply,
+    knm_matvec,
+    make_knm_cache,
+    streaming_knm_apply,
+    streaming_knm_matvec,
+)
 from .nystrom import (
     LeveragePilot,
     NystromCenters,

@@ -50,7 +50,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.ops import (
-    DistributedOps, KernelOps, available_ops, get_ops, resolve_precision
+    CachePlanWarning, DistributedOps, KernelCache, KernelOps, available_ops,
+    data_shards, get_ops, plan_cache, resolve_precision
 )
 
 from .cg import conjugate_gradient, conjugate_gradient_host
@@ -66,6 +67,12 @@ from .preconditioner import (
 Array = jax.Array
 
 CENTER_SELECTIONS = ("uniform", "leverage")
+
+# knm_cache modes: "off" recomputes K_nM every sweep (the seed behavior,
+# bit-identical); "auto" lets plan_cache route by the memory budgets;
+# "device"/"host" force a residency tier (refusing, not spilling, when the
+# forced tier is unavailable — e.g. host under a mesh).
+KNM_CACHE_MODES = ("off", "auto", "device", "host")
 
 _MATVEC_IMPL_DEPRECATION = (
     "matvec_impl is a deprecated alias of ops_impl (renamed in the KernelOps "
@@ -93,6 +100,9 @@ class FalkonConfig:
     tol: float = 0.0
     dtype: str = "float32"
     estimate_cond: bool = True             # power-iteration cond(W) diagnostic
+    knm_cache: str = "off"                 # materialized-K_nM cache: "off" |
+                                           # "auto" | "device" | "host" (see
+                                           # repro.ops.KernelCache)
     mesh: Mesh | None = None               # data-parallel mesh (None = single
                                            # device); make_ops wraps the
                                            # backend in DistributedOps
@@ -108,6 +118,10 @@ class FalkonConfig:
                 f"unknown ops_impl {self.impl!r}; registered KernelOps "
                 f"backends: {available_ops()}")
         resolve_precision(self.precision)  # raises naming the known policies
+        if self.knm_cache not in KNM_CACHE_MODES:
+            raise ValueError(
+                f"unknown knm_cache {self.knm_cache!r}; "
+                f"supported: {KNM_CACHE_MODES}")
         if self.center_selection not in CENTER_SELECTIONS:
             raise ValueError(
                 f"unknown center_selection {self.center_selection!r}; "
@@ -191,8 +205,48 @@ class FalkonEstimator:
             precision=self.precision,
         )
 
-    def predict(self, X: Array) -> Array:
-        return self._ops.apply(X, self.centers, self.alpha)
+    def build_knm_cache(self, X: Array, *, tier: str | None = None) -> KernelCache:
+        """Materialize K(X, centers) once for REPEATED scoring of the same X.
+
+        The serving twin of the fit-time cache: re-scoring a fixed
+        evaluation set (a val fold every partial_fit, a dashboard panel, a
+        lam-path model-selection grid) pays the kernel once, and every
+        later ``predict(X, cache=...)`` is one GEMM. The cache is also kept
+        on the estimator (``__dict__``, same trick as ``_ops`` — the frozen
+        dataclass is fine), so plain ``predict(X)`` with the SAME X object
+        hits it automatically; any other X falls back to recompute. ``tier``
+        forces residency; None auto-routes via ``plan_cache``. Raises if
+        the plan routes "off" — a scoring set too big for both budgets
+        should stream (``predict_stream``), not cache.
+        """
+        X = jnp.asarray(X, self.centers.dtype)
+        plan = plan_cache(
+            int(X.shape[0]), int(self.centers.shape[0]),
+            policy=self._ops.policy, tier=tier,
+        )
+        cache = KernelCache(self._ops, X, self.centers, plan=plan)
+        self.__dict__["_knm_cache"] = cache
+        return cache
+
+    def predict(self, X: Array, *, cache: KernelCache | None = None) -> Array:
+        """Score X — from the cache's stored tiles when one covers exactly
+        this (X, centers) pair, else by a fresh kernel apply.
+
+        An EXPLICIT ``cache`` must serve: a stale (``invalidate()``-d),
+        foreign-centers or wrong-X cache raises rather than silently
+        recomputing — the refusal ``swap_model`` relies on. The implicitly
+        stored one (``build_knm_cache``) is only a fast path and is skipped
+        when it doesn't match.
+        """
+        if cache is None:
+            held = self.__dict__.get("_knm_cache")
+            if (held is not None and held.matches(self.centers)
+                    and X is held.X):
+                cache = held
+            else:
+                return self._ops.apply(X, self.centers, self.alpha)
+        cache.check_serves(self.centers, int(X.shape[0]), X=X)
+        return cache.apply(self.alpha)
 
     @functools.cached_property
     def _jitted_ops(self):
@@ -201,11 +255,20 @@ class FalkonEstimator:
         from repro.data.streaming import JittedOps
         return JittedOps(self._ops)
 
-    def predict_stream(self, loader) -> Array:
+    def predict_stream(self, loader, *, cache: KernelCache | None = None) -> Array:
         """Predict over a ``StreamingLoader``/iterable of (X_chunk, _) pairs
         — X need never be device-resident at once (see repro.data.streaming).
+
+        With a ``cache`` (built over the loader's rows, in order), the
+        stream is not read at all: the stored tiles already ARE the kernel
+        entries, so the whole prediction is the cache's GEMM apply. The
+        cache must serve this model (stale/foreign raises) and cover the
+        loader's exact row count.
         """
         from repro.data.streaming import streaming_apply
+        if cache is not None:
+            cache.check_serves(self.centers, getattr(loader, "n_rows", None))
+            return cache.apply(self.alpha)
         return streaming_apply(self._jitted_ops, loader, self.centers, self.alpha)
 
     def partial_fit(
@@ -343,6 +406,7 @@ def falkon_solve(
     tol: float = 0.0,
     estimate_cond: bool = True,
     ops: KernelOps | None = None,
+    cache: KernelCache | None = None,
 ) -> FalkonState:
     """Run t preconditioned-CG iterations; return coefficients + diagnostics.
 
@@ -353,6 +417,15 @@ def falkon_solve(
     ``FalkonConfig(mesh=...)``) and every sweep below shards over the mesh
     with one (M, p) psum per call — this replaced the retired
     ``dist_matvec``/``make_distributed_matvec`` wrapper.
+
+    With a ``cache`` (a :class:`repro.ops.KernelCache` over exactly this
+    (X, centers) pair — ``falkon_fit`` builds one when
+    ``config.knm_cache != "off"``), the RHS sweep, every CG matvec AND the
+    ``estimate_cond`` power-iteration sweeps consume the stored entries as
+    GEMMs: zero kernel evaluations after the one materialization pass. A
+    host-tier cache streams tiles through a Python loop, so the CG
+    recurrence drops to the host driver (same contract as the streaming
+    fits) — device tier keeps the fully-scanned in-core driver.
     """
     n = X.shape[0]
     if ops is None:
@@ -361,17 +434,29 @@ def falkon_solve(
         impl = matvec_impl if matvec_impl is not None else ops_impl
         ops = get_ops(impl, kernel, block_size=block_size, precision=precision)
 
-    def matvec(g):
-        return ops.sweep(X, centers, g, None)
+    if cache is not None:
+        cache.check_serves(centers, n)
 
-    def rhs_sweep():
-        zeros = jnp.zeros((centers.shape[0],) + y.shape[1:], X.dtype)
-        return ops.sweep(X, centers, zeros, y)
+        def matvec(g):
+            return cache.sweep(g)
+
+        def rhs_sweep():
+            zeros = jnp.zeros((centers.shape[0],) + y.shape[1:], X.dtype)
+            return cache.sweep(zeros, y)
+    else:
+        def matvec(g):
+            return ops.sweep(X, centers, g, None)
+
+        def rhs_sweep():
+            zeros = jnp.zeros((centers.shape[0],) + y.shape[1:], X.dtype)
+            return ops.sweep(X, centers, zeros, y)
 
     W = _falkon_operator(matvec, precond, lam, n)
     b = precond.left(rhs_sweep() / n)             # r = B^T z / n (Alg. 1)
 
-    cg = conjugate_gradient(W, b, t, tol=tol, storage_dtype=_cg_storage(ops))
+    host = cache is not None and cache.tier == "host"
+    driver = conjugate_gradient_host if host else conjugate_gradient
+    cg = driver(W, b, t, tol=tol, storage_dtype=_cg_storage(ops))
     alpha = precond.coeffs(cg.x)
 
     if not estimate_cond:
@@ -385,12 +470,20 @@ def falkon_solve(
         )
 
     # Power-iteration estimate of cond(W) — cheap diagnostic for Thm 2.
+    # Its ~26 width-1 sweeps go through the SAME matvec closure as CG, so a
+    # cache serves them as GEMMs too (a host-tier cache cannot trace its
+    # tile loop under lax.scan — unroll the recurrence at the host level).
     def power(mv, q, iters=12):
         v = jnp.ones((q,), b.dtype) / jnp.sqrt(q)
-        def step(v, _):
-            w = mv(v)
-            return w / jnp.maximum(jnp.linalg.norm(w), 1e-30), None
-        v, _ = jax.lax.scan(step, v, None, length=iters)
+        if host:
+            for _ in range(iters):
+                w = mv(v)
+                v = w / jnp.maximum(jnp.linalg.norm(w), 1e-30)
+        else:
+            def step(v, _):
+                w = mv(v)
+                return w / jnp.maximum(jnp.linalg.norm(w), 1e-30), None
+            v, _ = jax.lax.scan(step, v, None, length=iters)
         return jnp.vdot(v, mv(v))
 
     q = precond.q
@@ -440,6 +533,7 @@ def falkon_solve_path(
     *,
     ops: KernelOps,
     tol: float = 0.0,
+    cache: KernelCache | None = None,
 ) -> FalkonPathState:
     """Solve the FALKON system for every lam in ``precond.lams`` at the data
     cost of ONE solve.
@@ -451,19 +545,34 @@ def falkon_solve_path(
     convergence masking in the CG core doubles as per-SYSTEM masking: a
     small-lam system that needs all t iterations does not force extra
     arithmetic on an already-converged large-lam one.
+
+    A ``cache`` compounds with the path's sharing: the L systems already
+    share each sweep, and with stored entries that ONE stacked sweep per
+    iteration is a GEMM — a single kernel pass covers the entire lam grid.
     """
     n = X.shape[0]
     M = centers.shape[0]
 
-    def matvec(G):
-        return ops.sweep(X, centers, G, None)
+    if cache is not None:
+        cache.check_serves(centers, n)
 
-    def rhs_sweep():
-        zeros = jnp.zeros((M,) + y.shape[1:], X.dtype)
-        return ops.sweep(X, centers, zeros, y)
+        def matvec(G):
+            return cache.sweep(G)
 
+        def rhs_sweep():
+            zeros = jnp.zeros((M,) + y.shape[1:], X.dtype)
+            return cache.sweep(zeros, y)
+    else:
+        def matvec(G):
+            return ops.sweep(X, centers, G, None)
+
+        def rhs_sweep():
+            zeros = jnp.zeros((M,) + y.shape[1:], X.dtype)
+            return ops.sweep(X, centers, zeros, y)
+
+    host = cache is not None and cache.tier == "host"
     cg, alpha_flat = _solve_path_core(
-        matvec, rhs_sweep, precond, n, t, tol=tol, storage=_cg_storage(ops), host=False
+        matvec, rhs_sweep, precond, n, t, tol=tol, storage=_cg_storage(ops), host=host
     )
     alphas = precond.split(alpha_flat)            # (L, M, p)
     if y.ndim == 1:
@@ -506,6 +615,49 @@ def _stage_select(
 def _stage_gram(ops: KernelOps, centers: Array) -> Array:
     """Stage 2 — the M x M Gram block (the paper's memory budget)."""
     return ops.gram(centers, centers)
+
+
+def _stage_cache(
+    ops: KernelOps,
+    X: Array,
+    centers: Array,
+    config: FalkonConfig,
+) -> KernelCache | None:
+    """Stage 2.5 — the optional materialized-K_nM cache.
+
+    ``knm_cache="auto"`` routes by :func:`repro.ops.plan_cache` (per-shard
+    device/host budgets, ``REPRO_KNM_BUDGET_MB`` / ``REPRO_KNM_HOST_BUDGET_MB``)
+    and warns with a structured :class:`CachePlanWarning` whenever the
+    routing falls off the device tier — silently switching a fit between
+    GEMM-served and streamed/recompute sweeps is exactly the surprise the
+    sweep/factor planners refuse elsewhere. ``"device"``/``"host"`` force a
+    tier (a forced host tier under a mesh raises in ``KernelCache``); an
+    ``"off"`` route returns None and the fit takes the recompute path,
+    bit-identical to the seed.
+    """
+    if config.knm_cache == "off":
+        return None
+    shards = data_shards(ops)
+    tier = None if config.knm_cache == "auto" else config.knm_cache
+    plan = plan_cache(
+        int(X.shape[0]),
+        int(centers.shape[0]),
+        policy=getattr(ops, "policy", None),
+        shards=shards,
+        tier=tier,
+    )
+    if tier is None and plan.tier == "host" and shards > 1:
+        # each shard's row block either fits HBM or the fit recomputes;
+        # there is no per-shard host-streaming story (see KernelCache)
+        plan = dataclasses.replace(
+            plan, tier="off",
+            reason=f"host tier unsupported under {shards}-way row sharding",
+        )
+    if tier is None and plan.tier != "device":
+        warnings.warn(CachePlanWarning(plan), stacklevel=3)
+    if plan.tier == "off":
+        return None
+    return KernelCache(ops, X, centers, plan=plan)
 
 
 def _stage_precondition(
@@ -619,6 +771,7 @@ def falkon_fit(
     n = X.shape[0]
 
     sel = _stage_select(key, X, config, kernel)
+    cache = _stage_cache(ops, X, sel.centers, config)
     KMM = _stage_gram(ops, sel.centers)
     precond = _stage_precondition(KMM, config.lam, n, config, D=sel.D)
 
@@ -634,6 +787,7 @@ def falkon_fit(
         tol=config.tol,
         estimate_cond=config.estimate_cond,
         ops=ops,
+        cache=cache,
     )
     est = _stage_wrap(
         sel.centers, state.alpha, kernel, config, precond=precond, lam=config.lam
@@ -718,11 +872,13 @@ def falkon_fit_path(
     log_mean = sum(jnp.log(jnp.asarray(l)) for l in lam_vals) / len(lam_vals)
     lam_ref = float(jnp.exp(log_mean))
     sel = _stage_select(key, X, config, kernel, lam=lam_ref)
+    cache = _stage_cache(ops, X, sel.centers, config)
     KMM = _stage_gram(ops, sel.centers)
     precond = _stage_precondition(KMM, jnp.asarray(lam_vals, dt), n, config, D=sel.D)
 
     state = falkon_solve_path(
-        X, y, sel.centers, precond, config.iterations, ops=ops, tol=config.tol
+        X, y, sel.centers, precond, config.iterations, ops=ops, tol=config.tol,
+        cache=cache,
     )
     ests = tuple(_stage_wrap(sel.centers, state.alphas[i], kernel, config,
                              precond=precond.system(i), lam=lam_vals[i])
@@ -859,11 +1015,19 @@ def _streaming_setup(
     ``center_selection="uniform"`` is supported out-of-core: leverage-score
     sampling needs a pilot Gram pass that is not chunk-additive.
     """
-    from repro.data.streaming import StreamingLoader, streaming_uniform_centers
+    from repro.data.streaming import (
+        StreamingLoader, default_prefetch, streaming_uniform_centers
+    )
 
     if prefetch is None:
-        prefetch = 0 if jax.default_backend() == "cpu" else 2
+        prefetch = default_prefetch()
 
+    if config.knm_cache != "off":
+        raise ValueError(
+            "streaming fits do not support knm_cache (got "
+            f"{config.knm_cache!r}): the point of streaming X is that "
+            "O(n*M) state never materializes — cache the kernel with an "
+            "in-core fit, or set knm_cache='off'")
     if config.center_selection != "uniform" and centers is None:
         raise ValueError(
             "streaming fit supports center_selection='uniform' only "
@@ -1015,6 +1179,12 @@ def falkon_fit_minibatch(
     smaller than (iterations + 1) x n — see README's step-cost model.
     """
     mb = minibatch if minibatch is not None else MinibatchConfig()
+    if config.knm_cache != "off":
+        raise ValueError(
+            "the mini-batch solver does not support knm_cache (got "
+            f"{config.knm_cache!r}): each step sweeps a fresh shuffled "
+            "chunk, so there is no fixed tile set to materialize — use "
+            "falkon_fit for cached sweeps, or set knm_cache='off'")
     kernel = config.make_kernel()
     ops = _resolve_ops(config, kernel, ops)
     dt = jnp.dtype(config.dtype)

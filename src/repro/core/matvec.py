@@ -20,12 +20,17 @@ wrapper) is retired: distribution is now a composable backend —
 shard_maps its sweep over the mesh data axes with one (M, p) psum per call,
 so fit/path/streaming/serving all inherit it through the registry instead
 of through a special matvec.
+
+``make_knm_cache`` / ``cached_knm_matvec`` / ``cached_knm_apply`` are the
+functional face of the materialized-K_nM cache (``repro.ops.KernelCache``):
+evaluate the kernel entries once, then answer every later matvec/apply over
+the SAME (X, C) pair as a GEMM from the stored tiles.
 """
 from __future__ import annotations
 
 import jax
 
-from repro.ops import PrecisionPolicy, get_ops  # noqa: F401  (annotation)
+from repro.ops import KernelCache, PrecisionPolicy, get_ops  # noqa: F401
 
 from .kernels import KernelFn
 
@@ -64,6 +69,44 @@ def knm_apply(
     """Return ``K_nM u`` (prediction path), blocked over rows of X."""
     ops = get_ops(impl, kernel, block_size=block_size, precision=precision)
     return ops.apply(X, C, u)
+
+
+def make_knm_cache(
+    X: Array,
+    C: Array,
+    kernel: KernelFn,
+    *,
+    block_size: int = 2048,
+    impl: str = "jnp",
+    precision: "str | PrecisionPolicy" = "fp32",
+    tier: str | None = None,
+) -> KernelCache:
+    """Materialize K(X, C) once; later sweeps/applies are pure GEMMs.
+
+    The functional entry to :class:`repro.ops.KernelCache` (the class API
+    and ``FalkonConfig(knm_cache=...)`` are the composable routes). ``tier``
+    forces residency ("device"/"host"); None auto-routes by the
+    ``plan_cache`` budgets and raises if the plan says "off" — at this
+    call site the caller has explicitly asked to cache.
+    """
+    from repro.ops import plan_cache
+
+    ops = get_ops(impl, kernel, block_size=block_size, precision=precision)
+    plan = plan_cache(
+        int(X.shape[0]), int(C.shape[0]), policy=ops.policy, tier=tier
+    )
+    return KernelCache(ops, X, C, plan=plan)
+
+
+def cached_knm_matvec(cache: KernelCache, u: Array, v: Array | None = None) -> Array:
+    """``K_nM^T (K_nM u + v)`` from a cache's stored entries (zero kernel
+    evaluations) — the cached twin of :func:`knm_matvec`."""
+    return cache.sweep(u, v)
+
+
+def cached_knm_apply(cache: KernelCache, u: Array) -> Array:
+    """``K_nM u`` from stored entries — the cached twin of :func:`knm_apply`."""
+    return cache.apply(u)
 
 
 def streaming_knm_matvec(

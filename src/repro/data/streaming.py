@@ -50,6 +50,15 @@ Array = jax.Array
 _END = object()
 
 
+def default_prefetch() -> int:
+    """Chunks in flight when the caller doesn't say: 2 (double-buffered) on
+    real accelerators, 0 (synchronous transfers) on CPU, where "host" and
+    "device" share one memory arena and an overlap thread only contends
+    with compute for the same cores. Shared by the streaming fits and the
+    host-tier K_nM cache so every host->device feed makes the same call."""
+    return 0 if jax.default_backend() == "cpu" else 2
+
+
 class ChunkSource:
     """Re-iterable source of ``(X_chunk, y_chunk | None)`` host arrays.
 

@@ -6,10 +6,21 @@
     yh  = ops.apply(Xte, C, alpha)  # K u            — prediction
     KMM = ops.gram(C, C)            # K(A, B)        — preconditioner
 
-See ``base.py`` for the protocol/registry, ``jnp_backend.py`` for the
-reference implementation and ``pallas_backend.py`` for the fused TPU path.
+Cache path (``plan_cache`` routes residency; ``KernelCache`` evaluates
+each K_nM row tile once and serves sweeps/applies as GEMMs):
+
+    cache = KernelCache(ops, X, C)  # one kernel pass, tiles stored
+    w     = cache.sweep(u, v)       # pure GEMMs from then on
+
+See ``base.py`` for the protocol/registry/planners, ``jnp_backend.py`` for
+the reference implementation, ``pallas_backend.py`` for the fused TPU path,
+``gemm.py`` for the shared materialize/GEMM primitives and ``knm_cache.py``
+for the cache itself.
 """
 from .base import (
+    CACHE_TIERS,
+    CachePlan,
+    CachePlanWarning,
     CountingOps,
     FACTOR_PATHS,
     FactorPlan,
@@ -24,6 +35,7 @@ from .base import (
     SweepPlanWarning,
     available_ops,
     get_ops,
+    plan_cache,
     plan_factor,
     plan_sweep,
     register_ops,
@@ -32,13 +44,18 @@ from .base import (
 from . import jnp_backend as _jnp_backend    # noqa: F401  (registers "jnp")
 from . import pallas_backend as _pallas_backend  # noqa: F401  ("pallas")
 from .distributed_backend import DistributedOps
+from .knm_cache import KernelCache, data_shards
 
 __all__ = [
+    "CACHE_TIERS",
+    "CachePlan",
+    "CachePlanWarning",
     "CountingOps",
     "DistributedOps",
     "FACTOR_PATHS",
     "FactorPlan",
     "FactorPlanWarning",
+    "KernelCache",
     "KernelOps",
     "OpsBase",
     "POLICIES",
@@ -48,7 +65,9 @@ __all__ = [
     "SweepPlan",
     "SweepPlanWarning",
     "available_ops",
+    "data_shards",
     "get_ops",
+    "plan_cache",
     "plan_factor",
     "plan_sweep",
     "register_ops",

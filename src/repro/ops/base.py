@@ -511,6 +511,156 @@ class FactorPlanWarning(UserWarning):
             f"factor path — {plan.reason}")
 
 
+# ---------------------------------------------------------------------------
+# K_nM cache planning: device-resident vs host-streamed vs recompute
+# ---------------------------------------------------------------------------
+CACHE_TIERS = ("device", "host", "off")
+
+#: Default device-memory budget for a materialized K_nM. The cached sweep
+#: turns every CG iteration's kernel re-evaluation (the paper's one-full-
+#: kernel-pass-per-sweep cost model) into two GEMMs over stored entries, so
+#: the only question is where n*M*itemsize bytes live. Up to this budget the
+#: cache is device-resident ("device" tier); past it the tiles are pinned
+#: host-side and streamed ("host" tier, double-buffered via
+#: ``repro.data.streaming.StreamingLoader``); past ``REPRO_KNM_HOST_BUDGET_MB``
+#: the cache is refused outright ("off" — today's recompute path, bit-
+#: identical). Override per-process with ``REPRO_KNM_BUDGET_MB`` (the
+#: forcing knob tests use, mirroring ``REPRO_VMEM_BUDGET_MB``).
+DEFAULT_KNM_BUDGET = 1024 * 2**20
+DEFAULT_KNM_HOST_BUDGET = 8192 * 2**20
+
+
+def _knm_budget() -> int:
+    mb = os.environ.get("REPRO_KNM_BUDGET_MB")
+    return int(float(mb) * 2**20) if mb is not None else DEFAULT_KNM_BUDGET
+
+
+def _knm_host_budget() -> int:
+    mb = os.environ.get("REPRO_KNM_HOST_BUDGET_MB")
+    return int(float(mb) * 2**20) if mb is not None else DEFAULT_KNM_HOST_BUDGET
+
+
+@dataclasses.dataclass(frozen=True)
+class CachePlan:
+    """The K_nM-residency decision for one (n, M) problem — the
+    ``SweepPlan``/``FactorPlan`` sibling for the materialized-sweep cache,
+    exposed so tests and benchmarks can assert on tier routing and on the
+    bytes model instead of reverse-engineering them.
+
+    ``cache_bytes`` is the full materialized K_nM at the policy's STORAGE
+    width (the bf16 policy halves it — the cache composes with the
+    precision work); ``shard_bytes`` is what one data shard actually holds
+    (``DistributedOps`` caches only its local row block, so the budget is
+    charged per shard — zero extra communication, the psum invariants are
+    unchanged).
+    """
+
+    tier: str                  # one of CACHE_TIERS
+    n: int
+    M: int
+    shards: int                # data shards splitting the rows (1 = local)
+    itemsize: int              # bytes per stored kernel entry
+    cache_bytes: int           # n * M * itemsize — the full cache
+    shard_bytes: int           # per-shard residency the budgets are charged on
+    budget_bytes: int          # device (HBM) budget
+    host_budget_bytes: int     # pinned-host budget for the streamed tier
+    reason: str
+    storage_dtype: str = "float32"  # dtype the tiles are stored at
+
+
+def plan_cache(
+    n: int,
+    M: int,
+    *,
+    itemsize: int = 4,
+    policy: "PrecisionPolicy | None" = None,
+    shards: int = 1,
+    tier: str | None = None,
+    budget: int | None = None,
+    host_budget: int | None = None,
+) -> CachePlan:
+    """Pick the K_nM cache tier (device / host / off) from a bytes model.
+
+    A cached fit evaluates each of the ceil(n/block) row tiles of K_nM
+    exactly ONCE (via ``KernelOps.materialize``) and serves every later
+    sweep/apply as GEMMs over the stored entries, so the decision is purely
+    residency: ``n * M * itemsize`` bytes at the policy's storage width
+    (``overrides`` do NOT apply — the cache deliberately stores at the
+    data-space storage dtype to harvest the bf16 footprint halving;
+    accumulation back to float32 happens in the GEMM consumers). Charged
+    per data shard: a ``DistributedOps`` wrapper splits the rows over
+    ``shards`` devices and each holds only its block.
+
+    ``tier`` forces a specific tier (tests and the benchmark's routing
+    table use it); ``None`` routes device -> host -> off against the
+    budgets (``REPRO_KNM_BUDGET_MB`` / ``REPRO_KNM_HOST_BUDGET_MB``).
+    Pure arithmetic on static shapes — safe at trace time, no jax imports
+    (this module stays import-cycle-free).
+    """
+    if policy is not None:
+        itemsize = policy.storage_itemsize
+        storage_dtype = policy.storage
+    else:
+        storage_dtype = {8: "float64", 4: "float32", 2: "bfloat16"}.get(
+            itemsize, "float32")
+    if budget is None:
+        budget = _knm_budget()
+    if host_budget is None:
+        host_budget = _knm_host_budget()
+    shards = max(int(shards), 1)
+    total = n * M * itemsize
+    shard_bytes = -(-total // shards)
+    base = dict(
+        n=n,
+        M=M,
+        shards=shards,
+        itemsize=itemsize,
+        cache_bytes=total,
+        shard_bytes=shard_bytes,
+        budget_bytes=budget,
+        host_budget_bytes=host_budget,
+        storage_dtype=storage_dtype,
+    )
+    if tier is not None:
+        if tier not in CACHE_TIERS:
+            raise ValueError(
+                f"unknown cache tier {tier!r}; supported: {CACHE_TIERS}")
+        return CachePlan(tier=tier, reason=f"tier {tier!r} forced by caller",
+                         **base)
+    if shard_bytes <= budget:
+        return CachePlan(
+            tier="device",
+            reason=(f"K_nM shard {shard_bytes}B fits the {budget}B device "
+                    f"budget — device-resident cache"),
+            **base)
+    if shard_bytes <= host_budget:
+        return CachePlan(
+            tier="host",
+            reason=(f"K_nM shard {shard_bytes}B exceeds the {budget}B device "
+                    f"budget but fits the {host_budget}B host budget — "
+                    f"host-pinned tiles, streamed sweeps"),
+            **base)
+    return CachePlan(
+        tier="off",
+        reason=(f"K_nM shard {shard_bytes}B exceeds the {host_budget}B host "
+                f"budget — recompute path (no cache)"),
+        **base)
+
+
+class CachePlanWarning(UserWarning):
+    """Structured notice that a requested K_nM cache routed off the
+    device-resident default (host-streamed tiles, or refused entirely and
+    fell back to the recompute path). Carries the full ``CachePlan`` as
+    ``.plan`` for programmatic inspection."""
+
+    def __init__(self, plan: CachePlan):
+        self.plan = plan
+        super().__init__(
+            f"falkon K_nM cache (n={plan.n}, M={plan.M}, "
+            f"shards={plan.shards}): taking the {plan.tier!r} tier — "
+            f"{plan.reason}")
+
+
 @runtime_checkable
 class KernelOps(Protocol):
     """The three primitives the whole codebase needs — and nothing else
@@ -607,7 +757,20 @@ class CountingOps:
     fit over L regularizers must issue ~1/L the ``sweep`` calls of L
     sequential fits, and "number of sweeps" is exactly what this wrapper
     counts. Pure delegation (same primitives, same results, same plan) plus
-    three counters — ``sweeps``, ``applies``, ``grams``.
+    the counters — ``sweeps``, ``applies``, ``grams``, and the K_nM-cache
+    seam's quartet:
+
+    * ``gram_tile_evals`` — kernel-entry evaluation work, in units of
+      ceil(rows / block_size) row tiles, charged by every primitive that
+      EVALUATES kernel entries (``sweep``, ``apply``, ``gram``,
+      ``materialize``). This is the cache acceptance seam: a cached fit
+      materializes each K_nM row tile exactly once, so its K_nM share of
+      ``gram_tile_evals`` equals the tile count — where the recompute path
+      charges it once per sweep/apply program point.
+    * ``materializes`` / ``gemm_sweeps`` / ``gemm_applies`` — the cache-path
+      primitives. The GEMM calls consume STORED entries and charge no
+      ``gram_tile_evals``; that asymmetry is what makes the one-eval-per-
+      tile claim provable by counting.
 
     The counters are PROGRAM-POINT counts, not executed-data-pass counts:
     a primitive called under a trace (``jax.jit``, or the matvec inside the
@@ -626,6 +789,10 @@ class CountingOps:
         self.sweeps = 0
         self.applies = 0
         self.grams = 0
+        self.gram_tile_evals = 0
+        self.materializes = 0
+        self.gemm_sweeps = 0
+        self.gemm_applies = 0
 
     @property
     def kernel(self):
@@ -643,20 +810,45 @@ class CountingOps:
     def policy(self):
         return self.ops.policy
 
+    def _tiles(self, rows) -> int:
+        bs = self.ops.block_size
+        return -(-int(rows) // bs)
+
     def sweep(self, X, C, u, v=None, row_mask=None):
         self.sweeps += 1
+        self.gram_tile_evals += self._tiles(X.shape[0])
         return self.ops.sweep(X, C, u, v, row_mask)
 
     def apply(self, X, C, u):
         self.applies += 1
+        self.gram_tile_evals += self._tiles(X.shape[0])
         return self.ops.apply(X, C, u)
 
     def gram(self, A, B):
         self.grams += 1
+        self.gram_tile_evals += self._tiles(A.shape[0])
         return self.ops.gram(A, B)
+
+    def materialize(self, X, C):
+        # ONE kernel evaluation per row tile — the only K_nM entry
+        # evaluation a cached fit performs.
+        self.materializes += 1
+        self.gram_tile_evals += self._tiles(X.shape[0])
+        return self.ops.materialize(X, C)
+
+    def gemm_sweep(self, K, u, v=None, row_mask=None):
+        # consumes STORED entries: no gram_tile_evals charge
+        self.gemm_sweeps += 1
+        return self.ops.gemm_sweep(K, u, v, row_mask)
+
+    def gemm_apply(self, K, u):
+        self.gemm_applies += 1
+        return self.ops.gemm_apply(K, u)
 
     def plan(self, n: int, M: int, d: int, p: int = 1, systems: int = 1) -> SweepPlan:
         return self.ops.plan(n, M, d, p, systems)
 
     def reset(self) -> None:
         self.sweeps = self.applies = self.grams = 0
+        self.gram_tile_evals = 0
+        self.materializes = self.gemm_sweeps = self.gemm_applies = 0

@@ -241,6 +241,97 @@ class DistributedOps:
         (so Gram evaluation counts match single-device exactly)."""
         return self.inner.gram(A, B)
 
+    # -- K_nM cache primitives (shard-local, zero extra comm) --------------
+    def materialize(self, X: Array, C: Array) -> Array:
+        """Each shard materializes ONLY its local row block of K_nM.
+
+        X is zero-padded to a multiple of ``shards * block_size`` so every
+        shard's slice is itself a whole number of tiles — the wrapped
+        backend's ``materialize`` adds no further padding, and the
+        row-sharded output keeps global row order (row i of K is row i of
+        the padded X, exactly the single-device contract). No collective:
+        the cache build is as embarrassingly row-parallel as the sweep it
+        replaces.
+        """
+        shards = self.num_shards
+        unit = shards * self.block_size
+        n = X.shape[0]
+        n_pad = -(-n // unit) * unit
+        Xp = _pad_rows(X, n_pad)
+        inner = self.inner
+        xspec = P(self.data_axes)
+
+        def local(Xl, C):
+            return inner.materialize(Xl, C)
+
+        fn = shard_map(
+            local, mesh=self.mesh, in_specs=(xspec, P()), out_specs=xspec
+        )
+        return fn(Xp, C)
+
+    def gemm_sweep(
+        self,
+        K: Array,
+        u: Array,
+        v: Array | None = None,
+        row_mask: Array | None = None,
+    ) -> Array:
+        """Shard-local GEMM sweeps over the cached rows + ONE (M, p) psum —
+        identical communication accounting to the recompute ``sweep`` (the
+        psum invariants the distributed tests pin are unchanged by
+        caching). ``K`` comes from :meth:`materialize`; ``v``/``row_mask``
+        must already be padded to its row count (the ``KernelCache`` owner
+        folds the pad mask in)."""
+        shards = self.num_shards
+        rows = K.shape[0]
+        if rows % (shards * self.block_size) != 0:
+            raise ValueError(
+                f"cached K has {rows} rows, not a multiple of shards * "
+                f"block_size = {shards * self.block_size}; build it with "
+                f"this wrapper's materialize()")
+        mask = (jnp.ones((rows,), jnp.float32) if row_mask is None
+                else row_mask.astype(jnp.float32))
+        inner, axes, wire = self.inner, self.data_axes, self._wire
+        self.psums += 1
+        p = u.shape[1] if u.ndim > 1 else 1
+        self.psum_floats += K.shape[1] * p
+        xspec = P(axes)
+        if v is None:
+            def local(Kl, u, ml):
+                wl = inner.gemm_sweep(Kl, u, None, ml)
+                return jax.lax.psum(wire(wl), axes)
+
+            fn = shard_map(
+                local, mesh=self.mesh, in_specs=(xspec, P(), xspec),
+                out_specs=P(),
+            )
+            return fn(K, u, mask)
+
+        def local(Kl, u, vl, ml):
+            wl = inner.gemm_sweep(Kl, u, vl, ml)
+            return jax.lax.psum(wire(wl), axes)
+
+        fn = shard_map(
+            local, mesh=self.mesh, in_specs=(xspec, P(), xspec, xspec),
+            out_specs=P(),
+        )
+        return fn(K, u, v, mask)
+
+    def gemm_apply(self, K: Array, u: Array) -> Array:
+        """K u over the sharded cache — row-local, no collective; returns
+        ALL cached rows (pad rows included), the mixin contract the cache
+        slices back to n."""
+        inner = self.inner
+        xspec = P(self.data_axes)
+
+        def local(Kl, u):
+            return inner.gemm_apply(Kl, u)
+
+        fn = shard_map(
+            local, mesh=self.mesh, in_specs=(xspec, P()), out_specs=xspec
+        )
+        return fn(K, u)
+
     def plan(self, n: int, M: int, d: int, p: int = 1, systems: int = 1) -> SweepPlan:
         """The wrapped backend's routing decision for ONE shard's rows.
 

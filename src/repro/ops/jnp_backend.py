@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from .base import OpsBase, SweepPlan, register_ops
+from .gemm import GemmCacheMixin, quantize_coeffs, quantize_storage
 
 Array = jax.Array
 
@@ -42,30 +43,24 @@ def _pad_blocks(
 
 @register_ops("jnp")
 @dataclasses.dataclass(frozen=True)
-class JnpKernelOps(OpsBase):
-    """Blocked lax.scan reference implementation of the three primitives."""
+class JnpKernelOps(GemmCacheMixin, OpsBase):
+    """Blocked lax.scan reference implementation of the three primitives
+    (plus the shared materialize/gemm cache primitives — see
+    ``repro.ops.gemm``, whose blocked GEMM arithmetic mirrors this sweep's
+    scan exactly, the cached == recompute bit-identity contract)."""
 
     def _quant(self, a: Array | None) -> Array | None:
         """Storage-dtype quantization, fp32 compute — mirrors the Pallas
         backend's storage-in/fp32-accumulate policy bit-for-policy (not
         bit-for-bit: MXU bf16 matmuls round differently). float32 storage
         means full precision: pass through untouched (x64 callers keep
-        their float64)."""
-        if a is None or self.policy.storage == "float32":
-            return a
-        return a.astype(jnp.dtype(self.policy.storage)).astype(jnp.float32)
+        their float64). Shared with the GEMM cache path (one definition of
+        "quantize" keeps the parity contract honest)."""
+        return quantize_storage(self.policy, a)
 
     def _quant_coeffs(self, u: Array) -> Array:
-        """u at the coefficient dtype (float32 by override; any reduced-
-        storage u — bf16/fp16/fp8 CG iterates — is widened for compute;
-        an fp64 u under float32 coeffs is never narrowed)."""
-        co_name = self.policy.buffer_dtype("coeffs")
-        co = jnp.dtype(co_name)
-        if co_name != "float32":
-            return u.astype(co).astype(jnp.float32)
-        if jnp.dtype(u.dtype).itemsize < co.itemsize:
-            return u.astype(jnp.float32)
-        return u
+        """u at the coefficient dtype — see ``gemm.quantize_coeffs``."""
+        return quantize_coeffs(self.policy, u)
 
     def _inputs(self, X: Array, C: Array) -> tuple[Array, Array]:
         return self._quant(X), self._quant(C)

@@ -1,0 +1,240 @@
+"""Materialized K_nM cache: evaluate kernel entries once, run CG on GEMMs.
+
+FALKON's O(n sqrt(n)) time is dominated by re-evaluating all n*M kernel
+entries of K_nM on EVERY CG iteration — the paper's cost model counts one
+full kernel pass per sweep, so a fit at t iterations pays for the same
+entries ~2(t+1) times across the RHS and matvec forms. A
+:class:`KernelCache` evaluates each (block_size, M) row tile exactly once
+(``ops.materialize`` -> ``ops.gram`` per tile), stores the entries at the
+precision policy's STORAGE dtype (bf16 => half footprint — the cache
+composes with the precision work), and serves every subsequent sweep/apply
+as pure GEMMs with fp32 accumulation (``ops.gemm_sweep``/``gemm_apply``,
+see ``repro.ops.gemm`` for the parity contract: fp32 cached == recompute
+bit-identically on the jnp backend).
+
+Residency is a :func:`~repro.ops.base.plan_cache` decision (the
+``plan_sweep``/``plan_factor`` sibling, budgets ``REPRO_KNM_BUDGET_MB`` /
+``REPRO_KNM_HOST_BUDGET_MB``):
+
+* ``device`` — K lives in HBM; sweeps are two GEMMs, zero kernel math.
+* ``host``   — tiles are pinned host-side (numpy) and streamed through the
+  double-buffered :class:`~repro.data.streaming.StreamingLoader` (the SAME
+  machinery the out-of-core X fits use — a K tile is just a (rows, M)
+  chunk), with per-tile jitted GEMMs and fp32 cross-tile accumulation.
+* ``off``    — no cache is built; callers fall back to the recompute path,
+  bit-identical to a build without this module.
+
+Staleness: the cache pins the EXACT centers array it was built against
+(identity, not value — comparing M x d arrays per call would defeat the
+O(M) serving point). ``check_serves`` refuses a cache whose centers are
+not the serving model's centers object or that was explicitly
+``invalidate()``-d — the seam ``swap_model`` uses so a stale cache cannot
+serve a swapped model.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .base import CachePlan, plan_cache
+
+
+def data_shards(ops) -> int:
+    """Row-shard count behind an ops facade chain (1 when not distributed).
+
+    Walks ``.inner`` / ``.ops`` (the facade conventions ``CountingOps`` /
+    ``DistributedOps`` / ``JittedOps`` use) looking for a ``num_shards`` —
+    what :func:`~repro.ops.base.plan_cache` charges the per-shard budget
+    with, and how the cache refuses the host tier under sharding.
+    """
+    seen: set[int] = set()
+    o = ops
+    while o is not None and id(o) not in seen:
+        seen.add(id(o))
+        ns = getattr(o, "num_shards", None)
+        if ns is not None:
+            return int(ns)
+        o = getattr(o, "inner", None) or getattr(o, "ops", None)
+    return 1
+
+
+class KernelCache:
+    """One materialized K(X, C), served as GEMM sweeps/applies.
+
+    Built once per fit (or per repeated-scoring set) and shared across the
+    RHS sweep, every CG iteration, the ``estimate_cond`` power-iteration
+    diagnostics, and all L lam-path systems — they all consume the same
+    stored entries. ``plan`` defaults to the auto-routed
+    :func:`~repro.ops.base.plan_cache`; pass a forced-tier plan to pin
+    residency (tests, benchmarks). A plan whose tier is ``"off"`` is
+    refused — the caller owns the decision not to build a cache.
+    """
+
+    def __init__(self, ops, X, C, *, plan: CachePlan | None = None,
+                 prefetch: int | None = None):
+        n, M = int(X.shape[0]), int(C.shape[0])
+        if plan is None:
+            plan = plan_cache(n, M, policy=ops.policy)
+        if plan.tier == "off":
+            raise ValueError(
+                f"refusing to build a KernelCache from an 'off'-tier plan "
+                f"({plan.reason}); the caller should take the recompute path")
+        if plan.tier == "host" and data_shards(ops) > 1:
+            raise ValueError(
+                "host-tier K_nM cache is not supported under DistributedOps "
+                "— each shard's local block is 1/shards the size, so either "
+                "it fits HBM (device tier) or the fit should run recompute "
+                "(tier 'off')")
+        self.ops = ops
+        self.X = X            # identity only: which rows the tiles cover
+        self.C = C
+        self.n = n
+        self.M = M
+        self.plan = plan
+        self._invalidated = False
+        if plan.tier == "device":
+            self.K = ops.materialize(X, C)
+            self._loader = None
+            # the backend owns the padded row count (a DistributedOps pads
+            # to a multiple of shards * block_size, not just block_size)
+            self.n_pad = int(self.K.shape[0])
+        else:
+            self._build_host(ops, X, C)   # sets n_pad / K_host / loader
+        # pad-row mask folded into every sweep: pad rows contribute EXACTLY
+        # zero, the same contract the recompute sweep's internal padding has
+        self._pad_mask = (jnp.arange(self.n_pad) < n).astype(jnp.float32)
+
+    # -- construction ------------------------------------------------------
+    def _build_host(self, ops, X, C) -> None:
+        """Materialize into pinned host memory, slab by slab, and stand up
+        the double-buffered tile loader the streamed sweeps replay."""
+        from repro.data.streaming import (
+            ArrayChunkSource, StreamingLoader, default_prefetch
+        )
+
+        import jax
+
+        bs = ops.block_size
+        self.n_pad = -(-self.n // bs) * bs
+        host = None
+        # slabs of up to 8 tiles bound the transient device residency of
+        # the build to O(slab * M), independent of n; slab starts are tile
+        # multiples, so the per-slab materialize padding lands exactly on
+        # the global tile grid (row i of host == row i of the padded X)
+        slab = 8 * bs
+        for i0 in range(0, self.n_pad, slab):
+            i1 = min(i0 + slab, self.n_pad)
+            Ks = np.asarray(ops.materialize(X[i0:min(i1, self.n)], C))
+            if host is None:
+                # Ks already carries the policy storage dtype (numpy sees
+                # bfloat16 through ml_dtypes)
+                host = np.empty((self.n_pad, self.M), Ks.dtype)
+            host[i0:i0 + Ks.shape[0]] = Ks
+        self.K_host = host
+        self._tile_rows = bs
+        self._loader = StreamingLoader(
+            ArrayChunkSource(host, chunk_rows=bs),
+            prefetch=default_prefetch(),
+        )
+        self.K = None
+        # per-tile GEMMs are jitted once (every tile shares one shape, so
+        # one compile per sweep form per fit — the JittedOps convention;
+        # a CountingOps underneath counts compiles, not tile calls)
+        self._jit_gemm_sweep = jax.jit(ops.gemm_sweep)
+        self._jit_gemm_apply = jax.jit(ops.gemm_apply)
+
+    # -- staleness ---------------------------------------------------------
+    def invalidate(self) -> None:
+        """Mark the cache unusable (the model behind it was swapped)."""
+        self._invalidated = True
+
+    def matches(self, centers) -> bool:
+        """True iff this cache serves exactly ``centers`` (identity check)."""
+        return (not self._invalidated) and centers is self.C
+
+    def check_serves(self, centers, n: int | None = None, X=None) -> None:
+        """Refuse to serve a swapped/foreign model or a mismatched row set."""
+        if self._invalidated:
+            raise ValueError(
+                "stale KernelCache: the model behind it was swapped "
+                "(invalidate() was called); rebuild the cache against the "
+                "new centers")
+        if centers is not self.C:
+            raise ValueError(
+                "KernelCache was built against a different centers array "
+                "(identity check); a cache cannot serve a swapped model — "
+                "rebuild it")
+        if n is not None and n != self.n:
+            raise ValueError(
+                f"KernelCache covers {self.n} rows but the request has {n}")
+        if X is not None and X is not self.X:
+            raise ValueError(
+                "KernelCache was built over a different X (identity check); "
+                "its stored tiles are K(X_cache, C), not K of this scoring "
+                "set — rebuild the cache for the new rows")
+
+    # -- served primitives -------------------------------------------------
+    def _mask(self, row_mask):
+        if row_mask is None:
+            # aligned cache (n == n_pad, no caller mask): no rows to zero,
+            # and gemm_sweep's no-mask fast path skips a full pass over the
+            # stored entries (x * 1.0 is exact — results are unchanged)
+            return None if self.n_pad == self.n else self._pad_mask
+        m = row_mask.astype(jnp.float32)
+        return jnp.pad(m, (0, self.n_pad - self.n)) * self._pad_mask
+
+    def _pad_v(self, v):
+        if v is None:
+            return None
+        widths = ((0, self.n_pad - self.n),) + ((0, 0),) * (v.ndim - 1)
+        return jnp.pad(v, widths)
+
+    def sweep(self, u, v=None, row_mask=None):
+        """K^T (K u + v) from stored entries — drop-in for
+        ``ops.sweep(X, C, u, v, row_mask)`` over the cached rows."""
+        mask = self._mask(row_mask)
+        vp = self._pad_v(v)
+        if self._loader is None:
+            return self.ops.gemm_sweep(self.K, u, vp, mask)
+        return self._host_sweep(u, vp, mask)
+
+    def apply(self, u):
+        """K u from stored entries — drop-in for ``ops.apply(X, C, u)``."""
+        if self._loader is None:
+            return self.ops.gemm_apply(self.K, u)[:self.n]
+        outs = [self._jit_gemm_apply(Kt, u)
+                for Kt, _ in self._loader.iter_chunks(with_targets=False)]
+        out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+        return out[:self.n]
+
+    def _host_sweep(self, u, vp, mask):
+        """One streamed pass over the host tiles, fp32 accumulation across
+        tiles (the ``streaming_sweep`` contract: reduced-storage per-tile
+        results widen before the cross-tile sum)."""
+        tr = self._tile_rows
+        w = None
+        out_dtype = None
+        for i, (Kt, _) in enumerate(
+            self._loader.iter_chunks(with_targets=False)
+        ):
+            i0 = i * tr
+            vt = None if vp is None else vp[i0:i0 + tr]
+            mt = None if mask is None else mask[i0:i0 + tr]
+            wc = self._jit_gemm_sweep(Kt, u, vt, mt)
+            if out_dtype is None:
+                out_dtype = wc.dtype
+            if jnp.dtype(out_dtype).itemsize < 4:
+                wc = wc.astype(jnp.float32)
+            w = wc if w is None else w + wc
+        return w.astype(out_dtype)
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def tier(self) -> str:
+        return self.plan.tier
+
+    @property
+    def num_tiles(self) -> int:
+        """ceil(n / block_size) — the exact ``gram_tile_evals`` a cached
+        fit charges for K_nM (the one-eval-per-tile acceptance number)."""
+        return self.n_pad // self.ops.block_size

@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from .base import OpsBase, SweepPlan, SweepPlanWarning, plan_sweep, register_ops
+from .gemm import GemmCacheMixin
 
 Array = jax.Array
 
@@ -51,8 +52,15 @@ def _interpret() -> bool:
 
 @register_ops("pallas")
 @dataclasses.dataclass(frozen=True)
-class PallasKernelOps(OpsBase):
-    """KernelOps over the fused Pallas kernels, keyed by the kernel's spec."""
+class PallasKernelOps(GemmCacheMixin, OpsBase):
+    """KernelOps over the fused Pallas kernels, keyed by the kernel's spec.
+
+    The K_nM-cache primitives (materialize / gemm_sweep / gemm_apply) come
+    from the shared ``GemmCacheMixin``: after materialization (one
+    ``pairwise_kernel_pallas`` evaluation per row tile) there is no kernel
+    math left, only GEMMs, and XLA's native matmuls are the right tool —
+    a fused Pallas GEMM would re-solve a solved problem.
+    """
 
     @property
     def _spec(self):

@@ -92,6 +92,7 @@ class CoalescingPredictServer:
         self._warm_traces: int | None = None
         self.stats = ServeStats()
         self._pending: list[np.ndarray] = []
+        self._scoring_cache = None   # KernelCache over a fixed scoring set
 
         def _raw_apply(xb, centers, alpha):
             # trace-time counter: jax.jit re-runs this Python body only on
@@ -176,6 +177,36 @@ class CoalescingPredictServer:
             )
         self._centers = est.centers
         self._alpha = alpha
+        if self._scoring_cache is not None:
+            # the stored tiles are K(X_eval, OLD centers): a hot-swapped
+            # model must not be scored through them. Invalidate (so a
+            # caller still holding the cache object gets a refusal, not a
+            # silently-wrong score) and drop it.
+            self._scoring_cache.invalidate()
+            self._scoring_cache = None
+
+    def attach_scoring_cache(self, cache) -> None:
+        """Pin a :class:`repro.ops.KernelCache` over a fixed evaluation set.
+
+        The repeated-scoring loop (validation fold after every
+        ``swap_model``-bound ``partial_fit``, canary panels, lam-grid
+        selection) re-scores the SAME rows against each deployed model:
+        with a cache attached, ``predict_scoring_set`` serves them as one
+        GEMM from the stored tiles — zero kernel evaluations per score.
+        The cache must serve the CURRENTLY deployed centers (identity
+        check); ``swap_model`` invalidates and detaches it.
+        """
+        cache.check_serves(self._centers)
+        self._scoring_cache = cache
+
+    def predict_scoring_set(self) -> np.ndarray:
+        """Score the attached evaluation set against the deployed model."""
+        if self._scoring_cache is None:
+            raise RuntimeError(
+                "no scoring cache attached; call attach_scoring_cache first")
+        self._scoring_cache.check_serves(self._centers)
+        out = np.asarray(self._scoring_cache.apply(self._alpha))
+        return self._finalize(out, out.shape[0])
 
     # -- request path ------------------------------------------------------
     def submit(self, x) -> int:

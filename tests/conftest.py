@@ -1,3 +1,4 @@
+import gc
 import os
 import sys
 
@@ -18,6 +19,23 @@ import pytest  # noqa: E402
 # follow this value so each CI axis exercises its own policy end-to-end.
 TEST_PRECISION = os.environ.get("REPRO_TEST_PRECISION", "fp32")
 assert TEST_PRECISION in ("fp32", "bf16"), TEST_PRECISION
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_compiled_executables():
+    """Free XLA executables after every test module.
+
+    Each compiled executable mmaps its own code pages and the CPU client
+    never unmaps them while cached; over the full suite the accumulated
+    compiles can exhaust the kernel's vm.max_map_count (default 65530),
+    and the failed mmap surfaces as a segfault inside backend_compile on
+    whichever unlucky test compiles next. Clearing per module bounds the
+    peak map count at one module's worth of executables; the price is
+    cross-module recompiles, which the suite can afford.
+    """
+    yield
+    gc.collect()
+    jax.clear_caches()
 
 
 @pytest.fixture(scope="session")
